@@ -1,0 +1,62 @@
+"""Generate markdown tables for EXPERIMENTS.md from artifacts."""
+import json
+from pathlib import Path
+
+def fmt(v, n=4):
+    return f"{v:.{n}f}"
+
+def roofline_table(mesh):
+    rows = []
+    for p in sorted(Path("artifacts/dryrun").glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["shape"], "skip", "-", "-", "-", "-", "-", "-", "-"))
+            continue
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        mem = r["memory_per_device"]["total_bytes"] / 2**30
+        rows.append((r["arch"], r["shape"], rf["dominant"],
+                     fmt(rf["compute_s"]), fmt(rf["memory_s"]), fmt(rf["collective_s"]),
+                     fmt(rf["roofline_fraction"]), fmt(rf["useful_flops_ratio"], 3),
+                     f"{mem:.2f}", "✓" if mem <= 16 else "✗"))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (order.get(r[1], 9), r[0]))
+    out = ["| arch | shape | dominant | compute_s | memory_s | collective_s | roofline frac | useful | GiB/dev | ≤16GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+def perf_table():
+    out = ["| cell | variant | compute_s | memory_s | collective_s | frac | GiB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    # baselines first
+    for cell in ("qwen3-32b__train_4k", "mixtral-8x7b__train_4k", "arctic-480b__train_4k"):
+        b = json.loads((Path("artifacts/dryrun") / f"{cell}__single.json").read_text())
+        rf = b["roofline"]
+        out.append(f"| {cell} | **baseline (paper-faithful)** | {fmt(rf['compute_s'],2)} | "
+                   f"{fmt(rf['memory_s'],2)} | {fmt(rf['collective_s'],2)} | "
+                   f"{fmt(rf['roofline_fraction'])} | "
+                   f"{b['memory_per_device']['total_bytes']/2**30:.1f} |")
+        for p in sorted(Path("artifacts/perf").glob(f"{cell}__v*.json")):
+            r = json.loads(p.read_text())
+            if r.get("status") != "ok":
+                out.append(f"| {cell} | {p.stem.split('__')[-1]} | error | | | | |")
+                continue
+            rf = r["roofline"]
+            out.append(f"| {cell} | {r['variant']} | {fmt(rf['compute_s'],2)} | "
+                       f"{fmt(rf['memory_s'],2)} | {fmt(rf['collective_s'],2)} | "
+                       f"{fmt(rf['roofline_fraction'])} | "
+                       f"{r['memory_per_device']['total_bytes']/2**30:.1f} |")
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1]
+    if which == "single":
+        print(roofline_table("single"))
+    elif which == "multi":
+        print(roofline_table("multi"))
+    else:
+        print(perf_table())

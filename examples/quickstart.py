@@ -1,0 +1,39 @@
+"""Quickstart: init a small model, train 20 steps, decode a few tokens.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_mesh
+from repro.models.config import ParallelConfig, ShapeConfig
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.train.train_loop import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_config("llama3.2-1b").reduced(d_model=128, num_layers=4,
+                                            vocab_size=512)
+    shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=8)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pcfg = ParallelConfig(remat="none")
+
+    trainer = Trainer(cfg, shape, mesh, pcfg,
+                      tcfg=TrainerConfig(steps=20, log_every=5,
+                                         checkpoint_every=10,
+                                         checkpoint_dir="/tmp/quickstart_ckpt"))
+    state = trainer.run()
+    print(f"final loss: {trainer.history[-1]['loss']:.4f} "
+          f"(started {trainer.history[0]['loss']:.4f})")
+
+    engine = Engine(state.params, cfg,
+                    ecfg=EngineConfig(max_batch=2, cache_len=96))
+    reqs = [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8),
+            Request(uid=1, prompt=[4, 5, 6], max_new_tokens=8)]
+    for r in engine.run_batch(reqs):
+        print(f"request {r.uid}: prompt={r.prompt} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

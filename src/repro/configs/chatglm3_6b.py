@@ -1,0 +1,21 @@
+"""chatglm3-6b — RoPE-2d (half-rotary), extreme GQA (kv=2)
+[arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    rope="2d",
+    qkv_bias=True,
+    subquadratic=False,
+)

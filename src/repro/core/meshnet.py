@@ -1,0 +1,165 @@
+"""Baseline wafer-scale 2D-mesh network model (paper Sec. III, VI-B2).
+
+5×4 mesh of NPUs, 750 GB/s per link per direction, X-Y routing, I/O
+controllers (128 GB/s CXL) attached to border NPUs (corners get two).
+Collectives use logical rings over the member NPUs routed X-Y, except the
+wafer-wide All-Reduce which uses the hierarchical 2D algorithm with two
+reverse-direction chunks [Kumar & Jouppi 2020] (Sec. VII-B).
+
+The model exposes:
+  * ``xy_links``           — links crossed between two NPUs under X-Y.
+  * ``ring_max_congestion``— worst per-link overlap for a set of rings.
+  * ``collective_time``    — endpoint-algorithm time for one collective.
+  * ``io_linerate_factor`` — Fig. 4's (2N−1)·P hotspot analysis: the factor
+                             by which I/O streams must be slowed so the
+                             hotspot link sustains all channels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+Link = Tuple[Tuple[int, int], Tuple[int, int]]   # ((r,c) -> (r,c))
+
+
+@dataclasses.dataclass
+class MeshFabric:
+    rows: int = 5
+    cols: int = 4
+    link_bw: float = 750e9            # B/s per direction
+    io_bw: float = 128e9              # per I/O controller
+    latency_per_hop: float = 20e-9
+    step_overhead: float = 8e-7       # per ring-step SW/protocol latency
+                                      # (ASTRA-SIM-style NPU processing delay)
+
+    @property
+    def n(self) -> int:
+        return self.rows * self.cols
+
+    def coord(self, nid: int) -> Tuple[int, int]:
+        return divmod(nid, self.cols)
+
+    def degree(self, nid: int) -> int:
+        r, c = self.coord(nid)
+        return ((r > 0) + (r < self.rows - 1) +
+                (c > 0) + (c < self.cols - 1))
+
+    def border_npus(self) -> List[int]:
+        out = []
+        for nid in range(self.n):
+            r, c = self.coord(nid)
+            if r in (0, self.rows - 1) or c in (0, self.cols - 1):
+                out.append(nid)
+        return out
+
+    def n_io_controllers(self) -> int:
+        """Border NPUs get one controller; corners two (paper: 18 on 5×4)."""
+        total = 0
+        for nid in self.border_npus():
+            r, c = self.coord(nid)
+            corner = (r in (0, self.rows - 1)) and (c in (0, self.cols - 1))
+            total += 2 if corner else 1
+        return total
+
+    # ---- routing -------------------------------------------------------------
+    def xy_links(self, src: int, dst: int) -> List[Link]:
+        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
+        links: List[Link] = []
+        c = c0
+        while c != c1:
+            nc = c + (1 if c1 > c else -1)
+            links.append(((r0, c), (r0, nc)))
+            c = nc
+        r = r0
+        while r != r1:
+            nr = r + (1 if r1 > r else -1)
+            links.append(((r, c1), (nr, c1)))
+            r = nr
+        return links
+
+    def ring_max_congestion(self, rings: Sequence[Sequence[int]]) -> int:
+        """Max number of ring edges (over all rings) crossing any one link."""
+        load: Dict[Link, int] = {}
+        for ring in rings:
+            n = len(ring)
+            if n < 2:
+                continue
+            for i in range(n):
+                a, b = ring[i], ring[(i + 1) % n]
+                for ln in self.xy_links(a, b):
+                    load[ln] = load.get(ln, 0) + 1
+        return max(load.values()) if load else 0
+
+    # ---- collectives -----------------------------------------------------------
+    def wafer_wide_allreduce_bw(self) -> float:
+        """Hierarchical 2D algorithm, 2 reverse chunks: bounded by corner
+        NPUs with 2 links ⇒ per-NPU effective BW = 2·link_bw (Sec. VIII)."""
+        return 2 * self.link_bw
+
+    def _ring_hops(self, ring: Sequence[int]) -> float:
+        """Mean X-Y hop count between ring neighbours."""
+        n = len(ring)
+        if n < 2:
+            return 1.0
+        tot = sum(len(self.xy_links(ring[i], ring[(i + 1) % n]))
+                  for i in range(n))
+        return max(tot / n, 1.0)
+
+    def collective_time(self, kind: str, group: Sequence[int], nbytes: float,
+                        concurrent_rings: Sequence[Sequence[int]] = ()
+                        ) -> float:
+        """Endpoint ring algorithm over ``group``, step-explicit.
+
+        Ring All-Reduce = 2(n−1) serialized steps, each moving a D/n chunk
+        over (possibly multi-hop, possibly congested) X-Y paths.  This is
+        what makes per-layer collectives on the mesh *latency-bound* — the
+        effect FRED's single-injection in-network trees eliminate; the
+        wafer-wide case uses the hierarchical-2D algorithm with 2 reverse
+        chunks, whose step count is (rows−1)+(cols−1) per phase.
+        """
+        from .flows import endpoint_traffic_bytes
+        n = len(group)
+        if n <= 1 or nbytes <= 0:
+            return 0.0
+        traffic = endpoint_traffic_bytes(kind, n, nbytes)
+        if n == self.n:
+            # hierarchical 2D: row rings then column rings, 2 chunks
+            bw = self.wafer_wide_allreduce_bw()
+            steps = 2 * ((self.cols - 1) + (self.rows - 1))
+            if kind != "all_reduce":
+                steps //= 2
+            hops = 1.0
+        else:
+            rings = list(concurrent_rings) or [list(group)]
+            cong = max(self.ring_max_congestion(rings), 1)
+            bw = self.link_bw / cong
+            steps = 2 * (n - 1) if kind == "all_reduce" else (n - 1)
+            hops = self._ring_hops(list(group))
+        chunk = traffic / max(steps, 1)
+        per_step = (chunk / bw + self.latency_per_hop * hops +
+                    self.step_overhead)
+        return steps * per_step
+
+    def pp_transfer_time(self, nbytes: float) -> float:
+        """Border-to-next-stage multicast: one link (Sec. VIII)."""
+        return nbytes / self.link_bw
+
+    # ---- Fig. 4: I/O hotspot ----------------------------------------------------
+    def io_hotspot_load(self) -> float:
+        """Required hotspot-link BW (in units of per-channel rate P) for
+        all I/O channels streaming a broadcast simultaneously: (2N−1) for an
+        N×N mesh (paper's formula; for rectangular meshes use the max
+        dimension)."""
+        n = max(self.rows, self.cols)
+        return 2 * n - 1
+
+    def io_linerate_factor(self) -> float:
+        """Fraction of I/O line rate sustainable through the hotspot link:
+        min(1, link_bw / ((2N−1)·P)) — GPT-3 case: 750/1152 = 0.65."""
+        need = self.io_hotspot_load() * self.io_bw
+        return min(1.0, self.link_bw / need)
+
+    def io_stream_rate(self) -> float:
+        """Aggregate sustainable I/O streaming rate onto the wafer."""
+        return self.n_io_controllers() * self.io_bw * self.io_linerate_factor()

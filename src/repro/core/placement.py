@@ -1,0 +1,83 @@
+"""Device placement (paper Sec. V-C option 4 + baseline policy Sec. VII-C).
+
+``fred_placement``: workers of the same MP group on consecutive NPUs, then
+iterate PP, then DP — with FRED_3 switches this suffices to avoid routing
+conflicts for 3D-parallelism (the property ``tests/test_routing.py``
+verifies exhaustively for many (mp, dp, pp) shapes).
+
+``mesh_placement``: the baseline's priority order MP > PP > DP mapped onto
+the 2D mesh row-major (favoring MP adjacency, as in Megatron-LM [28]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Tuple
+
+Worker = Tuple[int, int, int]          # (mp, dp, pp) coordinates
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    mp: int
+    dp: int
+    pp: int
+
+    @property
+    def n_workers(self) -> int:
+        return self.mp * self.dp * self.pp
+
+    def workers(self) -> Iterator[Worker]:
+        for d in range(self.dp):
+            for p in range(self.pp):
+                for m in range(self.mp):
+                    yield (m, d, p)
+
+    def mp_groups(self) -> List[List[Worker]]:
+        return [[(m, d, p) for m in range(self.mp)]
+                for d in range(self.dp) for p in range(self.pp)]
+
+    def dp_groups(self) -> List[List[Worker]]:
+        return [[(m, d, p) for d in range(self.dp)]
+                for m in range(self.mp) for p in range(self.pp)]
+
+    def pp_groups(self) -> List[List[Worker]]:
+        return [[(m, d, p) for p in range(self.pp)]
+                for m in range(self.mp) for d in range(self.dp)]
+
+    def __str__(self):
+        return f"MP({self.mp})-DP({self.dp})-PP({self.pp})"
+
+
+def fred_placement(strategy: Strategy) -> Dict[Worker, int]:
+    """worker → physical NPU id; MP consecutive, then PP, then DP."""
+    placement: Dict[Worker, int] = {}
+    nid = 0
+    for d in range(strategy.dp):
+        for p in range(strategy.pp):
+            for m in range(strategy.mp):
+                placement[(m, d, p)] = nid
+                nid += 1
+    return placement
+
+
+def mesh_placement(strategy: Strategy, rows: int, cols: int
+                   ) -> Dict[Worker, Tuple[int, int]]:
+    """worker → (row, col); MP > PP > DP priority (baseline, Sec. VII-C)."""
+    placement: Dict[Worker, Tuple[int, int]] = {}
+    nid = 0
+    for d in range(strategy.dp):
+        for p in range(strategy.pp):
+            for m in range(strategy.mp):
+                placement[(m, d, p)] = divmod(nid, cols)
+                nid += 1
+    return placement
+
+
+def placement_groups(strategy: Strategy, placement: Dict[Worker, int]
+                     ) -> Dict[str, List[List[int]]]:
+    """NPU-id groups per parallelism type under a placement."""
+    as_ids = lambda groups: [[placement[w] for w in g] for g in groups]
+    return {"mp": as_ids(strategy.mp_groups()),
+            "dp": as_ids(strategy.dp_groups()),
+            "pp": as_ids(strategy.pp_groups())}

@@ -1,0 +1,199 @@
+"""End-to-end training-time simulator (ASTRA-SIM-style, paper Sec. VII).
+
+Models one training iteration of a 3D-parallel workload on either the
+baseline 2D-mesh or a FRED fabric:
+
+  * compute: per-layer FLOPs / (peak·efficiency), MP-sharded;
+  * MP comm: blocking All-Reduces per layer (forward and backward);
+  * PP: GPipe microbatching — bubble factor (M + S − 1)/M plus boundary
+    activation transfers;
+  * DP comm: per-layer gradient All-Reduce issued as backward finishes,
+    overlapped with remaining backward compute (water-filling); exposed
+    remainder is reported;
+  * weight streaming: layer weights stream in at the fabric's sustainable
+    I/O rate (hotspot-limited on the mesh, line-rate on FRED) overlapped
+    with compute; gradients stream out during backward; optimizer runs
+    near storage (Sec. III-A);
+  * input loading: minibatch activations via I/O, prefetchable except
+    under weight streaming (I/O busy ⇒ exposed, Sec. VIII Transformer-1T).
+
+Returned ``Breakdown`` mirrors Fig. 10's stacks: compute + exposed
+input-load / MP / DP / PP / weight-stream times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .fabric import FredFabric
+from .meshnet import MeshFabric
+from .placement import Strategy, fred_placement, mesh_placement, placement_groups
+from .workloads import Workload, BYTES
+
+NPU_PEAK_FLOPS = 1000e12      # FP16 (Table II)
+
+
+@dataclasses.dataclass
+class Breakdown:
+    workload: str
+    fabric: str
+    compute: float
+    input_load: float
+    mp: float
+    dp: float
+    pp: float
+    stream: float
+
+    @property
+    def total(self) -> float:
+        return (self.compute + self.input_load + self.mp + self.dp +
+                self.pp + self.stream)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"compute": self.compute, "input_load": self.input_load,
+                "mp": self.mp, "dp": self.dp, "pp": self.pp,
+                "stream": self.stream, "total": self.total}
+
+
+@dataclasses.dataclass
+class Simulator:
+    fabric_name: str                       # "baseline" | "FRED-A".."FRED-D"
+    compute_efficiency: float = 0.45
+    overlap_dp: bool = True
+
+    def __post_init__(self):
+        if self.fabric_name == "baseline":
+            self.mesh: Optional[MeshFabric] = MeshFabric()
+            self.fred: Optional[FredFabric] = None
+        else:
+            from .fabric import CONFIGS
+            self.mesh = None
+            self.fred = FredFabric(CONFIGS[self.fabric_name])
+
+    # ---- fabric dispatch -------------------------------------------------------
+    def _groups(self, strategy: Strategy):
+        if self.mesh is not None:
+            pl = mesh_placement(strategy, self.mesh.rows, self.mesh.cols)
+            ids = {w: r * self.mesh.cols + c for w, (r, c) in pl.items()}
+        else:
+            ids = fred_placement(strategy)
+        return placement_groups(strategy, ids)
+
+    def _coll_time(self, kind: str, group, nbytes: float,
+                   concurrent: int) -> float:
+        if self.mesh is not None:
+            return self.mesh.collective_time(kind, group, nbytes)
+        return self.fred.collective_time(kind, group, nbytes,
+                                         concurrent_groups=concurrent)
+
+    def _pp_time(self, nbytes: float) -> float:
+        if self.mesh is not None:
+            return self.mesh.pp_transfer_time(nbytes)
+        return self.fred.pp_transfer_time(nbytes)
+
+    def _io_rate(self) -> float:
+        if self.mesh is not None:
+            return self.mesh.io_stream_rate()
+        return self.fred.io_stream_rate()
+
+    # ---- main -------------------------------------------------------------------
+    def run(self, w: Workload) -> Breakdown:
+        st = w.strategy
+        groups = self._groups(st)
+        mp_group = groups["mp"][0]
+        dp_group = groups["dp"][0]
+        n_dp_groups = len(groups["dp"])
+        layers_per_stage = w.n_layers // st.pp
+        samples_per_npu = w.samples_per_dp
+
+        # ---- compute ------------------------------------------------------------
+        eff_flops = NPU_PEAK_FLOPS * self.compute_efficiency
+        fwd_layer = (w.flops_fwd_per_sample_layer * samples_per_npu /
+                     st.mp / eff_flops)
+        bwd_layer = 2 * fwd_layer
+        fwd_stage = fwd_layer * layers_per_stage
+        bwd_stage = bwd_layer * layers_per_stage
+
+        # GPipe microbatching (Sec. VII-C: 8 microbatches for T-17B; weight
+        # streaming uses pp-many, which suffices to hide the tiny pipeline)
+        microbatches = 8 if (st.pp > 1 and w.execution == "stationary") else \
+            max(st.pp, 1)
+        if st.pp > 1:
+            bubble = (microbatches + st.pp - 1) / microbatches
+        else:
+            bubble = 1.0
+        compute = (fwd_stage + bwd_stage) * bubble
+
+        # ---- MP comm --------------------------------------------------------------
+        mp_time = 0.0
+        if st.mp > 1 and w.mp_allreduce_per_layer:
+            act_bytes = w.act_bytes_per_sample * samples_per_npu
+            per_layer = self._coll_time("all_reduce", mp_group, act_bytes,
+                                        concurrent=len(groups["mp"]))
+            # fwd + bwd, every layer of this stage, all microbatches pipelined
+            mp_time = (per_layer * w.mp_allreduce_per_layer * 2 *
+                       layers_per_stage * bubble)
+
+        # ---- PP comm ---------------------------------------------------------------
+        pp_time = 0.0
+        if st.pp > 1:
+            act_bytes = w.act_bytes_per_sample * samples_per_npu
+            # fwd + bwd boundary transfer per microbatch, on the critical
+            # path only for the bubble-exposed fraction
+            per_mb = 2 * self._pp_time(act_bytes / microbatches)
+            pp_time = per_mb * (microbatches + st.pp - 1)
+
+        # ---- DP comm ----------------------------------------------------------------
+        dp_time = 0.0
+        grad_bytes_per_layer = w.params_per_layer * BYTES / st.mp
+        if st.dp > 1 and w.execution == "stationary":
+            total_ar = sum(
+                self._coll_time("all_reduce", dp_group, grad_bytes_per_layer,
+                                concurrent=n_dp_groups)
+                for _ in range(layers_per_stage))
+            if self.overlap_dp:
+                # layer-by-layer ARs overlap with remaining backward compute
+                dp_time = max(0.0, total_ar - bwd_stage * (1 - 1 / max(layers_per_stage, 1)))
+            else:
+                dp_time = total_ar
+
+        # ---- weight streaming ----------------------------------------------------------
+        stream_time = 0.0
+        input_load = 0.0
+        if w.execution == "streaming":
+            io_rate = self._io_rate()
+            # model in (fwd) + model in again (bwd) + gradients out (bwd);
+            # gradient reduction toward I/O happens in-fabric (reverse of
+            # Fig. 4); all overlap with compute
+            stream_bytes = w.param_bytes_total * (2 + 1) / st.pp
+            io_time = stream_bytes / io_rate
+            exposed = max(0.0, io_time - compute - mp_time)
+            stream_time = exposed
+            # input minibatch cannot prefetch while weights stream (Sec VIII)
+            in_bytes = w.minibatch * w.act_bytes_per_sample
+            input_load = in_bytes / io_rate
+        else:
+            # input prefetched during previous iteration — not exposed
+            input_load = 0.0
+
+        return Breakdown(workload=w.name, fabric=self.fabric_name,
+                         compute=compute, input_load=input_load,
+                         mp=mp_time, dp=dp_time, pp=pp_time,
+                         stream=stream_time)
+
+
+def compare(workload: Workload, fabrics=("baseline", "FRED-C", "FRED-D"),
+            **kw) -> Dict[str, Breakdown]:
+    return {f: Simulator(f, **kw).run(workload) for f in fabrics}
+
+
+def speedup_table(**kw) -> Dict[str, Dict[str, float]]:
+    """Fig. 10 headline: total-time speedup of FRED-C/D over baseline."""
+    from .workloads import paper_workloads
+    out = {}
+    for w in paper_workloads():
+        res = compare(w, **kw)
+        base = res["baseline"].total
+        out[w.name] = {f: base / br.total for f, br in res.items()}
+    return out

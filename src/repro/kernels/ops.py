@@ -1,0 +1,65 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+On TPU (``use_pallas=True``) these call the compiled kernels; elsewhere
+(and in all CPU tests) they run interpret-mode Pallas or the pure-jnp
+reference — same semantics, identical signatures.  Model code goes through
+this module only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention, repeat_kv
+from . import flash_attention as _fa
+from . import quant8 as _q8
+from . import reduce_tree as _rt
+from . import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def attention(q, k, v, *, causal: bool = True, use_pallas: bool = False):
+    if k.shape[2] != q.shape[2]:
+        k = repeat_kv(k, q.shape[2] // k.shape[2])
+        v = repeat_kv(v, q.shape[2] // v.shape[2])
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   interpret=not _on_tpu())
+    return chunked_attention(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ssd(x, dt, A, Bmat, Cmat, *, use_pallas: bool = False):
+    if use_pallas:
+        return _ssd.ssd_scan(x, dt, A, Bmat, Cmat,
+                             interpret=not _on_tpu())
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, Bmat, Cmat)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def reduce_shards(shards, *, use_pallas: bool = False):
+    if use_pallas:
+        return _rt.tree_reduce(shards, interpret=not _on_tpu())
+    return _rt.ref_reduce(shards)
+
+
+def quantize(x, block: int = 1024, *, use_pallas: bool = False):
+    if use_pallas:
+        return _q8.quantize(x, block, interpret=not _on_tpu())
+    from repro.parallel.compress import quantize as qref
+    return qref(x, block)
+
+
+def dequantize(q, scales, block: int = 1024, *, use_pallas: bool = False):
+    if use_pallas:
+        return _q8.dequantize(q, scales, block, interpret=not _on_tpu())
+    from repro.parallel.compress import dequantize as dqref
+    return dqref(q, scales, block)

@@ -1,0 +1,64 @@
+"""Pallas blockwise int8 quantize/dequantize (gradient compression path).
+
+Same math as ``parallel.compress`` (its jnp functions are the oracle);
+this kernel fuses amax + scale + round per VMEM block so the compressed
+collective's quantization never round-trips HBM at fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _q_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (1, block)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0] = scale
+
+
+def _dq_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0]).astype(
+        x_ref.dtype)
+
+
+def quantize(x: jnp.ndarray, block: int = 1024, *, interpret: bool = True):
+    """x: (n,) → (q int8 (n,), scales fp32 (ceil(n/block),))."""
+    n = x.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    xp = (jnp.pad(x, (0, pad)) if pad else x).reshape(nb, block)
+    q, s = pl.pallas_call(
+        _q_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    return q.reshape(-1)[:n], s
+
+
+def dequantize(q: jnp.ndarray, scales: jnp.ndarray, block: int = 1024, *,
+               out_dtype=jnp.float32, interpret: bool = True) -> jnp.ndarray:
+    n = q.shape[0]
+    nb = scales.shape[0]
+    pad = nb * block - n
+    qp = (jnp.pad(q, (0, pad)) if pad else q).reshape(nb, block)
+    x = pl.pallas_call(
+        _dq_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), out_dtype),
+        interpret=interpret,
+    )(qp, scales)
+    return x.reshape(-1)[:n]

@@ -1,0 +1,254 @@
+"""Transformer block layers shared by all architectures.
+
+Each ``init_*`` returns a Box-tree (see ``modules``); each ``apply_*``
+consumes the *value-only* tree (after ``modules.split``).  Blocks are
+polymorphic over execution mode:
+
+  * ``train``   — full-sequence causal forward, no cache.
+  * ``prefill`` — full-sequence forward that also emits the KV cache laid
+                  out into a fixed ``cache_len`` buffer.
+  * ``decode``  — single-token forward reading/updating the cache.
+
+The KV cache for a layer is ``(k, v)`` of shape (B, cache_len, Hkv, hd); a
+sliding-window layer uses a rolling buffer of size ``window``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (apply_rope, chunked_attention, decode_attention,
+                        dense_attention)
+from .modules import dense_init, ones_init, rms_norm, swiglu, zeros_init
+from .moe import init_moe, moe_ffn
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (B, S_cache, Hkv, hd)
+    v: jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype=jnp.float32, cross: bool = False):
+    """QKV/O projections in *flattened* (d, H·hd) layout.
+
+    H·hd is divisible by the 16-way TP degree for every assigned arch even
+    when H itself is not (llava 56H, qwen1.5 20H, arctic 56H) — jit input
+    shardings require exact divisibility; the per-head structure only
+    appears on activations, where uneven GSPMD sharding is permitted.
+    """
+    d, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, Hq * hd), ("embed", "qkv"), dtype=dtype),
+        "wk": dense_init(ks[1], (d, Hkv * hd), ("embed", "kv"), dtype=dtype),
+        "wv": dense_init(ks[2], (d, Hkv * hd), ("embed", "kv"), dtype=dtype),
+        "wo": dense_init(ks[3], (Hq * hd, d), ("qkv", "embed"),
+                         scale=1.0 / (d ** 0.5 * (2 * max(cfg.num_layers, 1)) ** 0.5),
+                         dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((Hq * hd,), ("qkv",), dtype)
+        p["bk"] = zeros_init((Hkv * hd,), ("kv",), dtype)
+        p["bv"] = zeros_init((Hkv * hd,), ("kv",), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), ("null",), dtype)
+        p["k_norm"] = ones_init((hd,), ("null",), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, kv_x, positions, *, use_rope: bool):
+    B, S = x.shape[:2]
+    Sk = kv_x.shape[1]
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, Sk, Hkv, hd)
+    v = v.reshape(B, Sk, Hkv, hd)
+    if "q_norm" in p:  # qwen3 qk-norm (per-head RMS)
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and cfg.rope != "none":
+        kv_positions = positions if kv_x is x else \
+            jnp.broadcast_to(jnp.arange(kv_x.shape[1])[None], kv_x.shape[:2])
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope)
+        k = apply_rope(k, kv_positions, cfg.rope_theta, cfg.rope)
+    return q, k, v
+
+
+def apply_attention(p, cfg, pcfg, x, *, positions, mode: str = "train",
+                    cache: Optional[KVCache] = None, cache_index=None,
+                    cache_len: Optional[int] = None, kv_x=None,
+                    causal: bool = True, window: int = 0,
+                    constrain=lambda t, kind="residual": t,
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Unified attention. Returns (out, new_cache)."""
+    B, S, d = x.shape
+    cross = kv_x is not None
+    src = kv_x if cross else x
+    new_cache = cache
+
+    if mode == "decode" and cross:
+        # cross-attention at decode reads the static (precomputed) cache
+        q = x @ p["wq"]
+        if "bq" in p:
+            q = q + p["bq"]
+        q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        if "q_norm" in p:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        out = decode_attention(q, cache.k, cache.v,
+                               jnp.full((B,), cache.k.shape[1], jnp.int32))
+        return out.reshape(B, S, -1) @ p["wo"], cache
+
+    q, k, v = _project_qkv(p, cfg, x, src, positions, use_rope=not cross)
+    q = constrain(q, "q_heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+
+    if mode == "decode":
+        # write new K/V at cache_index (rolling slot for SWA buffers)
+        S_cache = cache.k.shape[1]
+        write_pos = cache_index % S_cache if window else cache_index
+        kc = _write_cache(cache.k, k, write_pos)
+        vc = _write_cache(cache.v, v, write_pos)
+        valid = jnp.minimum(cache_index + 1, S_cache)
+        out = decode_attention(q, kc, vc, jnp.broadcast_to(valid, (B,)))
+        new_cache = KVCache(kc, vc)
+    else:
+        if cross:
+            out = chunked_attention(q, k, v, causal=False,
+                                    q_chunk=pcfg.attn_q_chunk,
+                                    k_chunk=pcfg.attn_k_chunk)
+        elif S <= 512:
+            out = dense_attention(q, k, v, causal=causal, window=window)
+        else:
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    q_chunk=pcfg.attn_q_chunk,
+                                    k_chunk=pcfg.attn_k_chunk)
+        if mode == "prefill":
+            new_cache = _build_cache(k, v,
+                                     cache_len=cache_len or k.shape[1],
+                                     window=window)
+    B2, S2 = out.shape[:2]
+    return out.reshape(B2, S2, -1) @ p["wo"], new_cache
+
+
+def _write_cache(buf, kv, pos):
+    """dynamic_update_slice along seq dim (pos may be traced)."""
+    return jax.lax.dynamic_update_slice(
+        buf, kv.astype(buf.dtype),
+        (0, pos) + (0,) * (buf.ndim - 2))
+
+
+def _build_cache(k, v, cache_len: int, window: int = 0) -> KVCache:
+    """Lay prefill K/V into a fixed-size cache buffer.
+
+    For sliding-window layers the buffer holds only the last ``window``
+    positions (rolling semantics start aligned so that position p maps to
+    slot p % window)."""
+    B, S, H, hd = k.shape
+    if window and window < cache_len:
+        cache_len = window
+    if S >= cache_len:
+        # keep the last cache_len positions, aligned to their rolling slots
+        start = S - cache_len
+        ks, vs = k[:, start:], v[:, start:]
+        if window:
+            shift = start % cache_len
+            ks = jnp.roll(ks, shift, axis=1)
+            vs = jnp.roll(vs, shift, axis=1)
+        return KVCache(ks, vs)
+    pad = cache_len - S
+    return KVCache(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                   jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), ("embed", "mlp"), dtype=dtype),
+        "w_up": dense_init(ks[1], (d, f), ("embed", "mlp"), dtype=dtype),
+        "w_down": dense_init(ks[2], (f, d), ("mlp", "embed"),
+                             scale=1.0 / (f ** 0.5 * (2 * max(cfg.num_layers, 1)) ** 0.5),
+                             dtype=dtype),
+    }
+
+
+def apply_mlp(p, x):
+    return swiglu(x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# full block (pre-norm residual)
+# --------------------------------------------------------------------------
+
+def init_attn_block(key, cfg, dtype=jnp.float32, with_cross: bool = False,
+                    ffn: str = "mlp"):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": ones_init((cfg.d_model,), ("embed",), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": ones_init((cfg.d_model,), ("embed",), dtype),
+    }
+    if with_cross:
+        p["ln_x"] = ones_init((cfg.d_model,), ("embed",), dtype)
+        p["cross"] = init_attention(ks[1], cfg, dtype, cross=True)
+    if ffn == "moe":
+        p["ffn"] = init_moe(ks[2], cfg, dtype)
+    else:
+        p["ffn"] = init_mlp(ks[2], cfg, dtype)
+    return p
+
+
+def apply_attn_block(p, cfg, pcfg, x, *, positions, mode="train",
+                     cache: Optional[KVCache] = None, cache_index=None,
+                     cache_len: Optional[int] = None,
+                     cross_cache: Optional[KVCache] = None, enc_out=None,
+                     causal=True, constrain=lambda t, kind="residual": t):
+    """Returns (x, new_cache, new_cross_cache, aux_loss)."""
+    window = cfg.sliding_window
+    h, new_cache = apply_attention(
+        p["attn"], cfg, pcfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+        positions=positions, mode=mode, cache=cache, cache_index=cache_index,
+        cache_len=cache_len, causal=causal, window=window,
+        constrain=constrain)
+    x = constrain(x + h)
+    new_cross = cross_cache
+    if "cross" in p:
+        xq = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "decode":
+            # static cross cache, built at prefill
+            hx, _ = apply_attention(p["cross"], cfg, pcfg, xq,
+                                    positions=positions, mode="decode",
+                                    cache=cross_cache, kv_x=x,
+                                    constrain=constrain)
+        else:
+            hx, new_cross = apply_attention(
+                p["cross"], cfg, pcfg, xq, positions=positions, mode=mode,
+                cache_len=enc_out.shape[1], kv_x=enc_out, causal=False,
+                constrain=constrain)
+        x = constrain(x + hx)
+    aux = jnp.zeros((), jnp.float32)
+    y = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts and "router" in p["ffn"]:
+        ff, aux = moe_ffn(p["ffn"], y, cfg, constrain=constrain)
+    else:
+        ff = apply_mlp(p["ffn"], y)
+    x = constrain(x + ff)
+    return x, new_cache, new_cross, aux

@@ -1,0 +1,335 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+One model class (functions + pytrees, no framework) serves all ten assigned
+architectures.  Layers are *stacked* on a leading ``layers`` axis and
+executed with ``lax.scan`` so the compiled HLO is O(1) in depth — essential
+for the 512-device dry-run compile times — with ``jax.checkpoint`` (remat)
+around the block body.
+
+Hybrid (zamba2) structure: ``num_layers`` Mamba2 blocks; after every
+``attn_every`` of them, a single *shared* attention block (one set of
+weights, applied num_layers/attn_every times, each application with its own
+KV cache slice — weights shared, activations not).
+
+Entry points:
+  * ``init``          — Box-tree of parameters.
+  * ``loss_fn``       — (params, batch) → (loss, metrics); full causal LM.
+  * ``prefill``       — builds the decode state (KV caches / SSM states).
+  * ``decode_step``   — one token for every sequence in the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ParallelConfig
+from .layers import (KVCache, apply_attn_block, init_attn_block)
+from .modules import (Box, AxisNames, dense_init, embed_init, ones_init,
+                      rms_norm, softmax_cross_entropy, split)
+from .ssm import SSMState, init_mamba2, init_ssm_state, mamba2_forward
+
+
+class DecodeState(NamedTuple):
+    """Everything carried between decode steps (pytree)."""
+    kv: Any            # stacked KVCache or None
+    ssm: Any           # stacked SSMState or None
+    shared_kv: Any     # hybrid: (groups,) stacked KVCache for the shared block
+    cross_kv: Any      # enc-dec: stacked static cross-attention cache
+    index: jnp.ndarray  # scalar int32 — next write position / #tokens seen
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stack_init(block_init, keys):
+    """vmap an init over layer keys; re-attach 'layers' axis metadata."""
+    one = block_init(keys[0])
+    _, axes_one = split(one)
+
+    def vinit(k):
+        v, _ = split(block_init(k))
+        return v
+
+    vals = jax.vmap(vinit)(keys)
+    axes = jax.tree.map(lambda a: a.stacked(), axes_one,
+                        is_leaf=lambda x: isinstance(x, AxisNames))
+    return jax.tree.map(Box, vals, axes,
+                        is_leaf=lambda x: isinstance(x, AxisNames))
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], V, cfg.d_model, dtype),
+        "final_norm": ones_init((cfg.d_model,), ("embed",), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, V),
+                                       ("embed", "vocab"), scale=0.02, dtype=dtype)
+
+    lkeys = jax.random.split(keys[2], max(cfg.num_layers, 1))
+    ffn = "moe" if cfg.n_experts else "mlp"
+    if cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: {"ln": ones_init((cfg.d_model,), ("embed",), dtype),
+                       "ssm": init_mamba2(k, cfg, dtype)}, lkeys)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: {"ln": ones_init((cfg.d_model,), ("embed",), dtype),
+                       "ssm": init_mamba2(k, cfg, dtype)}, lkeys)
+        params["shared_attn"] = init_attn_block(keys[3], cfg, dtype)
+    else:
+        with_cross = cfg.family == "audio"
+        params["blocks"] = _stack_init(
+            lambda k: init_attn_block(k, cfg, dtype, ffn=ffn,
+                                      with_cross=with_cross), lkeys)
+
+    if cfg.family == "vlm":
+        params["mm_proj"] = dense_init(keys[4], (cfg.d_model, cfg.d_model),
+                                       ("embed", "embed_out"), dtype=dtype)
+    if cfg.family == "audio":
+        from .whisper import init_encoder
+        params["encoder"] = init_encoder(keys[5], cfg, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# shared forward machinery
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch, constrain):
+    """Token (+ patch) embedding.  Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype) @ params["mm_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return constrain(x), positions
+
+
+def _maybe_remat(fn, pcfg: ParallelConfig):
+    if pcfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if pcfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan_blocks(params, cfg, pcfg, x, positions, constrain, *,
+                 mode="train", kv=None, ssm=None, shared_kv=None,
+                 cross_kv=None, enc_out=None, cache_index=None,
+                 cache_len=None, layer_constrain=lambda bp: bp):
+    """Run the full stacked block stack.  Returns
+    (x, new_kv, new_ssm, new_shared_kv, new_cross_kv, aux).
+
+    ``None`` flows through ``lax.scan`` xs/ys as an empty pytree, so modes
+    that carry no cache/state (train) pay zero memory for them.
+    """
+    L = cfg.num_layers
+    is_ssm_family = cfg.family in ("ssm", "hybrid")
+
+    def maybe_scan(body, carry, xs, length):
+        """lax.scan, or an unrolled python loop when ``scan_layers=False``
+        (used by the dry-run's single/double-layer cost probes so that
+        ``cost_analysis`` sees every layer)."""
+        if pcfg.scan_layers:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for i in range(length):
+            xsl = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, xsl)
+            ys.append(y)
+        # None subtrees pass through tree.map untouched
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else None
+        return carry, stacked
+
+    if is_ssm_family:
+        def body(carry, xs):
+            h, = carry
+            bp, st = xs
+            # re-pin the per-layer slice to its stored sharding so FSDP
+            # all-gathers happen inside the loop body, not on the whole stack
+            bp = layer_constrain(bp)
+
+            def run(h, bp, st):
+                hin = rms_norm(h, bp["ln"], cfg.norm_eps)
+                if mode == "train":
+                    out = mamba2_forward(bp["ssm"], hin, cfg)
+                    return constrain(h + out), None
+                out, new_st = mamba2_forward(bp["ssm"], hin, cfg,
+                                             state=st, return_state=True)
+                return constrain(h + out), new_st
+            run = _maybe_remat(run, pcfg)
+            h, new_st = run(h, bp, st)
+            return (h,), new_st
+
+        scan_ssm = ssm if mode == "decode" else None
+        if cfg.family == "hybrid":
+            groups = L // cfg.attn_every
+            gp = jax.tree.map(lambda a: a.reshape(groups, cfg.attn_every, *a.shape[1:]),
+                              params["blocks"])
+            gs = (jax.tree.map(lambda a: a.reshape(groups, cfg.attn_every, *a.shape[1:]),
+                               scan_ssm) if scan_ssm is not None else None)
+            new_ssm_groups, new_shared = [], []
+            aux = jnp.zeros((), jnp.float32)
+            for g in range(groups):
+                bg = jax.tree.map(lambda a: a[g], gp)
+                sg = jax.tree.map(lambda a: a[g], gs) if gs is not None else None
+                (x,), sg_new = maybe_scan(body, (x,), (bg, sg), cfg.attn_every)
+                new_ssm_groups.append(sg_new)
+                skv = (jax.tree.map(lambda a: a[g], shared_kv)
+                       if shared_kv is not None else None)
+                x, nkv, _, a = apply_attn_block(
+                    params["shared_attn"], cfg, pcfg, x, positions=positions,
+                    mode=mode, cache=skv, cache_index=cache_index,
+                    cache_len=cache_len, constrain=constrain)
+                aux = aux + a
+                new_shared.append(nkv)
+            new_ssm = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_ssm_groups)
+                       if mode != "train" else None)
+            new_shared_kv = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_shared)
+                            if mode != "train" else None)
+            return x, None, new_ssm, new_shared_kv, None, aux
+
+        (x,), new_ssm = maybe_scan(body, (x,), (params["blocks"], scan_ssm), L)
+        return (x, None, new_ssm if mode != "train" else None, None, None,
+                jnp.zeros((), jnp.float32))
+
+    # --- attention families ------------------------------------------------
+    has_cross = cfg.family == "audio"
+
+    def body(carry, xs):
+        h, = carry
+        bp, kvl, xkvl = xs
+        bp = layer_constrain(bp)
+
+        def run(h, bp, kvl, xkvl):
+            hh, nkv, nxkv, a = apply_attn_block(
+                bp, cfg, pcfg, h, positions=positions, mode=mode,
+                cache=kvl, cache_index=cache_index, cache_len=cache_len,
+                cross_cache=xkvl, enc_out=enc_out, constrain=constrain)
+            if mode == "train":
+                nkv, nxkv = None, None
+            elif mode == "decode":
+                nxkv = None   # cross cache is static; avoid re-stacking it
+            return hh, nkv, nxkv, a
+        run = _maybe_remat(run, pcfg)
+        h, nkv, nxkv, a = run(h, bp, kvl, xkvl)
+        return (h,), (nkv, nxkv, a)
+
+    scan_kv = kv if mode == "decode" else None
+    scan_cross = cross_kv if (has_cross and mode == "decode") else None
+    (x,), (new_kv, new_cross, auxs) = maybe_scan(
+        body, (x,), (params["blocks"], scan_kv, scan_cross), L)
+    aux = jnp.sum(jnp.asarray(auxs))
+    want_cache = mode in ("prefill", "decode")
+    return (x, new_kv if want_cache else None, None, None,
+            new_cross if (has_cross and mode == "prefill") else None, aux)
+
+
+# --------------------------------------------------------------------------
+# training loss
+# --------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig, pcfg: ParallelConfig,
+            constrain=lambda t, kind="residual": t, enc_fn=None,
+            layer_constrain=lambda bp: bp):
+    """Causal LM loss.  batch: tokens (B,S) int32, labels (B,S) int32
+    (−1 = masked), plus family-specific extras (patch_embeds / frames)."""
+    x, positions = _embed_inputs(params, cfg, batch, constrain)
+    enc_out = enc_fn(params, batch) if enc_fn is not None else None
+    x, _, _, _, _, aux = _scan_blocks(params, cfg, pcfg, x, positions,
+                                      constrain, mode="train", enc_out=enc_out,
+                                      layer_constrain=layer_constrain)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain(x @ head, "logits")
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # image positions don't predict tokens
+        P = batch["patch_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], P), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss, count = softmax_cross_entropy(logits, labels, cfg.vocab_size)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": count}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    """Allocate the decode state for a given cache length."""
+    L = cfg.num_layers
+    kv = ssm = shared = cross = None
+    eff_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = jax.vmap(lambda _: init_ssm_state(cfg, batch, dtype))(jnp.arange(L))
+        if cfg.family == "hybrid":
+            groups = L // cfg.attn_every
+            z = jnp.zeros((groups, batch, eff_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            shared = KVCache(z, z)
+    else:
+        z = jnp.zeros((L, batch, eff_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        kv = KVCache(z, z)
+        if cfg.family == "audio":
+            zc = jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+            cross = KVCache(zc, zc)
+    return DecodeState(kv=kv, ssm=ssm, shared_kv=shared, cross_kv=cross,
+                       index=jnp.zeros((), jnp.int32))
+
+
+def prefill(params, batch, cfg, pcfg, cache_len: int,
+            constrain=lambda t, kind="residual": t, enc_fn=None,
+            layer_constrain=lambda bp: bp) -> Tuple[jnp.ndarray, DecodeState]:
+    """Run the prompt; return (last-token logits, DecodeState)."""
+    x, positions = _embed_inputs(params, cfg, batch, constrain)
+    enc_out = enc_fn(params, batch) if enc_fn is not None else None
+    x, kv, ssm, shared, cross, _ = _scan_blocks(
+        params, cfg, pcfg, x, positions, constrain, mode="prefill",
+        enc_out=enc_out, cache_len=cache_len, layer_constrain=layer_constrain)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain(x @ head, "logits")
+    state = DecodeState(kv=kv, ssm=ssm, shared_kv=shared, cross_kv=cross,
+                        index=jnp.array(batch["tokens"].shape[1] +
+                                        (batch.get("patch_embeds").shape[1]
+                                         if cfg.family == "vlm" and
+                                         "patch_embeds" in batch else 0),
+                                        jnp.int32))
+    return logits[:, 0], state
+
+
+def decode_step(params, tokens, state: DecodeState, cfg, pcfg,
+                constrain=lambda t, kind="residual": t,
+                layer_constrain=lambda bp: bp
+                ) -> Tuple[jnp.ndarray, DecodeState]:
+    """One decode step.  tokens: (B, 1) int32 → logits (B, V)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(state.index[None, None], (B, 1)).astype(jnp.int32)
+    x, kv, ssm, shared, cross, _ = _scan_blocks(
+        params, cfg, pcfg, x, positions, constrain, mode="decode",
+        kv=state.kv, ssm=state.ssm, shared_kv=state.shared_kv,
+        cross_kv=state.cross_kv, cache_index=state.index,
+        layer_constrain=layer_constrain)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain(x @ head, "logits")
+    new_state = DecodeState(kv=kv if kv is not None else state.kv,
+                            ssm=ssm if ssm is not None else state.ssm,
+                            shared_kv=shared if shared is not None else state.shared_kv,
+                            cross_kv=state.cross_kv,
+                            index=state.index + 1)
+    return logits[:, 0], new_state

@@ -1,0 +1,56 @@
+"""Whisper-style encoder/decoder backbone (audio family).
+
+Per the task spec the conv/mel frontend is a *stub*: ``input_specs()``
+supplies precomputed frame embeddings ``frames: (B, enc_seq, d_model)``.
+The encoder is a stack of non-causal attention blocks (scanned); the decoder
+is the shared ``transformer`` stack with cross-attention enabled.
+
+The backbone dims follow the assignment (24L, d=1024, 16H/16KV, ff=4096,
+vocab 51865→padded); norm/MLP/positional details follow this repo's unified
+stack (RMSNorm/SwiGLU/RoPE) — noted in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_attn_block, init_attn_block
+from .modules import ones_init, rms_norm, split
+from .transformer import _maybe_remat, _stack_init
+
+
+def init_encoder(key, cfg, dtype=jnp.float32):
+    lkeys = jax.random.split(key, max(cfg.n_enc_layers, 1))
+    return {
+        "blocks": _stack_init(lambda k: init_attn_block(k, cfg, dtype), lkeys),
+        "final_norm": ones_init((cfg.d_model,), ("embed",), dtype),
+    }
+
+
+def encode(params, batch, cfg, pcfg, constrain=lambda t, kind="residual": t,
+           layer_constrain=lambda bp: bp):
+    """frames (B, enc_seq, d_model) → encoder hidden states."""
+    enc = params["encoder"]
+    x = constrain(batch["frames"])
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, bp):
+        h, = carry
+        bp = layer_constrain(bp)
+
+        def run(h, bp):
+            hh, _, _, _ = apply_attn_block(bp, cfg, pcfg, h,
+                                           positions=positions, mode="train",
+                                           causal=False, constrain=constrain)
+            return hh
+        run = _maybe_remat(run, pcfg)
+        return (run(h, bp),), None
+
+    if pcfg.scan_layers:
+        (x,), _ = jax.lax.scan(body, (x,), enc["blocks"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            (x,), _ = body((x,), jax.tree.map(lambda a: a[i], enc["blocks"]))
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)

@@ -1,0 +1,169 @@
+"""FRED-style collective schedules as explicit shard_map programs.
+
+The pjit/GSPMD path lets XLA choose collectives from shardings; this module
+is the *explicit* layer used where schedule control matters (the gradient
+path of the streaming trainer, the comm microbenchmarks, and the
+compressed-gradient mode) and where the paper's ideas map directly:
+
+  * ``flat``          — one ring All-Reduce over every data-parallel rank:
+                        the endpoint algorithm FRED's baseline runs.
+  * ``hierarchical``  — FRED's L1/L2 reduction-distribution tree mapped to
+                        mesh axes: reduce-scatter *inside* the pod (L1
+                        reduce), all-reduce across pods on the scattered
+                        shard (L2 reduce — the only traffic that crosses
+                        the narrow inter-pod link), all-gather inside the
+                        pod (distribution tree).  Cross-pod bytes drop from
+                        full-D to D/|data| exactly like FRED-B's L1-first
+                        reduction (Sec. VIII).
+  * ``compressed``    — hierarchical + int8 error-feedback quantization on
+                        the cross-pod phase (software analogue of in-switch
+                        traffic halving; beyond-paper optimization).
+
+All functions run *inside* ``shard_map`` bodies, or use ``build_sync`` to
+wrap a whole gradient pytree.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .compress import ef_quantize, dequantize
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, pad
+
+
+def flat_all_reduce(x, axes: Sequence[str]):
+    """Single-phase psum over every replica (endpoint/ring semantics)."""
+    return jax.lax.psum(x, tuple(axes))
+
+
+def hierarchical_all_reduce(x, inner_axis: str, outer_axis: Optional[str],
+                            axis_size: int):
+    """reduce_scatter(inner) → all_reduce(outer) → all_gather(inner).
+
+    x: flat (n, ...) array replicated-shape per shard (same shape on every
+    rank, holding that rank's local values)."""
+    xp, pad = _pad_to(x, axis_size)
+    shard = jax.lax.psum_scatter(xp, inner_axis, scatter_dimension=0,
+                                 tiled=True)
+    if outer_axis is not None:
+        shard = jax.lax.psum(shard, outer_axis)
+    full = jax.lax.all_gather(shard, inner_axis, axis=0, tiled=True)
+    return full[:x.shape[0]] if pad else full
+
+
+def compressed_all_reduce(x, error, inner_axis: str,
+                          outer_axis: Optional[str], axis_size: int):
+    """Hierarchical all-reduce with int8 EF-compressed cross-pod phase.
+
+    Returns (result, new_error).  The inner reduce-scatter stays full
+    precision (ICI is fast inside a pod); only the scattered shard that
+    crosses pods is quantized — with error feedback so the bias is
+    corrected on the next step (convergence-safe).
+    """
+    xp, pad = _pad_to(x, axis_size)
+    shard = jax.lax.psum_scatter(xp, inner_axis, scatter_dimension=0,
+                                 tiled=True)
+    new_error = jnp.zeros_like(shard[:0])  # placeholder when no outer axis
+    if outer_axis is not None:
+        carry = shard + error
+        q, scale, new_error = ef_quantize(carry)
+        # int8 values cannot psum without overflow: dequantize-and-sum via
+        # all_gather of the compressed payload (bytes: |pod|·D/|data|/4
+        # vs bf16 full-D — a ≥8× cross-pod reduction for |data|=16)
+        qs = jax.lax.all_gather(q, outer_axis)
+        ss = jax.lax.all_gather(scale, outer_axis)
+        shard = jnp.sum(jax.vmap(dequantize)(qs, ss), axis=0).astype(x.dtype)
+    full = jax.lax.all_gather(shard, inner_axis, axis=0, tiled=True)
+    out = full[:x.shape[0]] if pad else full
+    return out, new_error
+
+
+def build_sync(mesh: Mesh, mode: str = "hierarchical",
+               inner_axis: str = "data", outer_axis: Optional[str] = None):
+    """Gradient synchronizer over *replica-stacked* local grads.
+
+    Input leaves carry a leading replica dim of size
+    |outer_axis|·|inner_axis| (sharded over those axes — each rank holds
+    its own local gradient slice); the output drops that dim and is the
+    replicated global mean.  ``mode='compressed'`` additionally threads an
+    error-feedback pytree (leaves shaped like the cross-pod shard).
+    """
+    axes = tuple(a for a in (outer_axis, inner_axis) if a)
+    n_inner = mesh.shape[inner_axis]
+    n_total = 1
+    for a in axes:
+        n_total *= mesh.shape[a]
+
+    def sync_leaf(g):
+        flat = g.reshape(-1)
+        if mode == "flat":
+            out = flat_all_reduce(flat, axes)
+        else:
+            out = hierarchical_all_reduce(flat, inner_axis, outer_axis,
+                                          n_inner)
+        return (out / n_total).reshape(g.shape).astype(g.dtype)
+
+    def sync_leaf_compressed(g, err):
+        flat = g.reshape(-1)
+        out, new_err = compressed_all_reduce(flat, err, inner_axis,
+                                             outer_axis, n_inner)
+        return (out / n_total).reshape(g.shape).astype(g.dtype), new_err
+
+    in_spec = P(axes)     # leading replica dim split over the DP axes
+    out_spec = P()        # synced result is replicated
+
+    if mode == "compressed":
+        def sync(grads, errors):
+            def body(gs, es):
+                gs = jax.tree.map(lambda a: a[0], gs)   # drop replica dim
+                es = jax.tree.map(lambda a: a[0], es)
+                g_flat, tdef = jax.tree.flatten(gs)
+                e_flat = tdef.flatten_up_to(es)
+                pairs = [sync_leaf_compressed(g, e)
+                         for g, e in zip(g_flat, e_flat)]
+                return (jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+                        jax.tree.unflatten(tdef, [p[1][None] for p in pairs]))
+            # all_gather(tiled) makes values equal across the inner axis
+            # but the vma type system still marks them varying — the
+            # replication is semantic, so disable the static check here
+            return jax.shard_map(body, mesh=mesh,
+                                 in_specs=(in_spec, P(axes)),
+                                 out_specs=(out_spec, P(axes)),
+                                 check_vma=False)(grads, errors)
+        return sync
+
+    def sync(grads):
+        def body(gs):
+            gs = jax.tree.map(lambda a: a[0], gs)
+            return jax.tree.map(sync_leaf, gs)
+        return jax.shard_map(body, mesh=mesh, in_specs=in_spec,
+                             out_specs=out_spec, check_vma=False)(grads)
+    return sync
+
+
+def init_error_feedback(grads_shapes, mesh, inner_axis="data",
+                        outer_axis="pod"):
+    """Zero EF buffers matching the compressed cross-pod shards — one per
+    replica (leading replica dim, sharded like the stacked grads)."""
+    n = mesh.shape[inner_axis]
+    reps = n * (mesh.shape[outer_axis] if outer_axis else 1)
+
+    def leaf(s):
+        size = 1
+        for d in s.shape:
+            size *= d
+        shard = -(-size // n)
+        return jnp.zeros((reps, shard), jnp.float32)
+    return jax.tree.map(leaf, grads_shapes)

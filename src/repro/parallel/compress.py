@@ -1,0 +1,57 @@
+"""Gradient compression: blockwise int8 quantization with error feedback.
+
+The software analogue of FRED's in-network traffic halving: where FRED's
+R-µswitches halve All-Reduce injection bytes, EF-int8 quarters the
+cross-pod payload (vs bf16) at equal convergence (error feedback keeps the
+quantization bias out of the gradient estimate — Seide et al. 2014,
+Karimireddy et al. 2019).
+
+The Pallas kernel in ``repro.kernels.quant8`` implements the same math
+with VMEM tiling for the TPU path; this module is its jnp reference and
+the production fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def quantize(x: jnp.ndarray, block: int = BLOCK
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n,) → (q int8 (n,), scale fp32 (ceil(n/block),))."""
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n], scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               block: int = BLOCK) -> jnp.ndarray:
+    n = q.shape[0]
+    pad = (-n) % block
+    qf = jnp.pad(q, (0, pad)).reshape(-1, block).astype(jnp.float32)
+    x = qf * scale[:, None]
+    return x.reshape(-1)[:n]
+
+
+def ef_quantize(x: jnp.ndarray, block: int = BLOCK):
+    """Error-feedback quantization: returns (q, scale, error) where
+    error = x − dequantize(q, scale) is carried to the next step."""
+    q, scale = quantize(x, block)
+    err = x.astype(jnp.float32) - dequantize(q, scale, block)
+    return q, scale, err
+
+
+def compression_ratio(n: int, block: int = BLOCK,
+                      wire_dtype_bytes: int = 2) -> float:
+    """Wire-byte ratio vs an uncompressed transfer of the same payload."""
+    comp = n * 1 + (-(-n // block)) * 4
+    return comp / (n * wire_dtype_bytes)

@@ -1,0 +1,42 @@
+"""Per-cell parallelization policy (the "compiler" of this framework).
+
+The paper's point is that the fabric should let the compiler pick whatever
+parallelization strategy compute/memory prefers (Sec. I, Fig. 2).  This
+module is that policy layer for the JAX runtime: given (arch × shape × mesh)
+it returns the ParallelConfig/OptimConfig the step builders use.
+
+Defaults are the *paper-faithful hierarchical* schedule; the dry-run records
+these, and §Perf hillclimbs override via ``pcfg_overrides``.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.train.optim import OptimConfig
+
+
+def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    pcfg = ParallelConfig()
+    ocfg = OptimConfig()
+
+    # --- optimizer memory modes ---------------------------------------------
+    # arctic-480b: 469B expert params; fp32 master+moments (12B/param) cannot
+    # fit 256×16GB.  8-bit moments + no master (6B/param incl. grads) fits.
+    if cfg.name == "arctic-480b":
+        ocfg = OptimConfig(master=False, moments_dtype="int8")
+    elif cfg.name in ("qwen3-32b", "llava-next-34b", "mixtral-8x7b"):
+        # 30-50B: master fp32 is fine, keep moments bf16 to halve opt state
+        ocfg = OptimConfig(master=True, moments_dtype="bfloat16")
+
+    # --- remat ---------------------------------------------------------------
+    # full remat for all train cells: at 1M tokens/step the saved-dot memory
+    # of 'block' exceeds HBM for most archs; the recompute shows up honestly
+    # in the HLO-vs-model FLOP ratio of §Roofline.
+    if shape.kind == "train":
+        pcfg = pcfg.replace(remat="full")
+
+    # --- attention chunking ---------------------------------------------------
+    if shape.seq_len >= 32_768:
+        pcfg = pcfg.replace(attn_q_chunk=512, attn_k_chunk=1024)
+
+    return pcfg, ocfg

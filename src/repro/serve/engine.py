@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+A production-shaped loop on top of ``transformer.prefill``/``decode_step``:
+requests are admitted up to the configured batch, prompts padded to a
+common length and prefetched into the shared KV state, then decode steps
+run for the whole batch with per-sequence stop handling and temperature /
+top-k sampling.  Used by ``examples/serve_batch.py`` and the serving tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ParallelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    stop_token: Optional[int] = None
+    # filled by the engine
+    output: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    cache_len: int = 512
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig,
+                 pcfg: Optional[ParallelConfig] = None,
+                 ecfg: Optional[EngineConfig] = None):
+        self.params = params
+        self.cfg = cfg
+        self.pcfg = (pcfg or ParallelConfig()).replace(remat="none")
+        self.ecfg = ecfg or EngineConfig()
+        self._prefill = jax.jit(
+            lambda p, b: tfm.prefill(p, b, cfg, self.pcfg,
+                                     self.ecfg.cache_len))
+        self._decode = jax.jit(
+            lambda p, t, s: tfm.decode_step(p, t, s, cfg, self.pcfg))
+
+    def _sample(self, logits: jnp.ndarray, reqs: List[Request],
+                key) -> np.ndarray:
+        logits = np.asarray(logits, np.float32)
+        out = np.zeros(len(reqs), np.int32)
+        for i, r in enumerate(reqs):
+            row = logits[i][:self.cfg.vocab_size]
+            if r.temperature <= 0:
+                out[i] = int(row.argmax())
+                continue
+            row = row / r.temperature
+            if r.top_k:
+                kth = np.partition(row, -r.top_k)[-r.top_k]
+                row = np.where(row < kth, -np.inf, row)
+            p = np.exp(row - row.max())
+            p /= p.sum()
+            out[i] = int(np.random.default_rng(
+                (int(jax.random.key_data(key)[0]), r.uid)).choice(len(p), p=p))
+        return out
+
+    def run_batch(self, requests: List[Request], seed: int = 0
+                  ) -> List[Request]:
+        """Serve one admission batch to completion."""
+        if len(requests) > self.ecfg.max_batch:
+            raise ValueError("admit at most max_batch requests")
+        t0 = time.perf_counter()
+        key = jax.random.PRNGKey(seed)
+        B = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+
+        outs: List[List[int]] = [[] for _ in requests]
+        done = np.zeros(B, bool)
+        max_new = max(r.max_new_tokens for r in requests)
+        next_tok = self._sample(logits, requests, key)
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if not done[i]:
+                    outs[i].append(int(next_tok[i]))
+                    if (r.stop_token is not None and
+                            next_tok[i] == r.stop_token) or \
+                            len(outs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, state = self._decode(
+                self.params, jnp.asarray(next_tok)[:, None], state)
+            key = jax.random.fold_in(key, step)
+            next_tok = self._sample(logits, requests, key)
+
+        dt = time.perf_counter() - t0
+        for r, o in zip(requests, outs):
+            r.output = o
+            r.latency_s = dt
+        return requests

@@ -1,0 +1,172 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000420/
+        MANIFEST.json        # treedef, shapes, dtypes, crc32s, extras
+        leaf_00000.npy ...   # one file per pytree leaf (QTensor leaves
+                             # stored as their q/scale arrays)
+        COMMIT               # written last — a checkpoint without COMMIT
+                             # is incomplete and ignored (atomicity)
+
+Fault-tolerance contract:
+  * writes go to ``step_X.tmp`` then ``rename`` (atomic on POSIX);
+  * ``latest_step`` skips uncommitted/corrupt checkpoints;
+  * ``AsyncCheckpointer`` snapshots device arrays to host, then writes on a
+    background thread — the train loop never blocks on disk;
+  * ``restore`` re-shards every leaf onto the *current* mesh via
+    ``jax.device_put`` with target shardings — restoring onto a different
+    device count (elastic restart) is the same code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't natively (de)serialize bfloat16 — store as a uint16 view and
+# record the logical dtype in the manifest
+_VIEW_DTYPES = {"bfloat16": np.uint16}
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str | Path, tree: Any, *, step: int,
+         extras: Optional[Dict[str, Any]] = None) -> Path:
+    """Synchronous atomic save.  Returns the committed directory."""
+    root = Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [],
+        "extras": extras or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if logical_dtype in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[logical_dtype])
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr, allow_pickle=False)
+        manifest["leaves"].append({
+            "file": fname, "shape": list(arr.shape),
+            "dtype": logical_dtype,
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        })
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    (tmp / "COMMIT").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(path: str | Path) -> Optional[int]:
+    root = Path(path)
+    if not root.exists():
+        return None
+    steps = []
+    for d in root.iterdir():
+        if d.name.startswith("step_") and not d.name.endswith(".tmp") \
+                and (d / "COMMIT").exists():
+            try:
+                steps.append(int(d.name[5:]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore(path: str | Path, target_tree: Any, *, step: Optional[int] = None,
+            shardings: Any = None, verify: bool = True
+            ) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional matching pytree of NamedShardings — leaves are
+    device_put directly to their (possibly different-mesh) destination,
+    which is the whole elastic-restart story.
+    """
+    root = Path(path)
+    step = step if step is not None else latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+
+    leaves, treedef = _flatten_with_paths(target_tree)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, target expects "
+            f"{len(leaves)} — architecture mismatch")
+    shard_leaves = (jax.tree.flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+
+    out = []
+    for i, meta in enumerate(manifest["leaves"]):
+        arr = np.load(d / meta["file"], allow_pickle=False)
+        if verify:
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"crc mismatch in {meta['file']}")
+        if meta["dtype"] in _VIEW_DTYPES:
+            arr = arr.view(ml_dtypes.bfloat16)
+        if shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), manifest["extras"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host immediately, write on a worker thread."""
+
+    def __init__(self, path: str | Path, keep: int = 3):
+        self.path = Path(path)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[int] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree: Any, *, step: int,
+             extras: Optional[Dict[str, Any]] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save(self.path, host_tree, step=step, extras=extras)
+            self.last_committed = step
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.name[5:]) for d in self.path.iterdir()
+            if d.name.startswith("step_") and (d / "COMMIT").exists())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.path / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,48 @@
+"""Elastic scaling: resume a run on a different device count / mesh.
+
+Checkpoints store *logical* (unsharded) arrays (see ``checkpoint``), so
+elasticity is a restore-time concern: build the new mesh, derive the new
+shardings from the same Ruleset rules, and ``device_put`` each leaf to its
+new layout.  Batch-divisibility is re-validated and the data pipeline's
+shard count updated; everything else (optimizer state, step counter) is
+mesh-independent by construction.
+
+This is the recovery path for node failures at scale: drop to a smaller
+healthy mesh, restore, continue; grow back later the same way.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.models.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.parallel.steps import CellSetup, make_train_setup
+from repro.train import checkpoint as ckpt
+from repro.train.optim import OptimConfig
+
+
+def validate_shape_for_mesh(shape: ShapeConfig, mesh) -> None:
+    total = 1
+    for n in mesh.shape.values():
+        total *= n
+    if shape.global_batch % mesh.shape.get("data", 1):
+        raise ValueError(
+            f"global batch {shape.global_batch} not divisible by data axis "
+            f"{mesh.shape.get('data')} on the new mesh")
+
+
+def resume_on_mesh(checkpoint_dir: str, cfg: ModelConfig, shape: ShapeConfig,
+                   new_mesh, pcfg: Optional[ParallelConfig] = None,
+                   ocfg: Optional[OptimConfig] = None,
+                   step: Optional[int] = None) -> Tuple[CellSetup, Any, int]:
+    """Build the setup for ``new_mesh`` and restore state onto it.
+
+    Returns (setup, train_state, resumed_step)."""
+    validate_shape_for_mesh(shape, new_mesh)
+    setup = make_train_setup(cfg, shape, new_mesh, pcfg, ocfg)
+    state, extras = ckpt.restore(checkpoint_dir, setup.state_shapes,
+                                 step=step,
+                                 shardings=setup.state_shardings)
+    return setup, state, int(extras.get("step", 0))

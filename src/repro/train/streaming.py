@@ -1,0 +1,158 @@
+"""Weight-streaming execution mode (paper Sec. III-A, Cerebras-style).
+
+When the model exceeds device memory, parameters live in *host* memory
+(the wafer paper's off-chip DRAM behind CXL controllers) and stream to the
+device(s) one layer at a time:
+
+  forward:   for each layer l: H2D(params_l) → fwd_l (activations saved)
+  backward:  for each layer l (reverse): H2D(params_l) → vjp_l
+             → D2H(grads_l) → host optimizer update (the paper's
+             "lightweight near-storage core updates the model", so
+             optimizer state never crosses the I/O link)
+
+On real hardware the H2D of layer l+1 overlaps the compute of layer l via
+double buffering (``jax.device_put`` is async); this CPU container executes
+the same schedule synchronously.  The FRED connection: the *sustainable
+stream rate* is exactly what `core.meshnet.io_linerate_factor` vs
+`core.fabric` model — the mesh hotspot throttles this loop to 0.65× line
+rate, FRED runs it at 1.0 (EXPERIMENTS.md §Fig10).
+
+``stream_grads`` is verified bit-for-bit (up to dtype) against the
+monolithic ``jax.grad`` path in tests/test_streaming.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.models.modules import rms_norm, softmax_cross_entropy, split
+from repro.models.layers import apply_attn_block
+from repro.models.ssm import mamba2_forward
+from repro.train.optim import OptimConfig
+
+
+# --------------------------------------------------------------------------
+# layer-granular forward/backward with host-resident parameters
+# --------------------------------------------------------------------------
+
+class HostParams:
+    """Parameters as host numpy arrays, sliced per layer for streaming."""
+
+    def __init__(self, params: Any, n_layers: int):
+        self.n_layers = n_layers
+        # writable copies: the near-storage optimizer updates in place
+        self.host = jax.tree.map(
+            lambda x: np.array(jax.device_get(x), copy=True), params)
+
+    def layer(self, i: int):
+        """Device copy of layer i's block params (the H2D stream)."""
+        blocks = self.host["blocks"]
+        return jax.tree.map(lambda a: jnp.asarray(a[i]), blocks)
+
+    def top(self):
+        rest = {k: v for k, v in self.host.items() if k != "blocks"}
+        return jax.tree.map(jnp.asarray, rest)
+
+    def apply_grad_update(self, i: Optional[int], grads, update_fn):
+        """Near-storage optimizer: update host weights in place.
+        ``i``: layer index or None for the non-block params."""
+        if i is None:
+            top = {k: v for k, v in self.host.items() if k != "blocks"}
+            self.host.update(jax.tree.map(update_fn, top, grads))
+        else:
+            layer_host = jax.tree.map(lambda a: a[i], self.host["blocks"])
+            new_layer = jax.tree.map(update_fn, layer_host, grads)
+            def write(dst, src):
+                dst[i] = src
+                return dst
+            self.host["blocks"] = jax.tree.map(write, self.host["blocks"],
+                                               new_layer)
+
+
+def _block_fwd(cfg: ModelConfig, pcfg: ParallelConfig):
+    """One decoder block as a pure fn of (layer_params, x)."""
+    def f(bp, x):
+        if cfg.family in ("ssm", "hybrid"):
+            hin = rms_norm(x, bp["ln"], cfg.norm_eps)
+            return x + mamba2_forward(bp["ssm"], hin, cfg)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        y, _, _, _ = apply_attn_block(bp, cfg, pcfg, x, positions=positions,
+                                      mode="train")
+        return y
+    return jax.jit(f)
+
+
+def stream_forward(hp: HostParams, batch, cfg: ModelConfig,
+                   pcfg: ParallelConfig) -> Tuple[jnp.ndarray, List]:
+    """Layer-streaming forward; returns (loss, saved boundary activations)."""
+    top = hp.top()
+    x = jnp.take(top["embed"], batch["tokens"], axis=0)
+    block = _block_fwd(cfg, pcfg)
+    acts = [x]
+    for i in range(hp.n_layers):
+        x = block(hp.layer(i), x)          # H2D stream of layer i
+        acts.append(x)
+    loss = _head_loss(top, x, batch, cfg)
+    return loss, acts
+
+
+def _head_loss(top, x, batch, cfg):
+    x = rms_norm(x, top["final_norm"], cfg.norm_eps)
+    head = top["embed"].T if cfg.tie_embeddings else top["lm_head"]
+    logits = x @ head
+    loss, _ = softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return loss
+
+
+def stream_grads(hp: HostParams, batch, cfg: ModelConfig,
+                 pcfg: ParallelConfig):
+    """Streaming backward: grads computed layer-by-layer, streamed to host.
+
+    Returns (loss, top_grads, layer_grads_list[host]) — layer weights are
+    fetched a second time during backward, exactly the paper's 'model
+    loaded at least twice per iteration' accounting."""
+    loss_and_acts = stream_forward(hp, batch, cfg, pcfg)
+    loss, acts = loss_and_acts
+    top = hp.top()
+
+    # head + final-norm grads, and the cotangent entering the last block
+    def head_fn(top_p, x_last):
+        return _head_loss(top_p, x_last, batch, cfg)
+    (loss_v, (g_top, g_x)) = (loss, jax.grad(head_fn, argnums=(0, 1))(
+        top, acts[-1]))
+
+    block = _block_fwd(cfg, pcfg)
+    layer_grads: List[Any] = [None] * hp.n_layers
+    for i in reversed(range(hp.n_layers)):
+        bp = hp.layer(i)                    # second H2D stream
+        _, vjp = jax.vjp(lambda p, x: block(p, x), bp, acts[i])
+        g_bp, g_x = vjp(g_x)
+        layer_grads[i] = jax.tree.map(
+            lambda a: np.asarray(jax.device_get(a)), g_bp)  # D2H stream
+
+    # embedding grad from the input gather
+    def embed_fn(emb, gx):
+        return jnp.sum(jnp.take(emb, batch["tokens"], axis=0) * gx)
+    g_embed_in = jax.grad(embed_fn)(top["embed"], g_x)
+    g_top["embed"] = g_top["embed"] + g_embed_in
+    return loss_v, g_top, layer_grads
+
+
+def stream_train_step(hp: HostParams, batch, cfg, pcfg, lr: float = 1e-3):
+    """One full weight-streaming SGD step with near-storage update."""
+    loss, g_top, layer_grads = stream_grads(hp, batch, cfg, pcfg)
+    upd = lambda w, g: (np.asarray(w) - lr * np.asarray(jax.device_get(g))
+                        ).astype(np.asarray(w).dtype)
+    for i, g in enumerate(layer_grads):
+        hp.apply_grad_update(i, g, upd)
+    hp.apply_grad_update(None, g_top, upd)
+    return float(loss)

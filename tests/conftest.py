@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 device (the dry-run sets its own flags; multi-device
+tests spawn subprocesses)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

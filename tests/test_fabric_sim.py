@@ -1,0 +1,162 @@
+"""Mesh/FRED fabric models + end-to-end simulator vs the paper's numbers."""
+
+import pytest
+
+from repro.core.calibrate import CALIBRATED, PAPER_SPEEDUPS, simulate_speedups
+from repro.core.fabric import CONFIGS, FredFabric
+from repro.core.meshnet import MeshFabric
+from repro.core.placement import Strategy, fred_placement, mesh_placement, placement_groups
+from repro.core.simulator import Simulator, compare
+from repro.core.workloads import paper_workloads, fig2_strategies
+
+
+# --------------------------------------------------------------------------
+# mesh model (Sec. III / VI-B2)
+# --------------------------------------------------------------------------
+
+def test_mesh_io_controllers_is_18():
+    assert MeshFabric().n_io_controllers() == 18   # Table IV baseline
+
+
+def test_mesh_hotspot_formula():
+    m = MeshFabric()
+    assert m.io_hotspot_load() == 9                      # (2·5−1)
+    assert m.io_linerate_factor() == pytest.approx(750 / 1152, rel=1e-3)
+
+
+def test_xy_routing():
+    m = MeshFabric()
+    assert len(m.xy_links(0, 0)) == 0
+    assert len(m.xy_links(0, 3)) == 3          # same row
+    assert len(m.xy_links(0, 19)) == 3 + 4     # manhattan distance
+
+
+def test_wafer_wide_bw_matches_paper():
+    # Sec. VIII: corner NPUs limit wafer-wide AR to 2 links = 1.5 TB/s
+    assert MeshFabric().wafer_wide_allreduce_bw() == pytest.approx(1.5e12)
+
+
+# --------------------------------------------------------------------------
+# FRED fabric (Sec. VIII microbenchmark numbers)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,expected", [
+    ("FRED-A", 1.875e12),   # 375 + 4·375 GB/s hierarchical analysis
+    ("FRED-B", 1.5e12),     # L1→L2 line rate, in-network
+    ("FRED-C", 3e12),       # NPU-L1 line rate
+    ("FRED-D", 3e12),
+])
+def test_wafer_wide_effective_bw(cfg, expected):
+    fab = FredFabric(CONFIGS[cfg])
+    group = list(range(20))
+    assert fab.effective_npu_bw(group) == pytest.approx(expected, rel=1e-6)
+
+
+def test_dp_stride_effective_bw_fred_a():
+    """MP(2)-DP(5)-PP(2): DP peers land under different L1s; L1→L2 shared
+    by 4 concurrent DP groups → FRED-A eff = 375 GB/s (Sec. VIII)."""
+    fab = FredFabric(CONFIGS["FRED-A"])
+    group = [0, 4, 8, 12, 16]
+    assert fab.effective_npu_bw(group, concurrent_groups=4) == \
+        pytest.approx(375e9, rel=1e-6)
+
+
+def test_mp2_same_time_across_configs():
+    """dim(MP)=2: endpoint and in-network traffic coincide, and peers are
+    under one L1 — all FRED variants equal (Sec. VIII GPT-3 discussion)."""
+    times = []
+    for name in ("FRED-A", "FRED-B", "FRED-C", "FRED-D"):
+        fab = FredFabric(CONFIGS[name])
+        times.append(fab.collective_time("all_reduce", [0, 1], 1e6))
+    assert max(times) == pytest.approx(min(times), rel=0.35)
+    assert times[2] == pytest.approx(times[3], rel=1e-6)  # C == D exactly
+
+
+def test_in_network_halves_traffic():
+    from repro.core.flows import (endpoint_traffic_bytes,
+                                  innetwork_traffic_bytes)
+    n, D = 20, 1e9
+    ratio = endpoint_traffic_bytes("all_reduce", n, D) / \
+        innetwork_traffic_bytes("all_reduce", n, D)
+    assert ratio == pytest.approx(2 * (n - 1) / n)   # ≈2× (Abstract)
+
+
+def test_fred_io_line_rate():
+    assert FredFabric(CONFIGS["FRED-C"]).io_linerate_factor() == 1.0
+    assert MeshFabric().io_linerate_factor() < 0.66
+
+
+# --------------------------------------------------------------------------
+# placement
+# --------------------------------------------------------------------------
+
+def test_fred_placement_mp_consecutive():
+    st = Strategy(4, 3, 2)
+    pl = fred_placement(st)
+    assert len(set(pl.values())) == st.n_workers     # bijection
+    for grp in st.mp_groups():
+        ids = sorted(pl[w] for w in grp)
+        assert ids == list(range(ids[0], ids[0] + len(ids)))  # consecutive
+
+
+def test_mesh_placement_bijection():
+    st = Strategy(5, 2, 2)
+    pl = mesh_placement(st, 5, 4)
+    assert len(set(pl.values())) == 20
+
+
+# --------------------------------------------------------------------------
+# end-to-end simulator vs the paper (Fig. 10)
+# --------------------------------------------------------------------------
+
+def test_speedup_structure():
+    sp = simulate_speedups(CALIBRATED["compute_efficiency"],
+                           CALIBRATED["mesh_step_overhead"],
+                           CALIBRATED["fred_step_overhead"])
+    for w, row in sp.items():
+        assert row["FRED-C"] >= 1.0
+        assert row["FRED-D"] >= row["FRED-C"] * 0.999   # D ≥ C always
+    # streaming workloads: C == D (paper Sec. VIII)
+    assert sp["GPT-3"]["FRED-C"] == pytest.approx(sp["GPT-3"]["FRED-D"])
+    assert sp["Transformer-1T"]["FRED-C"] == \
+        pytest.approx(sp["Transformer-1T"]["FRED-D"])
+
+
+def test_speedups_within_band_of_paper():
+    """Calibrated reproduction: every cell within a ×[0.6, 1.9] band of the
+    paper's number (exact ASTRA-SIM inputs are unpublished; residuals are
+    analyzed in EXPERIMENTS.md §Fig10)."""
+    sp = simulate_speedups(CALIBRATED["compute_efficiency"],
+                           CALIBRATED["mesh_step_overhead"],
+                           CALIBRATED["fred_step_overhead"])
+    for w, row in PAPER_SPEEDUPS.items():
+        for cfg, target in row.items():
+            ratio = sp[w][cfg] / target
+            assert 0.6 < ratio < 1.9, f"{w} {cfg}: {sp[w][cfg]} vs {target}"
+
+
+def test_breakdown_nonnegative_and_exposed_types():
+    for w in paper_workloads():
+        for fab, br in compare(w).items():
+            d = br.as_dict()
+            assert all(v >= 0 for v in d.values())
+            if w.execution == "streaming":
+                assert d["dp"] == 0.0   # grads reduce toward I/O in-fabric
+
+
+def test_fig2_strategy_sweep_runs():
+    from repro.core.workloads import transformer
+    sim = Simulator("baseline")
+    per_sample = []
+    for st in fig2_strategies():
+        # Fig. 2 uses the per-sequence sample reading (see workloads.py)
+        w = transformer("T17B", 78, 4256, 1024, st, "stationary",
+                        token_samples=False)
+        per_sample.append(sim.run(w).total / w.minibatch)
+    assert all(t > 0 for t in per_sample)
+    # Fig. 2's core observation, normalized per sample (strategies process
+    # different minibatches): MP(20)'s wafer-wide per-layer ARs make it
+    # slower per sample than MP(5)-DP(4) despite better compute efficiency
+    mp20 = per_sample[0]
+    mp5dp4 = per_sample[2]
+    assert mp20 > mp5dp4

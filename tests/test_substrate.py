@@ -1,0 +1,239 @@
+"""Checkpointing, data pipeline, weight streaming, serving, configs."""
+
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, all_configs, cells, get_config
+from repro.models import transformer as tfm
+from repro.models.config import SHAPES, ParallelConfig, ShapeConfig
+from repro.models.modules import split
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, PrefetchIterator, SyntheticLM
+from repro.train.streaming import HostParams, stream_grads, stream_train_step
+
+KEY = jax.random.PRNGKey(0)
+PCFG = ParallelConfig(remat="none")
+
+
+# --------------------------------------------------------------------------
+# configs / registry
+# --------------------------------------------------------------------------
+
+def test_registry_complete():
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+    spec = {
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }
+    for name, (L, d, H, kv, ff, V) in spec.items():
+        c = cfgs[name]
+        assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V), name
+
+
+def test_cell_grid_is_40_with_7_skips():
+    rows = list(cells())
+    assert len(rows) == 40
+    skipped = [(a, s.name) for a, _, s, ok, _ in rows if not ok]
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_long = [a for a, _, s, ok, _ in rows
+                     if ok and s.name == "long_500k"]
+    assert sorted(runnable_long) == ["mamba2-1.3b", "mixtral-8x7b",
+                                     "zamba2-2.7b"]
+
+
+def test_vocab_padding_divisible_by_16():
+    for c in all_configs().values():
+        assert c.padded_vocab % 16 == 0
+        assert c.padded_vocab >= c.vocab_size
+        # flattened qkv dims divisible by 16 (TP over model=16)
+        if c.n_heads:
+            assert (c.n_heads * c.head_dim) % 16 == 0
+            assert (c.n_kv_heads * c.head_dim) % 16 == 0
+        if c.d_ff:
+            assert c.d_ff % 16 == 0
+
+
+def test_mesh_fred_device_order():
+    from repro.launch.mesh import fred_device_order
+    order = fred_device_order(24, mp=4, dp=3, pp=2)
+    # MP-consecutive: devices of an MP group are contiguous
+    for d in range(3):
+        for p in range(2):
+            ids = sorted(order[m, d, p] for m in range(4))
+            assert ids == list(range(ids[0], ids[0] + 4))
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_atomicity():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, step=3, extras={"step": 3})
+        assert ckpt.latest_step(d) == 3
+        # an uncommitted dir must be ignored
+        fake = Path(d) / "step_00000009"
+        fake.mkdir()
+        assert ckpt.latest_step(d) == 3
+        restored, extras = ckpt.restore(d, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert extras["step"] == 3
+
+
+def test_checkpoint_crc_detects_corruption():
+    tree = {"a": jnp.arange(100.0)}
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save(d, tree, step=1)
+        leaf = path / "leaf_00000.npy"
+        raw = bytearray(leaf.read_bytes())
+        raw[-1] ^= 0xFF
+        leaf.write_bytes(bytes(raw))
+        with pytest.raises(IOError):
+            ckpt.restore(d, tree)
+
+
+def test_async_checkpointer_and_gc():
+    tree = {"a": jnp.ones(16)}
+    with tempfile.TemporaryDirectory() as d:
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ac.save(tree, step=s, extras={"step": s})
+        ac.wait()
+        ac._gc()
+        assert ckpt.latest_step(d) == 4
+        steps = sorted(int(p.name[5:]) for p in Path(d).iterdir()
+                       if p.name.startswith("step_"))
+        assert len(steps) <= 2
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=101, seq_len=16, global_batch=4)
+    src = SyntheticLM(cfg)
+    b0 = src.batch(5)
+    b1 = src.batch(5)
+    np.testing.assert_array_equal(b0["tokens"], b1["tokens"])
+    it = PrefetchIterator(src, start_step=5)
+    got = next(it)
+    it.close()
+    np.testing.assert_array_equal(got["tokens"], b0["tokens"])
+    assert it.state()["step"] == 6
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(vocab_size=64, seq_len=128, global_batch=8)
+    b = SyntheticLM(cfg).batch(0)
+    toks = b["tokens"]
+    match = (toks[:, 7:] == toks[:, :-7]).mean()
+    assert match > 0.2          # injected n-gram structure present
+
+
+# --------------------------------------------------------------------------
+# weight streaming
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b"])
+def test_streaming_grads_match_monolithic(arch):
+    cfg = get_config(arch).reduced()
+    params, _ = split(tfm.init(KEY, cfg))
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(KEY, 1),
+                                          (2, 16), 0, cfg.vocab_size)}
+    loss_ref, grads_ref = jax.value_and_grad(
+        lambda p: tfm.loss_fn(p, batch, cfg, PCFG)[0])(params)
+    hp = HostParams(params, cfg.num_layers)
+    loss_s, g_top, layer_grads = stream_grads(hp, batch, cfg, PCFG)
+    assert float(loss_s) == pytest.approx(float(loss_ref), rel=1e-5)
+    for i in range(cfg.num_layers):
+        ref_i = jax.tree.map(lambda a: np.asarray(a[i]), grads_ref["blocks"])
+        for a, b in zip(jax.tree.leaves(ref_i),
+                        jax.tree.leaves(layer_grads[i])):
+            np.testing.assert_allclose(np.asarray(a), b, atol=5e-6, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(grads_ref["embed"]),
+                               np.asarray(g_top["embed"]), atol=5e-6,
+                               rtol=1e-4)
+
+
+def test_streaming_training_decreases_loss():
+    cfg = get_config("llama3.2-1b").reduced()
+    params, _ = split(tfm.init(KEY, cfg))
+    hp = HostParams(params, cfg.num_layers)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(KEY, 1),
+                                          (2, 16), 0, cfg.vocab_size)}
+    losses = [stream_train_step(hp, batch, cfg, PCFG, lr=5e-3)
+              for _ in range(4)]
+    assert losses[-1] < losses[0]
+
+
+# --------------------------------------------------------------------------
+# serving engine
+# --------------------------------------------------------------------------
+
+def test_engine_serves_batch_greedy_matches_decode():
+    from repro.serve.engine import Engine, EngineConfig, Request
+    cfg = get_config("llama3.2-1b").reduced()
+    params, _ = split(tfm.init(KEY, cfg))
+    eng = Engine(params, cfg, ecfg=EngineConfig(max_batch=4, cache_len=64))
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    done = eng.run_batch(reqs)
+    for r in done:
+        assert len(r.output) == 6
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+    # greedy decode is deterministic
+    reqs2 = [Request(uid=i, prompt=p, max_new_tokens=6)
+             for i, p in enumerate(prompts)]
+    done2 = eng.run_batch(reqs2)
+    assert [r.output for r in done] == [r.output for r in done2]
+
+
+# --------------------------------------------------------------------------
+# trainer loop (fast end-to-end: init → train → checkpoint → resume)
+# --------------------------------------------------------------------------
+
+def test_trainer_runs_and_resumes():
+    from repro.launch.mesh import make_mesh
+    from repro.train.train_loop import Trainer, TrainerConfig
+    cfg = get_config("llama3.2-1b").reduced()
+    shape = ShapeConfig("t", "train", 32, 4)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(steps=6, log_every=3, checkpoint_every=3,
+                             checkpoint_dir=d)
+        tr = Trainer(cfg, shape, mesh, PCFG, tcfg=tcfg)
+        tr.run()
+        assert ckpt.latest_step(d) == 6
+        losses = [h["loss"] for h in tr.history]
+        assert losses[-1] < losses[0] + 0.1
+        # resume continues from step 6
+        tcfg2 = TrainerConfig(steps=8, log_every=2, checkpoint_every=100,
+                              checkpoint_dir=d)
+        tr2 = Trainer(cfg, shape, mesh, PCFG, tcfg=tcfg2)
+        tr2.run()
+        assert tr2.step == 8
