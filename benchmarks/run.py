@@ -139,6 +139,41 @@ def bench_fig10():
 
 
 # --------------------------------------------------------------------------
+# sweep — strategy/topology co-exploration (core/sweep.py)
+# --------------------------------------------------------------------------
+
+def bench_sweep():
+    from repro.core.sweep import transformer_17b_sweep, to_csv_rows
+
+    out_box = []
+
+    def run():
+        out_box[:] = [transformer_17b_sweep(n) for n in (16, 20, 32)]
+    us = _time(run, iters=1)
+    sweeps = out_box
+    total = sum(len(s) for s in sweeps)
+    emit("sweep_t17b", us, f"points={total};wafers=16,20,32")
+    for n, res in zip((16, 20, 32), sweeps):
+        par = sorted((r for r in res if r.pareto),
+                     key=lambda r: (r.fabric, r.time_per_sample))
+        emit(f"sweep[{n}npus]", 0.0,
+             f"points={len(res)};pareto={len(par)}")
+        best = {}
+        for r in par:
+            best.setdefault(r.fabric, r)
+        for fab, r in sorted(best.items()):
+            emit(f"sweep[{n}npus|{fab}]", 0.0,
+                 f"best={r.strategy};shape={r.shape[0]}x{r.shape[1]};"
+                 f"t_per_sample_us={r.time_per_sample*1e6:.2f}")
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    from repro.core.sweep import CSV_HEADER
+    rows = [CSV_HEADER] + to_csv_rows([r for s in sweeps for r in s])
+    (out / "sweep_t17b.csv").write_text("\n".join(rows) + "\n")
+    emit("sweep[csv]", 0.0, f"artifacts/sweep_t17b.csv rows={len(rows)-1}")
+
+
+# --------------------------------------------------------------------------
 # Table III — FRED switch HW overhead
 # --------------------------------------------------------------------------
 
@@ -157,6 +192,16 @@ def bench_table3():
     emit("table3[total]", 0.0,
          f"area={total_area:.0f}mm2(paper 25195);power={total_power + 58:.0f}W"
          f"(paper 146.73, incl. 58W wiring)")
+    # shape-derived accounting (core/fabric.py): logical switch inventory
+    from repro.core.fabric import CONFIGS, FredFabric
+    for shape in ((5, 4), (8, 4), (4, 8)):
+        fab = FredFabric(CONFIGS["FRED-C"], n_groups=shape[0],
+                         group_size=shape[1])
+        acc = fab.hw_accounting()
+        inv = ";".join(f"FRED3({p})x{c}" for _l, p, c in
+                       fab.switch_inventory())
+        emit(f"table3[derived {shape[0]}x{shape[1]}]", 0.0,
+             f"{inv};area={acc['area_mm2']:.0f}mm2;power={acc['power_w']:.1f}W")
 
 
 # --------------------------------------------------------------------------
@@ -241,6 +286,7 @@ BENCHES = {
     "fig4": bench_fig4,
     "fig9": bench_fig9,
     "fig10": bench_fig10,
+    "sweep": bench_sweep,
     "table3": bench_table3,
     "routing": bench_routing,
     "collectives": bench_collectives,
@@ -253,6 +299,10 @@ def main() -> None:
     ap.add_argument("--only", type=str, default="")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown benchmark(s) {unknown}; "
+                 f"choose from {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()

@@ -1,0 +1,69 @@
+"""Strategy/topology co-exploration demo (core/sweep.py).
+
+Sweeps every (mp, dp, pp) strategy and wafer shape for a workload at a
+given NPU count on baseline-mesh and FRED fabrics, then prints the
+per-fabric Pareto front on (time-per-sample, parameter-bytes-per-NPU) —
+the question the paper's Fig. 2 asks for one fixed wafer, answered for
+arbitrary ones.
+
+    PYTHONPATH=src python examples/topology_sweep.py [--npus 20]
+        [--fabrics baseline,FRED-C,FRED-D] [--workload t17b|gpt3]
+        [--check-routing] [--csv out.csv]
+"""
+
+import argparse
+
+from repro.core.placement import Strategy
+from repro.core.sweep import (CSV_HEADER, sweep, to_csv_rows,
+                              transformer_17b)
+from repro.core.workloads import transformer
+
+
+def gpt3(strategy: Strategy):
+    return transformer("GPT-3", 96, 12288, 2048, strategy, "streaming")
+
+
+WORKLOADS = {"t17b": (transformer_17b, 78), "gpt3": (gpt3, 96)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--npus", type=int, default=20)
+    ap.add_argument("--fabrics", type=str, default="baseline,FRED-C,FRED-D")
+    ap.add_argument("--workload", choices=sorted(WORKLOADS), default="t17b")
+    ap.add_argument("--check-routing", action="store_true",
+                    help="verify conflict-free routing per FRED strategy")
+    ap.add_argument("--csv", type=str, default="",
+                    help="write the full sweep as CSV (schema: "
+                         "benchmarks/README.md)")
+    args = ap.parse_args()
+
+    workload_fn, n_layers = WORKLOADS[args.workload]
+    results = sweep(workload_fn, args.npus,
+                    fabrics=tuple(args.fabrics.split(",")),
+                    n_layers=n_layers, check_routing=args.check_routing)
+    print(f"{args.workload} on {args.npus} NPUs: {len(results)} sweep points")
+
+    for fabric in args.fabrics.split(","):
+        front = sorted((r for r in results
+                        if r.fabric == fabric and r.pareto),
+                       key=lambda r: r.time_per_sample)
+        print(f"\n{fabric} Pareto front "
+              f"(time/sample vs param bytes/NPU):")
+        for r in front:
+            route = ""
+            if r.routable is not None:
+                route = "  routes" if r.routable else "  CONFLICT"
+            print(f"  {str(r.strategy):22s} shape={r.shape[0]}x{r.shape[1]}"
+                  f"  t/sample={r.time_per_sample*1e6:9.2f} us"
+                  f"  params/NPU={r.param_bytes_per_npu/1e9:6.2f} GB{route}")
+
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write(CSV_HEADER + "\n")
+            fh.write("\n".join(to_csv_rows(results)) + "\n")
+        print(f"\nwrote {len(results)} rows to {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

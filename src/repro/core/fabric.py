@@ -1,22 +1,28 @@
 """FRED wafer-scale fabric: 2-level almost-fat-tree of FRED switches
 (paper Sec. VI, Fig. 8) and the four evaluation configs of Table IV.
 
-Topology: 20 NPUs in 5 L1 groups of 4, plus 18 I/O controllers spread
-across L1 switches; L2 spine connects L1s.  Almost-fat-tree: L1→L2 BW sums
-the *NPU* bandwidth only (I/O flows are bottlenecked by the 128 GB/s
-controllers anyway).
+Topology is parameterized: ``n_groups`` L1 groups of ``group_size`` NPUs,
+plus ``n_io`` I/O controllers spread across L1 switches; L2 spine connects
+L1s.  The paper's wafer is the default shape (5 groups of 4, 18 I/O).
+Almost-fat-tree: L1→L2 BW sums the *NPU* bandwidth only (I/O flows are
+bottlenecked by the 128 GB/s controllers anyway).
 
 Effective-bandwidth model: for a collective over ``group`` with in-network
 execution the per-NPU injection traffic is D (vs 2(n−1)/n·D endpoint); the
 sustained rate is the bottleneck of NPU→L1 BW and the per-flow share of
 L1→L2 BW — reproducing the paper's Sec. VIII microbenchmark numbers
 (1875 GB/s FRED-A, 3 TB/s FRED-C/D wafer-wide, 375 GB/s FRED-A DP, ...).
+
+HW accounting (Table III) is likewise derived from the shape: every L1
+switch is a FRED_3 with ``group_size`` NPU ports + its share of the I/O
+ports + uplink ports; the L2 spine switch aggregates the uplinks.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+import math
+from typing import Dict, List, Sequence, Tuple
 
 from .flows import endpoint_traffic_bytes, innetwork_traffic_bytes
 
@@ -32,10 +38,6 @@ class FredConfig:
     step_overhead: float = 4e-7       # per flow-step overhead (single fabric
                                       # traversal; no multi-hop protocol)
 
-    @property
-    def bisection(self) -> float:
-        return 5 * self.l1_l2_bw / 2 * 2    # 5 L1 uplinks, full duplex
-
 
 # Table IV configurations
 FRED_A = FredConfig("FRED-A", npu_l1_bw=3e12, l1_l2_bw=1.5e12, in_network=False)
@@ -49,15 +51,40 @@ CONFIGS = {c.name: c for c in (FRED_A, FRED_B, FRED_C, FRED_D)}
 @dataclasses.dataclass
 class FredFabric:
     config: FredConfig
-    n_npus: int = 20
-    npus_per_l1: int = 4
+    n_groups: int = 5                 # L1 switches
+    group_size: int = 4               # NPUs per L1 switch
+    n_io: int = 18                    # I/O controllers, spread across L1s
+
+    def __post_init__(self):
+        if self.n_groups < 1 or self.group_size < 1:
+            raise ValueError(f"fabric needs positive shape, got "
+                             f"{self.n_groups} groups of {self.group_size}")
+
+    @property
+    def n_npus(self) -> int:
+        return self.n_groups * self.group_size
+
+    @property
+    def npus_per_l1(self) -> int:
+        return self.group_size
 
     @property
     def n_l1(self) -> int:
-        return -(-self.n_npus // self.npus_per_l1)
+        return self.n_groups
+
+    @property
+    def bisection(self) -> float:
+        """Full-duplex spine bisection: one uplink per L1 group."""
+        return self.n_groups * self.config.l1_l2_bw / 2 * 2
 
     def l1_of(self, nid: int) -> int:
-        return nid // self.npus_per_l1
+        return nid // self.group_size
+
+    def io_per_group(self) -> List[int]:
+        """I/O controllers per L1 switch, spread as evenly as possible
+        (paper: 18 over 5 L1s → 4,4,4,3,3)."""
+        base, extra = divmod(self.n_io, self.n_groups)
+        return [base + (g < extra) for g in range(self.n_groups)]
 
     # ---- effective bandwidth --------------------------------------------------
     def _group_l1_span(self, group: Sequence[int]) -> Dict[int, int]:
@@ -135,5 +162,41 @@ class FredFabric:
         full line rate (Sec. III Metric 1)."""
         return 1.0
 
-    def io_stream_rate(self, n_io: int = 18) -> float:
-        return n_io * self.config.io_bw
+    def io_stream_rate(self, n_io: "int | None" = None) -> float:
+        return (self.n_io if n_io is None else n_io) * self.config.io_bw
+
+    # ---- Table III HW accounting (derived from the shape) ----------------------
+    def uplinks_per_l1(self) -> int:
+        """Physical uplink ports per L1 switch, at NPU-port width."""
+        return max(1, math.ceil(self.config.l1_l2_bw / self.config.npu_l1_bw))
+
+    def switch_inventory(self) -> List[Tuple[str, int, int]]:
+        """(level, ports, count) of the FRED switches this shape needs.
+
+        L1 switches carry ``group_size`` NPU ports, their share of the I/O
+        controllers, and the spine uplinks; the L2 spine switch aggregates
+        every L1's uplinks.  L1s with different I/O shares are distinct
+        port counts (the paper's FRED3(12)/FRED3(11) split on the default
+        wafer)."""
+        up = self.uplinks_per_l1()
+        by_ports: Dict[int, int] = {}
+        for io in self.io_per_group():
+            p = self.group_size + io + up
+            by_ports[p] = by_ports.get(p, 0) + 1
+        inv = [("L1", p, c) for p, c in sorted(by_ports.items(), reverse=True)]
+        inv.append(("L2", max(self.n_groups * up, 2), 1))
+        return inv
+
+    def hw_accounting(self, m: int = 3) -> Dict[str, float]:
+        """Aggregate area/power/µswitch count over the derived inventory
+        (FRED_m switches; paper Table III models m=3)."""
+        from .switch import FredSwitch, hw_overhead
+        total = {"area_mm2": 0.0, "power_w": 0.0, "microswitches": 0,
+                 "switches": 0}
+        for _level, ports, count in self.switch_inventory():
+            o = hw_overhead(FredSwitch.build(ports, m))
+            total["area_mm2"] += count * o["area_mm2"]
+            total["power_w"] += count * o["power_w"]
+            total["microswitches"] += count * o["microswitches"]
+            total["switches"] += count
+        return total

@@ -1,7 +1,8 @@
 """Baseline wafer-scale 2D-mesh network model (paper Sec. III, VI-B2).
 
-5×4 mesh of NPUs, 750 GB/s per link per direction, X-Y routing, I/O
-controllers (128 GB/s CXL) attached to border NPUs (corners get two).
+``rows``×``cols`` mesh of NPUs (paper evaluates 5×4), 750 GB/s per link per
+direction, X-Y routing, I/O controllers (128 GB/s CXL) attached to border
+NPUs (corners get two, or an explicit ``n_io`` override).
 Collectives use logical rings over the member NPUs routed X-Y, except the
 wafer-wide All-Reduce which uses the hierarchical 2D algorithm with two
 reverse-direction chunks [Kumar & Jouppi 2020] (Sec. VII-B).
@@ -18,7 +19,7 @@ The model exposes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 Link = Tuple[Tuple[int, int], Tuple[int, int]]   # ((r,c) -> (r,c))
 
@@ -32,10 +33,21 @@ class MeshFabric:
     latency_per_hop: float = 20e-9
     step_overhead: float = 8e-7       # per ring-step SW/protocol latency
                                       # (ASTRA-SIM-style NPU processing delay)
+    n_io: Optional[int] = None        # None → derived border placement
+
+    def __post_init__(self):
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError(f"mesh needs positive dims, got "
+                             f"{self.rows}x{self.cols}")
 
     @property
     def n(self) -> int:
         return self.rows * self.cols
+
+    def corner_degree(self) -> int:
+        """Links at a corner NPU — the wafer-wide All-Reduce bottleneck
+        (2 on a proper 2D mesh, 1 on a degenerate 1×N line)."""
+        return max((self.rows > 1) + (self.cols > 1), 1)
 
     def coord(self, nid: int) -> Tuple[int, int]:
         return divmod(nid, self.cols)
@@ -54,7 +66,10 @@ class MeshFabric:
         return out
 
     def n_io_controllers(self) -> int:
-        """Border NPUs get one controller; corners two (paper: 18 on 5×4)."""
+        """Border NPUs get one controller; corners two (paper: 18 on 5×4).
+        An explicit ``n_io`` overrides the derived placement."""
+        if self.n_io is not None:
+            return self.n_io
         total = 0
         for nid in self.border_npus():
             r, c = self.coord(nid)
@@ -92,10 +107,16 @@ class MeshFabric:
         return max(load.values()) if load else 0
 
     # ---- collectives -----------------------------------------------------------
+    def bisection_bw(self) -> float:
+        """Full-duplex bisection: cutting the longer dimension in half
+        crosses min(rows, cols) links (4 × 750 GB/s × 2 on the 5×4 wafer)."""
+        return 2 * min(self.rows, self.cols) * self.link_bw
+
     def wafer_wide_allreduce_bw(self) -> float:
         """Hierarchical 2D algorithm, 2 reverse chunks: bounded by corner
-        NPUs with 2 links ⇒ per-NPU effective BW = 2·link_bw (Sec. VIII)."""
-        return 2 * self.link_bw
+        NPUs ⇒ per-NPU effective BW = corner_degree·link_bw — 2·750 GB/s
+        on any proper 2D mesh (Sec. VIII)."""
+        return self.corner_degree() * self.link_bw
 
     def _ring_hops(self, ring: Sequence[int]) -> float:
         """Mean X-Y hop count between ring neighbours."""

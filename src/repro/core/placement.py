@@ -49,8 +49,15 @@ class Strategy:
         return f"MP({self.mp})-DP({self.dp})-PP({self.pp})"
 
 
-def fred_placement(strategy: Strategy) -> Dict[Worker, int]:
-    """worker → physical NPU id; MP consecutive, then PP, then DP."""
+def fred_placement(strategy: Strategy, n_npus: "int | None" = None
+                   ) -> Dict[Worker, int]:
+    """worker → physical NPU id; MP consecutive, then PP, then DP.
+
+    ``n_npus`` (when given) validates the strategy against a generalized
+    fabric capacity."""
+    if n_npus is not None and strategy.n_workers > n_npus:
+        raise ValueError(f"{strategy} needs {strategy.n_workers} NPUs, "
+                         f"fabric has {n_npus}")
     placement: Dict[Worker, int] = {}
     nid = 0
     for d in range(strategy.dp):
@@ -64,6 +71,9 @@ def fred_placement(strategy: Strategy) -> Dict[Worker, int]:
 def mesh_placement(strategy: Strategy, rows: int, cols: int
                    ) -> Dict[Worker, Tuple[int, int]]:
     """worker → (row, col); MP > PP > DP priority (baseline, Sec. VII-C)."""
+    if strategy.n_workers > rows * cols:
+        raise ValueError(f"{strategy} needs {strategy.n_workers} NPUs, "
+                         f"{rows}x{cols} mesh has {rows * cols}")
     placement: Dict[Worker, Tuple[int, int]] = {}
     nid = 0
     for d in range(strategy.dp):

@@ -173,6 +173,29 @@ def routable(switch: FredSwitch, flows: Sequence[Flow]) -> bool:
         return False
 
 
+def strategy_routable(strategy, n_ports: int, m: int = 3) -> bool:
+    """True iff every parallelism phase of ``strategy`` routes conflict-free
+    on a FRED_m(n_ports) switch under the MP-consecutive placement.
+
+    Generalized-shape entry point for the sweep engine: flows of ONE
+    parallelism type run at a time (they occur in different phases of the
+    training step — Sec. III Metric 4)."""
+    from .flows import all_reduce
+    from .placement import fred_placement, placement_groups
+
+    if strategy.n_workers > n_ports:
+        return False
+    if strategy.n_workers < 2:
+        return True
+    sw = FredSwitch.build(max(n_ports, 2), m)
+    groups = placement_groups(strategy, fred_placement(strategy, n_ports))
+    for kind in ("mp", "dp", "pp"):
+        flows = [all_reduce(g)[0][0] for g in groups[kind] if len(g) > 1]
+        if flows and not routable(sw, flows):
+            return False
+    return True
+
+
 # --------------------------------------------------------------------------
 # the paper's Fig. 7(j) example
 # --------------------------------------------------------------------------

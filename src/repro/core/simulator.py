@@ -24,7 +24,7 @@ input-load / MP / DP / PP / weight-stream times.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .fabric import FredFabric
 from .meshnet import MeshFabric
@@ -61,15 +61,36 @@ class Simulator:
     fabric_name: str                       # "baseline" | "FRED-A".."FRED-D"
     compute_efficiency: float = 0.45
     overlap_dp: bool = True
+    mesh_shape: Optional[Tuple[int, int]] = None   # (rows, cols); None → 5×4
+    fred_shape: Optional[Tuple[int, int]] = None   # (n_groups, group_size)
+    n_io: Optional[int] = None                     # None → derived / paper 18
+    collective_cache: Optional[dict] = None        # shared memo for sweeps
 
     def __post_init__(self):
         if self.fabric_name == "baseline":
-            self.mesh: Optional[MeshFabric] = MeshFabric()
+            kw = {} if self.mesh_shape is None else \
+                dict(rows=self.mesh_shape[0], cols=self.mesh_shape[1])
+            if self.n_io is not None:
+                kw["n_io"] = self.n_io
+            self.mesh: Optional[MeshFabric] = MeshFabric(**kw)
             self.fred: Optional[FredFabric] = None
         else:
             from .fabric import CONFIGS
+            if self.fabric_name not in CONFIGS:
+                raise ValueError(
+                    f"unknown fabric {self.fabric_name!r}; expected "
+                    f"'baseline' or one of {sorted(CONFIGS)}")
+            kw = {} if self.fred_shape is None else \
+                dict(n_groups=self.fred_shape[0],
+                     group_size=self.fred_shape[1])
+            if self.n_io is not None:
+                kw["n_io"] = self.n_io
             self.mesh = None
-            self.fred = FredFabric(CONFIGS[self.fabric_name])
+            self.fred = FredFabric(CONFIGS[self.fabric_name], **kw)
+
+    @property
+    def n_npus(self) -> int:
+        return self.mesh.n if self.mesh is not None else self.fred.n_npus
 
     # ---- fabric dispatch -------------------------------------------------------
     def _groups(self, strategy: Strategy):
@@ -77,15 +98,36 @@ class Simulator:
             pl = mesh_placement(strategy, self.mesh.rows, self.mesh.cols)
             ids = {w: r * self.mesh.cols + c for w, (r, c) in pl.items()}
         else:
-            ids = fred_placement(strategy)
+            ids = fred_placement(strategy, self.fred.n_npus)
         return placement_groups(strategy, ids)
+
+    def _fabric_tag(self):
+        """Physical identity of the fabric, so one collective_cache dict
+        can be shared across Simulators of different fabrics/shapes."""
+        if self.mesh is not None:
+            m = self.mesh
+            return ("mesh", m.rows, m.cols, m.link_bw, m.latency_per_hop,
+                    m.step_overhead)
+        c, f = self.fred.config, self.fred
+        return (c.name, f.n_groups, f.group_size, c.npu_l1_bw, c.l1_l2_bw,
+                c.in_network, c.switch_latency, c.step_overhead)
 
     def _coll_time(self, kind: str, group, nbytes: float,
                    concurrent: int) -> float:
+        if self.collective_cache is not None:
+            key = (self._fabric_tag(), kind, tuple(group), nbytes,
+                   concurrent)
+            hit = self.collective_cache.get(key)
+            if hit is not None:
+                return hit
         if self.mesh is not None:
-            return self.mesh.collective_time(kind, group, nbytes)
-        return self.fred.collective_time(kind, group, nbytes,
-                                         concurrent_groups=concurrent)
+            t = self.mesh.collective_time(kind, group, nbytes)
+        else:
+            t = self.fred.collective_time(kind, group, nbytes,
+                                          concurrent_groups=concurrent)
+        if self.collective_cache is not None:
+            self.collective_cache[key] = t
+        return t
 
     def _pp_time(self, nbytes: float) -> float:
         if self.mesh is not None:

@@ -1,0 +1,244 @@
+"""Strategy/topology sweep engine (LIBRA/WATOS-style co-exploration).
+
+The paper's core claim is that FRED stays efficient across *arbitrary*
+parallelization strategies; this module makes that explorable.  For a given
+NPU count it enumerates
+
+  * every valid (mp, dp, pp) 3D-parallel strategy (divisor triples, with
+    an optional utilization floor so near-full wafers count too — the
+    paper's Transformer-17B uses 18 of 20 NPUs), and
+  * every wafer shape realizing that NPU count: rows×cols meshes for the
+    baseline, n_groups×group_size almost-fat-trees for FRED,
+
+then runs :class:`repro.core.simulator.Simulator` over the cross-product.
+Collective times are memoized per (fabric, shape) — strategies share
+collective calls heavily (the same wafer-wide or per-group All-Reduce
+appears in many strategies), so the sweep is near-free beyond the first
+strategy per group shape.
+
+Reporting: :func:`pareto_front` extracts the strategies not dominated on
+(time-per-sample, parameter-bytes-per-NPU) — the throughput/memory
+trade-off DP replication buys — and :func:`to_csv_rows` emits the schema
+documented in ``benchmarks/README.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .placement import Strategy
+from .simulator import Breakdown, Simulator
+from .workloads import Workload, transformer
+
+FABRICS = ("baseline", "FRED-A", "FRED-B", "FRED-C", "FRED-D")
+
+
+# --------------------------------------------------------------------------
+# search spaces
+# --------------------------------------------------------------------------
+
+def factor_pairs(n: int) -> List[Tuple[int, int]]:
+    """(a, b) with a·b = n and a ≥ b (orientation is symmetric for both
+    fabric models)."""
+    out = []
+    b = 1
+    while b * b <= n:
+        if n % b == 0:
+            out.append((n // b, b))
+        b += 1
+    return out
+
+
+def mesh_shapes(n_npus: int) -> List[Tuple[int, int]]:
+    """rows×cols meshes realizing ``n_npus`` (degenerate 1×N included —
+    the model handles it; the sweep ranks it out on its own merits)."""
+    return factor_pairs(n_npus)
+
+
+def fred_shapes(n_npus: int) -> List[Tuple[int, int]]:
+    """n_groups×group_size almost-fat-trees realizing ``n_npus``.  The
+    single-group shape (1, n) is a pure crossbar — valid but excluded:
+    the 2-level tree needs ≥ 2 L1 groups."""
+    out: List[Tuple[int, int]] = []
+    for a, b in factor_pairs(n_npus):
+        for g, k in ((b, a), (a, b)):       # narrow groups first
+            if g >= 2 and (g, k) not in out:
+                out.append((g, k))
+    return out
+
+
+def strategy_space(n_npus: int, n_layers: Optional[int] = None,
+                   min_utilization: float = 0.9) -> List[Strategy]:
+    """All (mp, dp, pp) with mp·dp·pp ≤ n_npus and utilization ≥ the floor.
+
+    ``n_layers`` (when given) keeps only pp that divide the layer count —
+    GPipe stages must hold whole layers.  Deterministic order: descending
+    worker count, then (mp, dp, pp) lexicographic."""
+    floor = max(1, int(min_utilization * n_npus))
+    out = []
+    for used in range(n_npus, floor - 1, -1):
+        for mp, rest in ((m, used // m) for m in range(1, used + 1)
+                         if used % m == 0):
+            for dp, pp in ((d, rest // d) for d in range(1, rest + 1)
+                           if rest % d == 0):
+                if n_layers is not None and n_layers % pp != 0:
+                    continue
+                out.append(Strategy(mp, dp, pp))
+    return out
+
+
+# --------------------------------------------------------------------------
+# sweep
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    fabric: str
+    shape: Tuple[int, int]            # (rows, cols) or (n_groups, group_size)
+    strategy: Strategy
+    breakdown: Breakdown
+    minibatch: int
+    param_bytes_per_npu: float
+    routable: Optional[bool] = None   # FRED only, when check_routing=True
+    pareto: bool = False
+
+    @property
+    def total(self) -> float:
+        return self.breakdown.total
+
+    @property
+    def time_per_sample(self) -> float:
+        return self.breakdown.total / max(self.minibatch, 1)
+
+
+def scaled_n_io(n_npus: int) -> int:
+    """I/O controllers at the paper's per-NPU density (18 on 20), kept ≥ 1.
+    Used for EVERY fabric in the sweep so cross-fabric comparisons share
+    one I/O budget (at 20 NPUs this equals the 5×4 mesh's border-derived
+    18, so the paper point is unchanged)."""
+    return max(1, round(18 * n_npus / 20))
+
+
+def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
+               cache: dict, compute_efficiency: float) -> Simulator:
+    if fabric == "baseline":
+        return Simulator(fabric, compute_efficiency=compute_efficiency,
+                         mesh_shape=shape, n_io=scaled_n_io(n_npus),
+                         collective_cache=cache)
+    return Simulator(fabric, compute_efficiency=compute_efficiency,
+                     fred_shape=shape, n_io=scaled_n_io(n_npus),
+                     collective_cache=cache)
+
+
+def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
+          fabrics: Sequence[str] = ("baseline", "FRED-C", "FRED-D"),
+          strategies: Optional[Sequence[Strategy]] = None,
+          n_layers: Optional[int] = None,
+          min_utilization: float = 0.9,
+          check_routing: bool = False,
+          compute_efficiency: float = 0.45) -> List[SweepResult]:
+    """Run the full (fabric × shape × strategy) cross-product.
+
+    ``workload_fn`` builds the workload for a candidate strategy (the
+    minibatch scales with DP, so the workload is strategy-dependent).
+    One memo dict spans the whole sweep — collective times are keyed by
+    the fabric's physical identity (Simulator._fabric_tag), so strategies
+    sharing a collective on the same wafer hit the cache while distinct
+    fabrics/shapes never collide.  Pareto flags are set per fabric on
+    (time_per_sample, param_bytes_per_npu)."""
+    if n_npus < 1:
+        raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
+    if strategies is None:
+        strategies = strategy_space(n_npus, n_layers=n_layers,
+                                    min_utilization=min_utilization)
+    results: List[SweepResult] = []
+    cache: dict = {}
+    route_memo: Dict[Strategy, bool] = {}   # routability is shape-agnostic
+    for fabric in fabrics:
+        shapes = mesh_shapes(n_npus) if fabric == "baseline" \
+            else fred_shapes(n_npus)
+        for shape in shapes:
+            sim = _simulator(fabric, shape, n_npus, cache,
+                             compute_efficiency)
+            for st in strategies:
+                if st.n_workers > sim.n_npus:
+                    continue
+                w = workload_fn(st)
+                br = sim.run(w)
+                routable = None
+                if check_routing and fabric != "baseline":
+                    if st not in route_memo:
+                        from .routing import strategy_routable
+                        route_memo[st] = strategy_routable(st, n_npus)
+                    routable = route_memo[st]
+                results.append(SweepResult(
+                    fabric=fabric, shape=shape, strategy=st, breakdown=br,
+                    minibatch=w.minibatch,
+                    param_bytes_per_npu=w.param_bytes_total /
+                    (st.mp * st.pp),
+                    routable=routable))
+    for fabric in set(r.fabric for r in results):
+        subset = [r for r in results if r.fabric == fabric]
+        for r in pareto_front(subset):
+            r.pareto = True
+    return results
+
+
+# --------------------------------------------------------------------------
+# Pareto reporting
+# --------------------------------------------------------------------------
+
+def pareto_front(results: Sequence[SweepResult],
+                 keys: Tuple[str, str] = ("time_per_sample",
+                                          "param_bytes_per_npu")
+                 ) -> List[SweepResult]:
+    """Results not dominated on the (minimize, minimize) objective pair."""
+    vals = [(tuple(getattr(r, k) for k in keys), r) for r in results]
+
+    def dominated(v):
+        return any(all(o <= x for o, x in zip(ov, v)) and
+                   any(o < x for o, x in zip(ov, v)) for ov, _ in vals)
+
+    return [r for v, r in vals if not dominated(v)]
+
+
+CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_npus,mp,dp,pp,minibatch,"
+              "compute_s,input_load_s,mp_s,dp_s,pp_s,stream_s,total_s,"
+              "time_per_sample_s,param_bytes_per_npu,routable,pareto")
+
+
+def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
+    """One row per sweep point; schema in benchmarks/README.md.  shape_a/b
+    are rows/cols (baseline) or n_groups/group_size (FRED)."""
+    rows = []
+    for r in results:
+        br = r.breakdown
+        rows.append(
+            f"{br.workload},{r.fabric},{r.shape[0]},{r.shape[1]},"
+            f"{r.shape[0] * r.shape[1]},"
+            f"{r.strategy.mp},{r.strategy.dp},{r.strategy.pp},"
+            f"{r.minibatch},"
+            f"{br.compute:.9g},{br.input_load:.9g},{br.mp:.9g},"
+            f"{br.dp:.9g},{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
+            f"{r.time_per_sample:.9g},{r.param_bytes_per_npu:.9g},"
+            f"{'' if r.routable is None else int(r.routable)},"
+            f"{int(r.pareto)}")
+    return rows
+
+
+# --------------------------------------------------------------------------
+# canonical workload templates
+# --------------------------------------------------------------------------
+
+def transformer_17b(strategy: Strategy) -> Workload:
+    """Turing-NLG 17B (Table V) parameterized by strategy — the paper's
+    Fig. 2 co-exploration subject."""
+    return transformer("Transformer-17B", 78, 4256, 1024, strategy,
+                       "stationary")
+
+
+def transformer_17b_sweep(n_npus: int = 20, **kw) -> List[SweepResult]:
+    """The headline sweep: Transformer-17B over every strategy and wafer
+    shape at ``n_npus``."""
+    return sweep(transformer_17b, n_npus, n_layers=78, **kw)

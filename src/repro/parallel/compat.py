@@ -1,0 +1,31 @@
+"""jax version compatibility shims for the parallel substrate.
+
+The repo targets current jax (``jax.shard_map``, ``check_vma``) but must
+degrade gracefully on the 0.4.x runtimes still common in CI images, where
+shard_map lives in ``jax.experimental.shard_map`` and the replication check
+is spelled ``check_rep``.
+"""
+
+from __future__ import annotations
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Dispatch to ``jax.shard_map`` or the 0.4.x experimental fallback."""
+    import jax
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def pcast_varying(x, axis_name: str):
+    """Mark ``x`` varying over ``axis_name`` in the vma type system.
+
+    Old runtimes have no vma typing, so the cast is the identity there."""
+    import jax
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis_name,), to="varying")
+    return x

@@ -1,8 +1,24 @@
 """Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
 benches must see 1 device (the dry-run sets its own flags; multi-device
 tests spawn subprocesses)."""
+import os
+
 import jax
 import pytest
+
+try:
+    # Example counts live in profiles (the @settings decorators only set
+    # deadline) so CI can cap hypothesis work: 50 examples is the right
+    # depth locally but too slow for the PR gate.  The ci profile is
+    # activated by CI=true (set by GitHub Actions) or HYPOTHESIS_PROFILE.
+    from hypothesis import settings as _hsettings
+    _hsettings.register_profile("dev", max_examples=50)
+    _hsettings.register_profile("ci", max_examples=15, deadline=None)
+    _hsettings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE",
+                       "ci" if os.environ.get("CI") else "dev"))
+except ImportError:                  # hypothesis is an extra; tests skip
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -56,6 +56,7 @@ def test_arch_smoke_forward(arch):
     assert float(loss) == pytest.approx(np.log(cfg.vocab_size), rel=0.15)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x7b",
                                   "mamba2-1.3b", "zamba2-2.7b"])
 def test_arch_smoke_train_step(arch):
@@ -84,6 +85,7 @@ def test_arch_smoke_train_step(arch):
     assert losses[-1] < losses[0], f"{arch}: loss did not decrease {losses}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_arch_decode_matches_prefill(arch):
     cfg = get_config(arch).reduced()
@@ -173,6 +175,7 @@ def test_swa_masks_out_of_window():
 # SSD invariants
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_ssd_chunked_matches_reference():
     B, S, H, hd, G, N = 2, 50, 4, 8, 2, 6
     x = jax.random.normal(KEY, (B, S, H, hd)) * 0.5
@@ -188,6 +191,7 @@ def test_ssd_chunked_matches_reference():
                                    atol=2e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_state_carry():
     """Running two halves with carried state == one full run."""
     B, S, H, hd, G, N = 1, 40, 2, 8, 1, 4

@@ -28,6 +28,7 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 600) -> str:
     return proc.stdout
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
@@ -84,6 +85,7 @@ def test_fred_collectives_equal_flat():
     """)
 
 
+@pytest.mark.slow
 def test_error_feedback_reduces_bias_over_steps():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
@@ -112,6 +114,7 @@ def test_error_feedback_reduces_bias_over_steps():
     """)
 
 
+@pytest.mark.slow
 def test_elastic_restart_8_to_4_devices():
     run_with_devices("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
@@ -159,6 +162,7 @@ def test_elastic_restart_8_to_4_devices():
     """)
 
 
+@pytest.mark.slow
 def test_mini_dryrun_on_8_devices():
     """End-to-end dry-run plumbing (lower+compile+roofline record) on a
     small mesh with reduced-size shapes, for one arch per family."""

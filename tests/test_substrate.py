@@ -156,6 +156,7 @@ def test_data_has_learnable_structure():
 # weight streaming
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-1.3b"])
 def test_streaming_grads_match_monolithic(arch):
     cfg = get_config(arch).reduced()
@@ -178,6 +179,7 @@ def test_streaming_grads_match_monolithic(arch):
                                rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_streaming_training_decreases_loss():
     cfg = get_config("llama3.2-1b").reduced()
     params, _ = split(tfm.init(KEY, cfg))
@@ -217,6 +219,7 @@ def test_engine_serves_batch_greedy_matches_decode():
 # trainer loop (fast end-to-end: init → train → checkpoint → resume)
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_trainer_runs_and_resumes():
     from repro.launch.mesh import make_mesh
     from repro.train.train_loop import Trainer, TrainerConfig
