@@ -165,10 +165,31 @@ def bench_sweep():
             emit(f"sweep[{n}npus|{fab}]", 0.0,
                  f"best={r.strategy};shape={r.shape[0]}x{r.shape[1]};"
                  f"t_per_sample_us={r.time_per_sample*1e6:.2f}")
+    # multi-wafer scale-out: 20-NPU wafers, clusters of 1 and 2 wafers
+    cl_box = []
+
+    def run_cluster():
+        cl_box[:] = [transformer_17b_sweep(20, max_wafers=2)]
+    us_cl = _time(run_cluster, iters=1)
+    cluster = cl_box[0]
+    cross = [r for r in cluster if r.pareto and r.strategy.wafers > 1]
+    emit("sweep_t17b_cluster", us_cl,
+         f"points={len(cluster)};wafers<=2;cross_wafer_pareto={len(cross)}")
+    for r in sorted(cross, key=lambda r: (r.fabric, r.time_per_sample))[:3]:
+        emit(f"sweep[cluster|{r.fabric}]", 0.0,
+             f"best={r.strategy};shape={r.shape[0]}x{r.shape[1]}x"
+             f"{r.n_wafers}w;t_per_sample_us={r.time_per_sample*1e6:.2f};"
+             f"dp_intra_ms={r.breakdown.dp_intra*1e3:.3f};"
+             f"dp_inter_ms={r.breakdown.dp_inter*1e3:.3f}")
     out = Path("artifacts")
     out.mkdir(exist_ok=True)
     from repro.core.sweep import CSV_HEADER
-    rows = [CSV_HEADER] + to_csv_rows([r for s in sweeps for r in s])
+    # the cluster sweep's n_wafers=1 slice duplicates the 20-NPU rows
+    # above (with pareto flags computed over a different population), so
+    # only its multi-wafer points are appended
+    rows = [CSV_HEADER] + to_csv_rows(
+        [r for s in sweeps for r in s] +
+        [r for r in cluster if r.n_wafers > 1])
     (out / "sweep_t17b.csv").write_text("\n".join(rows) + "\n")
     emit("sweep[csv]", 0.0, f"artifacts/sweep_t17b.csv rows={len(rows)-1}")
 

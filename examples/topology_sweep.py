@@ -6,8 +6,18 @@ per-fabric Pareto front on (time-per-sample, parameter-bytes-per-NPU) —
 the question the paper's Fig. 2 asks for one fixed wafer, answered for
 arbitrary ones.
 
+``--max-wafers N`` adds the multi-wafer scale-out axis (core/cluster.py):
+the wafer is the manufacturing unit, so clusters of 2..N wafers multiply
+the NPU count, DP replicas map across wafers, and the DP All-Reduce runs
+hierarchically (reduce-scatter within wafer → all-reduce over the
+wafer↔wafer links → all-gather within wafer).  Cross-wafer strategies
+print as ``...-W(n)`` with their per-level (intra/inter-wafer) DP time;
+the CSV gains the ``n_wafers`` / ``inter_wafer_bw`` / ``dp_intra_s`` /
+``dp_inter_s`` columns (schema: benchmarks/README.md).
+
     PYTHONPATH=src python examples/topology_sweep.py [--npus 20]
         [--fabrics baseline,FRED-C,FRED-D] [--workload t17b|gpt3]
+        [--max-wafers 2] [--inter-links 32] [--inter-bw-gbps 400]
         [--check-routing] [--csv out.csv]
 """
 
@@ -28,21 +38,37 @@ WORKLOADS = {"t17b": (transformer_17b, 78), "gpt3": (gpt3, 96)}
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--npus", type=int, default=20)
+    ap.add_argument("--npus", type=int, default=20,
+                    help="NPUs per wafer (total = npus × wafer count)")
     ap.add_argument("--fabrics", type=str, default="baseline,FRED-C,FRED-D")
     ap.add_argument("--workload", choices=sorted(WORKLOADS), default="t17b")
+    ap.add_argument("--max-wafers", type=int, default=1,
+                    help="also sweep clusters of up to this many wafers "
+                         "(adds the n_wafers axis + cross-wafer DP "
+                         "strategies; 1 = single wafer only)")
+    ap.add_argument("--inter-links", type=int, default=32,
+                    help="wafer↔wafer links per wafer")
+    ap.add_argument("--inter-bw-gbps", type=float, default=400.0,
+                    help="per-link wafer↔wafer bandwidth, GB/s per "
+                         "direction")
     ap.add_argument("--check-routing", action="store_true",
-                    help="verify conflict-free routing per FRED strategy")
+                    help="verify conflict-free routing per FRED "
+                         "(strategy, shape) pair")
     ap.add_argument("--csv", type=str, default="",
-                    help="write the full sweep as CSV (schema: "
-                         "benchmarks/README.md)")
+                    help="write the full sweep as CSV (schema incl. wafer "
+                         "columns: benchmarks/README.md)")
     args = ap.parse_args()
 
     workload_fn, n_layers = WORKLOADS[args.workload]
     results = sweep(workload_fn, args.npus,
                     fabrics=tuple(args.fabrics.split(",")),
-                    n_layers=n_layers, check_routing=args.check_routing)
-    print(f"{args.workload} on {args.npus} NPUs: {len(results)} sweep points")
+                    n_layers=n_layers, check_routing=args.check_routing,
+                    max_wafers=args.max_wafers,
+                    inter_wafer_links=args.inter_links,
+                    inter_wafer_bw=args.inter_bw_gbps * 1e9)
+    wafers = f", up to {args.max_wafers} wafers" if args.max_wafers > 1 else ""
+    print(f"{args.workload} on {args.npus} NPUs/wafer{wafers}: "
+          f"{len(results)} sweep points")
 
     for fabric in args.fabrics.split(","):
         front = sorted((r for r in results
@@ -54,9 +80,16 @@ def main():
             route = ""
             if r.routable is not None:
                 route = "  routes" if r.routable else "  CONFLICT"
-            print(f"  {str(r.strategy):22s} shape={r.shape[0]}x{r.shape[1]}"
+            level = ""
+            if r.n_wafers > 1:
+                level = (f"  dp intra/inter="
+                         f"{r.breakdown.dp_intra*1e3:.2f}/"
+                         f"{r.breakdown.dp_inter*1e3:.2f} ms")
+            print(f"  {str(r.strategy):26s} shape={r.shape[0]}x{r.shape[1]}"
+                  f"{'x' + str(r.n_wafers) + 'w' if r.n_wafers > 1 else ''}"
                   f"  t/sample={r.time_per_sample*1e6:9.2f} us"
-                  f"  params/NPU={r.param_bytes_per_npu/1e9:6.2f} GB{route}")
+                  f"  params/NPU={r.param_bytes_per_npu/1e9:6.2f} GB"
+                  f"{route}{level}")
 
     if args.csv:
         with open(args.csv, "w") as fh:

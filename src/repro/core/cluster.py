@@ -1,0 +1,176 @@
+"""Inter-wafer fabric level: a cluster of wafers joined by parameterized
+wafer↔wafer links (ROADMAP "multi-wafer scale-out"; LIBRA-style multi-level
+hierarchy, Hecaton-style wafer scale-out).
+
+:class:`WaferCluster` wraps ``n_wafers`` identical wafer fabrics — either
+the baseline :class:`~repro.core.meshnet.MeshFabric` or a
+:class:`~repro.core.fabric.FredFabric` — connected by a
+:class:`WaferLink` (link count × per-link BW × latency).  The wafer is the
+manufacturing unit, so scale-out *adds* NPUs: a 2-wafer cluster of 5×4
+wafers has 40 NPUs.
+
+Collectives that span wafers run the classic hierarchical decomposition:
+
+  1. Reduce-Scatter among the group members *within* each wafer (on the
+     wafer's own fabric — FRED trees or mesh rings);
+  2. All-Reduce of the per-member shard *across* wafers over the
+     wafer↔wafer links (endpoint ring — there is no FRED switch between
+     wafers);
+  3. All-Gather within each wafer.
+
+``collective_time_parts`` returns the (intra-wafer, inter-wafer) split so
+the simulator can report per-level DP time; groups contained in one wafer
+delegate straight to the wafer fabric and the inter part is 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple, Union
+
+from .fabric import FredFabric
+from .flows import endpoint_traffic_bytes
+from .meshnet import MeshFabric
+
+WaferFabric = Union[MeshFabric, FredFabric]
+
+
+@dataclasses.dataclass(frozen=True)
+class WaferLink:
+    """Wafer↔wafer interconnect budget, per wafer (Dojo-style wafer-edge
+    bridges: many moderate links rather than one fat pipe — Dojo training
+    tiles publish 9 TB/s per edge, 36 TB/s aggregate; the default 32×400
+    GB/s = 12.8 TB/s sits inside that envelope)."""
+    n_links: int = 32
+    link_bw: float = 400e9            # B/s per link per direction
+    latency: float = 5e-7             # per inter-wafer ring step
+
+    def __post_init__(self):
+        if self.n_links < 1 or self.link_bw <= 0:
+            raise ValueError(f"wafer link needs ≥1 link of positive BW, "
+                             f"got {self.n_links}×{self.link_bw}")
+
+    @property
+    def agg_bw(self) -> float:
+        """Aggregate wafer↔wafer bandwidth per wafer, one direction."""
+        return self.n_links * self.link_bw
+
+
+@dataclasses.dataclass
+class WaferCluster:
+    """``n_wafers`` identical wafers + the inter-wafer level."""
+    wafer: WaferFabric
+    n_wafers: int
+    link: WaferLink = dataclasses.field(default_factory=WaferLink)
+
+    def __post_init__(self):
+        if self.n_wafers < 1:
+            raise ValueError(f"cluster needs ≥ 1 wafer, got {self.n_wafers}")
+
+    # ---- id space --------------------------------------------------------------
+    @property
+    def npus_per_wafer(self) -> int:
+        return self.wafer.n_npus
+
+    @property
+    def n_npus(self) -> int:
+        return self.n_wafers * self.npus_per_wafer
+
+    def wafer_of(self, gid: int) -> int:
+        return gid // self.npus_per_wafer
+
+    def local_id(self, gid: int) -> int:
+        return gid % self.npus_per_wafer
+
+    def split_by_wafer(self, group: Sequence[int]) -> Dict[int, List[int]]:
+        """wafer idx → local NPU ids of the group members on that wafer."""
+        by: Dict[int, List[int]] = {}
+        for gid in group:
+            by.setdefault(self.wafer_of(gid), []).append(self.local_id(gid))
+        return by
+
+    # ---- collectives -----------------------------------------------------------
+    def _wafer_coll(self, kind: str, local_group: Sequence[int],
+                    nbytes: float, concurrent_groups: int) -> float:
+        if isinstance(self.wafer, MeshFabric):
+            return self.wafer.collective_time(kind, local_group, nbytes)
+        return self.wafer.collective_time(kind, local_group, nbytes,
+                                          concurrent_groups=concurrent_groups)
+
+    def inter_allreduce_time(self, n_wafers_spanned: int, nbytes: float,
+                             concurrent_groups: int = 1) -> float:
+        """Ring All-Reduce across wafers: 2(w−1) steps over the aggregate
+        wafer↔wafer BW, shared by groups crossing wafers concurrently."""
+        w = n_wafers_spanned
+        if w <= 1 or nbytes <= 0:
+            return 0.0
+        traffic = endpoint_traffic_bytes("all_reduce", w, nbytes)
+        steps = 2 * (w - 1)
+        bw = self.link.agg_bw / max(concurrent_groups, 1)
+        return steps * ((traffic / steps) / bw + self.link.latency)
+
+    def collective_time_parts(self, kind: str, group: Sequence[int],
+                              nbytes: float, concurrent_groups: int = 1,
+                              inter_concurrent_groups: "int | None" = None
+                              ) -> Tuple[float, float]:
+        """(intra-wafer, inter-wafer) time split for one collective.
+
+        Wafers run their intra phases in parallel, so the intra part is the
+        widest wafer's Reduce-Scatter + All-Gather; only All-Reduce is
+        supported across wafers (MP/PP groups are placed within one wafer
+        by ``cluster_placement``).  ``inter_concurrent_groups`` lets the
+        caller model a different contention level on the wafer↔wafer links
+        than inside the wafer (GPipe staggers the DP exchanges of distinct
+        pipeline stages, so only same-stage groups contend inter-wafer
+        while the wafer-internal fabric is shared by all of them);
+        defaults to ``concurrent_groups``."""
+        if len(group) <= 1 or nbytes <= 0:
+            return 0.0, 0.0
+        by_wafer = self.split_by_wafer(group)
+        if len(by_wafer) == 1:
+            local = next(iter(by_wafer.values()))
+            return (self._wafer_coll(kind, local, nbytes, concurrent_groups),
+                    0.0)
+        if kind != "all_reduce":
+            raise NotImplementedError(
+                f"cross-wafer {kind!r} not modeled: placement keeps MP/PP "
+                f"within a wafer, only the DP All-Reduce spans wafers")
+        inter_conc = (concurrent_groups if inter_concurrent_groups is None
+                      else inter_concurrent_groups)
+        widest = max(by_wafer.values(), key=len)
+        k = len(widest)
+        intra = 0.0
+        if k > 1:
+            intra += self._wafer_coll("reduce_scatter", widest, nbytes,
+                                      concurrent_groups)
+        # the k per-member shard rings run concurrently but share the same
+        # wafer↔wafer links, so the group's boundary traffic stays
+        # 2(w−1)/w · nbytes regardless of k — bill the full payload (the
+        # reduce-scatter avoids the k× redundancy a flat per-member
+        # All-Reduce would push across, it does not shrink the cut bytes)
+        inter = self.inter_allreduce_time(len(by_wafer), nbytes, inter_conc)
+        if k > 1:
+            intra += self._wafer_coll("all_gather", widest, nbytes,
+                                      concurrent_groups)
+        return intra, inter
+
+    def collective_time(self, kind: str, group: Sequence[int], nbytes: float,
+                        concurrent_groups: int = 1) -> float:
+        intra, inter = self.collective_time_parts(kind, group, nbytes,
+                                                  concurrent_groups)
+        return intra + inter
+
+    # ---- PP / I/O (both stay within a wafer) -----------------------------------
+    def pp_transfer_time(self, nbytes: float) -> float:
+        return self.wafer.pp_transfer_time(nbytes)
+
+    def wafer_io_rate(self) -> float:
+        """Per-wafer sustainable I/O streaming rate — each wafer has its
+        own I/O controllers and streams its replicas' weights locally."""
+        return self.wafer.io_stream_rate()
+
+    def tag(self) -> Tuple:
+        """Physical identity of the inter-wafer level for collective
+        memo keys (the wafer fabric contributes its own tag)."""
+        return ("cluster", self.n_wafers, self.link.n_links,
+                self.link.link_bw, self.link.latency)

@@ -74,8 +74,19 @@ class FredFabric:
 
     @property
     def bisection(self) -> float:
-        """Full-duplex spine bisection: one uplink per L1 group."""
-        return self.n_groups * self.config.l1_l2_bw / 2 * 2
+        """Full-duplex spine bisection-cut bandwidth.
+
+        Splitting the NPUs into two halves of L1 groups severs the smaller
+        half's uplinks — ``n_groups // 2`` links — counted in both
+        directions, consistent with :meth:`MeshFabric.bisection_bw`'s
+        ``2 · (links crossing the cut) · link_bw`` definition.  (The seed
+        formula ``n_groups · l1_l2_bw / 2 * 2`` let the halving cancel and
+        double-counted the cut by one uplink per *group*.)"""
+        return 2 * (self.n_groups // 2) * self.config.l1_l2_bw
+
+    def bisection_bw(self) -> float:
+        """Alias matching :meth:`MeshFabric.bisection_bw`."""
+        return self.bisection
 
     def l1_of(self, nid: int) -> int:
         return nid // self.group_size

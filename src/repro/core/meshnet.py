@@ -44,6 +44,12 @@ class MeshFabric:
     def n(self) -> int:
         return self.rows * self.cols
 
+    @property
+    def n_npus(self) -> int:
+        """Alias of :attr:`n` — uniform NPU-count accessor across fabric
+        types (FredFabric, WaferCluster expose the same name)."""
+        return self.n
+
     def corner_degree(self) -> int:
         """Links at a corner NPU — the wafer-wide All-Reduce bottleneck
         (2 on a proper 2D mesh, 1 on a degenerate 1×N line)."""

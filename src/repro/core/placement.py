@@ -22,10 +22,16 @@ class Strategy:
     mp: int
     dp: int
     pp: int
+    wafers: int = 1        # wafer axis: DP replicas spread over this many
+                           # wafers of a WaferCluster (1 = single wafer)
 
     @property
     def n_workers(self) -> int:
         return self.mp * self.dp * self.pp
+
+    @property
+    def dp_per_wafer(self) -> int:
+        return self.dp // self.wafers
 
     def workers(self) -> Iterator[Worker]:
         for d in range(self.dp):
@@ -46,7 +52,10 @@ class Strategy:
                 for m in range(self.mp) for d in range(self.dp)]
 
     def __str__(self):
-        return f"MP({self.mp})-DP({self.dp})-PP({self.pp})"
+        s = f"MP({self.mp})-DP({self.dp})-PP({self.pp})"
+        if self.wafers > 1:
+            s += f"-W({self.wafers})"
+        return s
 
 
 def fred_placement(strategy: Strategy, n_npus: "int | None" = None
@@ -81,6 +90,44 @@ def mesh_placement(strategy: Strategy, rows: int, cols: int
             for m in range(strategy.mp):
                 placement[(m, d, p)] = divmod(nid, cols)
                 nid += 1
+    return placement
+
+
+def cluster_placement(strategy: Strategy, n_wafers: int,
+                      npus_per_wafer: int) -> Dict[Worker, int]:
+    """worker → global NPU id on a :class:`~repro.core.cluster.WaferCluster`.
+
+    DP replicas are spread across wafers *first* (the DP gradient exchange
+    is the cheapest traffic to push over the wafer↔wafer links: one
+    hierarchical All-Reduce per layer, vs per-microbatch MP/PP activation
+    traffic), and each model instance (its mp×pp workers) lives entirely
+    within one wafer.  Within a wafer the ``fred_placement`` order — MP
+    consecutive, then PP, then DP — is preserved, so ``strategy.wafers = 1``
+    reproduces ``fred_placement`` exactly.
+
+    Global ids are ``wafer_idx * npus_per_wafer + local_id``.
+    """
+    w = strategy.wafers
+    if w < 1:
+        raise ValueError(f"{strategy} has wafers={w}; need ≥ 1")
+    if w > n_wafers:
+        raise ValueError(f"{strategy} spans {w} wafers, cluster has "
+                         f"{n_wafers}")
+    if strategy.dp % w != 0:
+        raise ValueError(f"{strategy}: dp={strategy.dp} not divisible by "
+                         f"wafers={w} — DP replicas map whole onto wafers")
+    per_wafer_workers = strategy.mp * strategy.pp * (strategy.dp // w)
+    if per_wafer_workers > npus_per_wafer:
+        raise ValueError(f"{strategy} needs {per_wafer_workers} NPUs per "
+                         f"wafer, wafer has {npus_per_wafer}")
+    dp_per_wafer = strategy.dp // w
+    placement: Dict[Worker, int] = {}
+    for d in range(strategy.dp):
+        wafer, dl = divmod(d, dp_per_wafer)
+        for p in range(strategy.pp):
+            for m in range(strategy.mp):
+                local = (dl * strategy.pp + p) * strategy.mp + m
+                placement[(m, d, p)] = wafer * npus_per_wafer + local
     return placement
 
 

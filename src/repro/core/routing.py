@@ -173,16 +173,29 @@ def routable(switch: FredSwitch, flows: Sequence[Flow]) -> bool:
         return False
 
 
-def strategy_routable(strategy, n_ports: int, m: int = 3) -> bool:
+def strategy_routable(strategy, shape, m: int = 3,
+                      uplinks: Optional[int] = None) -> bool:
     """True iff every parallelism phase of ``strategy`` routes conflict-free
-    on a FRED_m(n_ports) switch under the MP-consecutive placement.
+    under the MP-consecutive placement.
 
-    Generalized-shape entry point for the sweep engine: flows of ONE
-    parallelism type run at a time (they occur in different phases of the
-    training step — Sec. III Metric 4)."""
+    ``shape`` is either an int — the legacy single-crossbar check on one
+    FRED_m(n_ports) switch — or the actual fabric shape ``(n_groups,
+    group_size)``, in which case the check is hierarchical and shape-aware:
+    each L1 switch routes its local flow segments (local NPU ports, plus an
+    uplink port for flows spanning other groups, assigned round-robin over
+    the ``uplinks`` physical uplink ports — pass
+    :meth:`FredFabric.uplinks_per_l1`; defaults to ``group_size``, the
+    almost-fat-tree upper bound) on a FRED_m(group_size+uplinks) switch,
+    and the L2 spine routes the group-spanning flows over every L1's
+    uplink ports.  Flows of ONE parallelism type run at a time (they occur
+    in different phases of the training step — Sec. III Metric 4)."""
     from .flows import all_reduce
     from .placement import fred_placement, placement_groups
 
+    if isinstance(shape, tuple):
+        return _shape_routable(strategy, shape[0], shape[1], m,
+                               uplinks=uplinks)
+    n_ports = shape
     if strategy.n_workers > n_ports:
         return False
     if strategy.n_workers < 2:
@@ -192,6 +205,67 @@ def strategy_routable(strategy, n_ports: int, m: int = 3) -> bool:
     for kind in ("mp", "dp", "pp"):
         flows = [all_reduce(g)[0][0] for g in groups[kind] if len(g) > 1]
         if flows and not routable(sw, flows):
+            return False
+    return True
+
+
+def _shape_routable(strategy, n_groups: int, group_size: int,
+                    m: int = 3, uplinks: Optional[int] = None) -> bool:
+    """Hierarchical routability on an (n_groups, group_size) FRED fabric:
+    per-L1 routing of local flow segments, then L2-spine routing of the
+    spanning flows.  Each L1 exposes ``uplinks`` physical uplink ports;
+    spanning flows are assigned uplinks round-robin per L1 (the compile-
+    time router is free to pick, round-robin is its canonical choice)."""
+    from .placement import fred_placement, placement_groups
+
+    n = n_groups * group_size
+    if strategy.n_workers > n:
+        return False
+    if strategy.n_workers < 2:
+        return True
+    up = uplinks if uplinks is not None else group_size
+    up = max(1, up)
+    groups = placement_groups(strategy, fred_placement(strategy, n))
+    l1_switch = FredSwitch.build(max(group_size + up, 2), m)
+    spine = FredSwitch.build(max(n_groups * up, 2), m)
+    for kind in ("mp", "dp", "pp"):
+        colls = [cg for cg in groups[kind] if len(cg) > 1]
+        if not colls:
+            continue
+        # uplink assignment: per L1, spanning flows take uplink ports
+        # round-robin in enumeration order
+        upidx: Dict[Tuple[int, int], int] = {}    # (l1, flow idx) → uplink
+        counters = [0] * n_groups
+        for ci, cg in enumerate(colls):
+            l1s = sorted({nid // group_size for nid in cg})
+            if len(l1s) < 2:
+                continue
+            for l1 in l1s:
+                upidx[(l1, ci)] = counters[l1] % up
+                counters[l1] += 1
+        for l1 in range(n_groups):
+            local_flows = []
+            for ci, cg in enumerate(colls):
+                local = [nid - l1 * group_size for nid in cg
+                         if nid // group_size == l1]
+                if not local:
+                    continue
+                ports = list(local)
+                if (l1, ci) in upidx:             # spans other L1s
+                    ports.append(group_size + upidx[(l1, ci)])
+                if len(ports) >= 2:
+                    local_flows.append(
+                        Flow.make(ports, ports, tag=f"{kind}{ci}"))
+            if local_flows and not routable(l1_switch, local_flows):
+                return False
+        spine_flows = []
+        for ci, cg in enumerate(colls):
+            ports = sorted(l1 * up + idx for (l1, c), idx in upidx.items()
+                           if c == ci)
+            if len(ports) > 1:
+                spine_flows.append(
+                    Flow.make(ports, ports, tag=f"{kind}{ci}"))
+        if spine_flows and not routable(spine, spine_flows):
             return False
     return True
 

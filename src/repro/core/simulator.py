@@ -19,6 +19,13 @@ baseline 2D-mesh or a FRED fabric:
 
 Returned ``Breakdown`` mirrors Fig. 10's stacks: compute + exposed
 input-load / MP / DP / PP / weight-stream times.
+
+Multi-wafer clusters (``n_wafers > 1``, core/cluster.py): DP replicas map
+across wafers (cluster_placement), MP/PP stay within a wafer; the DP
+All-Reduce runs hierarchically — Reduce-Scatter within wafer → All-Reduce
+across the wafer↔wafer links → All-Gather within wafer — and the raw
+per-level times are reported as ``dp_intra``/``dp_inter``.  ``n_wafers=1``
+is bit-identical to the single-wafer model.
 """
 
 from __future__ import annotations
@@ -28,7 +35,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .fabric import FredFabric
 from .meshnet import MeshFabric
-from .placement import Strategy, fred_placement, mesh_placement, placement_groups
+from .placement import (Strategy, cluster_placement, fred_placement,
+                        mesh_placement, placement_groups)
 from .workloads import Workload, BYTES
 
 NPU_PEAK_FLOPS = 1000e12      # FP16 (Table II)
@@ -44,6 +52,12 @@ class Breakdown:
     dp: float
     pp: float
     stream: float
+    # per-level DP split (informational): raw un-overlapped All-Reduce time
+    # spent within wafers vs across the wafer↔wafer links.  ``dp`` remains
+    # the *exposed* DP time and is what ``total`` counts; on a single wafer
+    # dp_intra is the raw AR sum and dp_inter is 0.
+    dp_intra: float = 0.0
+    dp_inter: float = 0.0
 
     @property
     def total(self) -> float:
@@ -53,7 +67,8 @@ class Breakdown:
     def as_dict(self) -> Dict[str, float]:
         return {"compute": self.compute, "input_load": self.input_load,
                 "mp": self.mp, "dp": self.dp, "pp": self.pp,
-                "stream": self.stream, "total": self.total}
+                "stream": self.stream, "dp_intra": self.dp_intra,
+                "dp_inter": self.dp_inter, "total": self.total}
 
 
 @dataclasses.dataclass
@@ -65,6 +80,11 @@ class Simulator:
     fred_shape: Optional[Tuple[int, int]] = None   # (n_groups, group_size)
     n_io: Optional[int] = None                     # None → derived / paper 18
     collective_cache: Optional[dict] = None        # shared memo for sweeps
+    # ---- inter-wafer level (core/cluster.py); n_wafers=1 ≡ single wafer
+    n_wafers: int = 1
+    inter_wafer_links: int = 32                    # wafer↔wafer links/wafer
+    inter_wafer_bw: float = 400e9                  # B/s per link per dir
+    inter_wafer_latency: float = 5e-7              # per inter-wafer step
 
     def __post_init__(self):
         if self.fabric_name == "baseline":
@@ -87,14 +107,33 @@ class Simulator:
                 kw["n_io"] = self.n_io
             self.mesh = None
             self.fred = FredFabric(CONFIGS[self.fabric_name], **kw)
+        self.cluster = None
+        if self.n_wafers < 1:
+            raise ValueError(f"n_wafers must be ≥ 1, got {self.n_wafers}")
+        if self.n_wafers > 1:
+            from .cluster import WaferCluster, WaferLink
+            base = self.mesh if self.mesh is not None else self.fred
+            self.cluster = WaferCluster(
+                base, self.n_wafers,
+                WaferLink(self.inter_wafer_links, self.inter_wafer_bw,
+                          self.inter_wafer_latency))
 
     @property
     def n_npus(self) -> int:
+        if self.cluster is not None:
+            return self.cluster.n_npus
         return self.mesh.n if self.mesh is not None else self.fred.n_npus
 
     # ---- fabric dispatch -------------------------------------------------------
     def _groups(self, strategy: Strategy):
-        if self.mesh is not None:
+        if self.cluster is not None:
+            ids = cluster_placement(strategy, self.n_wafers,
+                                    self.cluster.npus_per_wafer)
+        elif strategy.wafers > 1:
+            raise ValueError(
+                f"{strategy} spans {strategy.wafers} wafers but this "
+                f"simulator models a single wafer (n_wafers=1)")
+        elif self.mesh is not None:
             pl = mesh_placement(strategy, self.mesh.rows, self.mesh.cols)
             ids = {w: r * self.mesh.cols + c for w, (r, c) in pl.items()}
         else:
@@ -105,36 +144,58 @@ class Simulator:
         """Physical identity of the fabric, so one collective_cache dict
         can be shared across Simulators of different fabrics/shapes."""
         if self.mesh is not None:
-            m = self.mesh
-            return ("mesh", m.rows, m.cols, m.link_bw, m.latency_per_hop,
-                    m.step_overhead)
-        c, f = self.fred.config, self.fred
-        return (c.name, f.n_groups, f.group_size, c.npu_l1_bw, c.l1_l2_bw,
-                c.in_network, c.switch_latency, c.step_overhead)
+            tag = ("mesh", self.mesh.rows, self.mesh.cols, self.mesh.link_bw,
+                   self.mesh.latency_per_hop, self.mesh.step_overhead)
+        else:
+            c, f = self.fred.config, self.fred
+            tag = (c.name, f.n_groups, f.group_size, c.npu_l1_bw, c.l1_l2_bw,
+                   c.in_network, c.switch_latency, c.step_overhead)
+        if self.cluster is not None:
+            return self.cluster.tag() + tag
+        return tag
 
-    def _coll_time(self, kind: str, group, nbytes: float,
-                   concurrent: int) -> float:
+    def _coll_time_parts(self, kind: str, group, nbytes: float,
+                         concurrent: int,
+                         inter_concurrent: Optional[int] = None
+                         ) -> Tuple[float, float]:
+        """(intra-wafer, inter-wafer) time for one collective; the inter
+        part is 0 on a single wafer or for groups within one wafer."""
         if self.collective_cache is not None:
             key = (self._fabric_tag(), kind, tuple(group), nbytes,
-                   concurrent)
+                   concurrent, inter_concurrent)
             hit = self.collective_cache.get(key)
             if hit is not None:
                 return hit
-        if self.mesh is not None:
-            t = self.mesh.collective_time(kind, group, nbytes)
+        if self.cluster is not None:
+            parts = self.cluster.collective_time_parts(
+                kind, group, nbytes, concurrent_groups=concurrent,
+                inter_concurrent_groups=inter_concurrent)
+        elif self.mesh is not None:
+            parts = (self.mesh.collective_time(kind, group, nbytes), 0.0)
         else:
-            t = self.fred.collective_time(kind, group, nbytes,
-                                          concurrent_groups=concurrent)
+            parts = (self.fred.collective_time(kind, group, nbytes,
+                                               concurrent_groups=concurrent),
+                     0.0)
         if self.collective_cache is not None:
-            self.collective_cache[key] = t
-        return t
+            self.collective_cache[key] = parts
+        return parts
+
+    def _coll_time(self, kind: str, group, nbytes: float,
+                   concurrent: int) -> float:
+        intra, inter = self._coll_time_parts(kind, group, nbytes, concurrent)
+        return intra + inter
 
     def _pp_time(self, nbytes: float) -> float:
+        if self.cluster is not None:
+            return self.cluster.pp_transfer_time(nbytes)
         if self.mesh is not None:
             return self.mesh.pp_transfer_time(nbytes)
         return self.fred.pp_transfer_time(nbytes)
 
     def _io_rate(self) -> float:
+        """Per-wafer sustainable I/O rate (wafers stream independently)."""
+        if self.cluster is not None:
+            return self.cluster.wafer_io_rate()
         if self.mesh is not None:
             return self.mesh.io_stream_rate()
         return self.fred.io_stream_rate()
@@ -146,7 +207,14 @@ class Simulator:
         mp_group = groups["mp"][0]
         dp_group = groups["dp"][0]
         n_dp_groups = len(groups["dp"])
-        layers_per_stage = w.n_layers // st.pp
+        if st.pp > w.n_layers:
+            raise ValueError(
+                f"{st} has pp={st.pp} stages but {w.name} only "
+                f"{w.n_layers} layers — stages must hold whole layers")
+        # uneven division: the pipeline is paced by its largest stage, so
+        # compute/MP/DP are modeled at ceil(n_layers / pp) layers per stage
+        # (exact when pp divides n_layers)
+        layers_per_stage = -(-w.n_layers // st.pp)
         samples_per_npu = w.samples_per_dp
 
         # ---- compute ------------------------------------------------------------
@@ -171,8 +239,11 @@ class Simulator:
         mp_time = 0.0
         if st.mp > 1 and w.mp_allreduce_per_layer:
             act_bytes = w.act_bytes_per_sample * samples_per_npu
+            # MP groups contend within their own wafer only — the fabric-BW
+            # share is the per-wafer group count (== total on one wafer)
+            mp_conc = max(1, len(groups["mp"]) // st.wafers)
             per_layer = self._coll_time("all_reduce", mp_group, act_bytes,
-                                        concurrent=len(groups["mp"]))
+                                        concurrent=mp_conc)
             # fwd + bwd, every layer of this stage, all microbatches pipelined
             mp_time = (per_layer * w.mp_allreduce_per_layer * 2 *
                        layers_per_stage * bubble)
@@ -188,12 +259,21 @@ class Simulator:
 
         # ---- DP comm ----------------------------------------------------------------
         dp_time = 0.0
+        dp_intra = dp_inter = 0.0
         grad_bytes_per_layer = w.params_per_layer * BYTES / st.mp
         if st.dp > 1 and w.execution == "stationary":
-            total_ar = sum(
-                self._coll_time("all_reduce", dp_group, grad_bytes_per_layer,
-                                concurrent=n_dp_groups)
-                for _ in range(layers_per_stage))
+            # inside the wafer all mp·pp DP groups share the fabric, but on
+            # the wafer↔wafer links only the mp groups of the same pipeline
+            # stage contend — GPipe backward staggers the other stages.
+            # One model evaluation; the per-layer accumulation stays a sum
+            # (not a multiply) so totals match the seed bit-for-bit.
+            ti, te = self._coll_time_parts(
+                "all_reduce", dp_group, grad_bytes_per_layer,
+                concurrent=n_dp_groups, inter_concurrent=st.mp)
+            for _ in range(layers_per_stage):
+                dp_intra += ti
+                dp_inter += te
+            total_ar = dp_intra + dp_inter
             if self.overlap_dp:
                 # layer-by-layer ARs overlap with remaining backward compute
                 dp_time = max(0.0, total_ar - bwd_stage * (1 - 1 / max(layers_per_stage, 1)))
@@ -207,14 +287,16 @@ class Simulator:
             io_rate = self._io_rate()
             # model in (fwd) + model in again (bwd) + gradients out (bwd);
             # gradient reduction toward I/O happens in-fabric (reverse of
-            # Fig. 4); all overlap with compute
+            # Fig. 4); all overlap with compute.  Every wafer streams the
+            # same weights through its own I/O, so the time is per-wafer.
             stream_bytes = w.param_bytes_total * (2 + 1) / st.pp
             io_time = stream_bytes / io_rate
             exposed = max(0.0, io_time - compute - mp_time)
             stream_time = exposed
-            # input minibatch cannot prefetch while weights stream (Sec VIII)
+            # input minibatch cannot prefetch while weights stream (Sec
+            # VIII); each wafer loads its own DP replicas' share in parallel
             in_bytes = w.minibatch * w.act_bytes_per_sample
-            input_load = in_bytes / io_rate
+            input_load = in_bytes / (io_rate * st.wafers)
         else:
             # input prefetched during previous iteration — not exposed
             input_load = 0.0
@@ -222,7 +304,8 @@ class Simulator:
         return Breakdown(workload=w.name, fabric=self.fabric_name,
                          compute=compute, input_load=input_load,
                          mp=mp_time, dp=dp_time, pp=pp_time,
-                         stream=stream_time)
+                         stream=stream_time, dp_intra=dp_intra,
+                         dp_inter=dp_inter)
 
 
 def compare(workload: Workload, fabrics=("baseline", "FRED-C", "FRED-D"),

@@ -8,7 +8,10 @@ NPU count it enumerates
     an optional utilization floor so near-full wafers count too — the
     paper's Transformer-17B uses 18 of 20 NPUs), and
   * every wafer shape realizing that NPU count: rows×cols meshes for the
-    baseline, n_groups×group_size almost-fat-trees for FRED,
+    baseline, n_groups×group_size almost-fat-trees for FRED, and
+  * (``max_wafers > 1``) every wafer count of a multi-wafer cluster —
+    the wafer is the manufacturing unit, so 2 wafers double the NPUs and
+    the DP axis splits across them (Strategy.wafers, core/cluster.py),
 
 then runs :class:`repro.core.simulator.Simulator` over the cross-product.
 Collective times are memoized per (fabric, shape) — strategies share
@@ -68,13 +71,33 @@ def fred_shapes(n_npus: int) -> List[Tuple[int, int]]:
     return out
 
 
+def cluster_shapes(n_npus: int, max_wafers: int,
+                   shape_fn: Callable[[int], List[Tuple[int, int]]]
+                   = fred_shapes) -> List[Tuple[int, Tuple[int, int]]]:
+    """(n_wafers, per-wafer shape) pairs for every wafer count up to
+    ``max_wafers``.  ``n_npus`` is *per wafer* — the wafer is the
+    manufacturing unit, so scale-out multiplies the NPU count (a 2-wafer
+    cluster of 20-NPU wafers has 40 NPUs).  ``max_wafers=1`` reduces to
+    ``[(1, s) for s in shape_fn(n_npus)]``."""
+    if max_wafers < 1:
+        raise ValueError(f"max_wafers must be ≥ 1, got {max_wafers}")
+    return [(w, s) for w in range(1, max_wafers + 1)
+            for s in shape_fn(n_npus)]
+
+
 def strategy_space(n_npus: int, n_layers: Optional[int] = None,
-                   min_utilization: float = 0.9) -> List[Strategy]:
+                   min_utilization: float = 0.9,
+                   n_wafers: int = 1) -> List[Strategy]:
     """All (mp, dp, pp) with mp·dp·pp ≤ n_npus and utilization ≥ the floor.
 
     ``n_layers`` (when given) keeps only pp that divide the layer count —
     GPipe stages must hold whole layers.  Deterministic order: descending
-    worker count, then (mp, dp, pp) lexicographic."""
+    worker count, then (mp, dp, pp) lexicographic.
+
+    ``n_wafers > 1`` adds the wafer axis: after each base triple, the
+    wafer-split variants ``Strategy(mp, dp, pp, wafers=w)`` for every
+    2 ≤ w ≤ n_wafers dividing dp (DP replicas map whole onto wafers;
+    per-wafer capacity is checked later, at placement/sweep time)."""
     floor = max(1, int(min_utilization * n_npus))
     out = []
     for used in range(n_npus, floor - 1, -1):
@@ -85,6 +108,9 @@ def strategy_space(n_npus: int, n_layers: Optional[int] = None,
                 if n_layers is not None and n_layers % pp != 0:
                     continue
                 out.append(Strategy(mp, dp, pp))
+                for wf in range(2, n_wafers + 1):
+                    if dp % wf == 0:
+                        out.append(Strategy(mp, dp, pp, wafers=wf))
     return out
 
 
@@ -102,6 +128,9 @@ class SweepResult:
     param_bytes_per_npu: float
     routable: Optional[bool] = None   # FRED only, when check_routing=True
     pareto: bool = False
+    n_wafers: int = 1                 # wafers in the cluster (shape is
+                                      # per wafer; total NPUs scale with it)
+    inter_wafer_bw: float = 0.0       # aggregate wafer↔wafer B/s (0 ≡ n/a)
 
     @property
     def total(self) -> float:
@@ -110,6 +139,10 @@ class SweepResult:
     @property
     def time_per_sample(self) -> float:
         return self.breakdown.total / max(self.minibatch, 1)
+
+    @property
+    def n_npus(self) -> int:
+        return self.shape[0] * self.shape[1] * self.n_wafers
 
 
 def scaled_n_io(n_npus: int) -> int:
@@ -121,14 +154,17 @@ def scaled_n_io(n_npus: int) -> int:
 
 
 def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
-               cache: dict, compute_efficiency: float) -> Simulator:
+               cache: dict, compute_efficiency: float,
+               n_wafers: int = 1, **inter_kw) -> Simulator:
+    """``n_npus`` is per wafer; ``inter_kw`` forwards the inter-wafer link
+    parameters (inter_wafer_links/bw/latency) when n_wafers > 1."""
+    kw = dict(compute_efficiency=compute_efficiency,
+              n_io=scaled_n_io(n_npus), collective_cache=cache)
+    if n_wafers > 1:
+        kw.update(n_wafers=n_wafers, **inter_kw)
     if fabric == "baseline":
-        return Simulator(fabric, compute_efficiency=compute_efficiency,
-                         mesh_shape=shape, n_io=scaled_n_io(n_npus),
-                         collective_cache=cache)
-    return Simulator(fabric, compute_efficiency=compute_efficiency,
-                     fred_shape=shape, n_io=scaled_n_io(n_npus),
-                     collective_cache=cache)
+        return Simulator(fabric, mesh_shape=shape, **kw)
+    return Simulator(fabric, fred_shape=shape, **kw)
 
 
 def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
@@ -137,8 +173,13 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           n_layers: Optional[int] = None,
           min_utilization: float = 0.9,
           check_routing: bool = False,
-          compute_efficiency: float = 0.45) -> List[SweepResult]:
-    """Run the full (fabric × shape × strategy) cross-product.
+          compute_efficiency: float = 0.45,
+          max_wafers: int = 1,
+          inter_wafer_links: int = 32,
+          inter_wafer_bw: float = 400e9,
+          inter_wafer_latency: float = 5e-7) -> List[SweepResult]:
+    """Run the full (fabric × wafer shape × wafer count × strategy)
+    cross-product.
 
     ``workload_fn`` builds the workload for a candidate strategy (the
     minibatch scales with DP, so the workload is strategy-dependent).
@@ -146,38 +187,81 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     the fabric's physical identity (Simulator._fabric_tag), so strategies
     sharing a collective on the same wafer hit the cache while distinct
     fabrics/shapes never collide.  Pareto flags are set per fabric on
-    (time_per_sample, param_bytes_per_npu)."""
+    (time_per_sample, param_bytes_per_npu).
+
+    ``n_npus`` is per wafer; ``max_wafers > 1`` adds clusters of 2..max
+    wafers joined by ``inter_wafer_links × inter_wafer_bw`` links (see
+    core/cluster.py), with DP replicas placed across wafers and
+    wafer-split strategies tagged ``Strategy.wafers``.  ``max_wafers=1``
+    (the default) is bit-identical to the single-wafer sweep.
+
+    FRED routability (``check_routing=True``) is checked per (strategy,
+    shape): the memo is keyed on both, and the actual (n_groups,
+    group_size) shape is passed to :func:`repro.core.routing
+    .strategy_routable` — for clusters, the per-wafer sub-strategy is
+    what must route on the wafer switch."""
     if n_npus < 1:
         raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
+    # explicitly passed strategies always run: widen the wafer-count
+    # enumeration to cover the largest split they ask for
+    if strategies:
+        max_wafers = max(max_wafers, max(st.wafers for st in strategies))
+    # strategy space per wafer count (the utilization floor applies to the
+    # cluster's total NPU count); strategy_space emits the wafer-split
+    # variants, the per-shape capacity check happens in the loop below
+    space: Dict[int, Sequence[Strategy]] = {}
     if strategies is None:
-        strategies = strategy_space(n_npus, n_layers=n_layers,
-                                    min_utilization=min_utilization)
+        for wf in range(1, max_wafers + 1):
+            space[wf] = [st for st in
+                         strategy_space(wf * n_npus, n_layers=n_layers,
+                                        min_utilization=min_utilization,
+                                        n_wafers=wf)
+                         if st.wafers == wf]
     results: List[SweepResult] = []
     cache: dict = {}
-    route_memo: Dict[Strategy, bool] = {}   # routability is shape-agnostic
+    route_memo: Dict[Tuple[Strategy, Tuple[int, int], int], bool] = {}
+    inter_kw = dict(inter_wafer_links=inter_wafer_links,
+                    inter_wafer_bw=inter_wafer_bw,
+                    inter_wafer_latency=inter_wafer_latency)
+    agg_inter_bw = inter_wafer_links * inter_wafer_bw
     for fabric in fabrics:
-        shapes = mesh_shapes(n_npus) if fabric == "baseline" \
-            else fred_shapes(n_npus)
-        for shape in shapes:
+        shape_fn = mesh_shapes if fabric == "baseline" else fred_shapes
+        for wf, shape in cluster_shapes(n_npus, max_wafers, shape_fn):
             sim = _simulator(fabric, shape, n_npus, cache,
-                             compute_efficiency)
-            for st in strategies:
-                if st.n_workers > sim.n_npus:
+                             compute_efficiency, n_wafers=wf, **inter_kw)
+            if strategies is not None:
+                cands = [st for st in strategies if st.wafers == wf]
+            else:
+                cands = space[wf]
+            for st in cands:
+                if st.n_workers > sim.n_npus or \
+                        st.dp % st.wafers != 0 or \
+                        st.mp * st.pp * (st.dp // st.wafers) > n_npus:
                     continue
                 w = workload_fn(st)
+                if st.pp > w.n_layers:    # stages must hold whole layers
+                    continue
                 br = sim.run(w)
                 routable = None
                 if check_routing and fabric != "baseline":
-                    if st not in route_memo:
+                    # uplink count depends on the FRED config, so it is
+                    # part of the memo key alongside (strategy, shape)
+                    up = sim.fred.uplinks_per_l1()
+                    key = (st, shape, up)
+                    if key not in route_memo:
                         from .routing import strategy_routable
-                        route_memo[st] = strategy_routable(st, n_npus)
-                    routable = route_memo[st]
+                        sub = st if st.wafers == 1 else \
+                            Strategy(st.mp, st.dp // st.wafers, st.pp)
+                        route_memo[key] = strategy_routable(sub, shape,
+                                                            uplinks=up)
+                    routable = route_memo[key]
                 results.append(SweepResult(
                     fabric=fabric, shape=shape, strategy=st, breakdown=br,
                     minibatch=w.minibatch,
                     param_bytes_per_npu=w.param_bytes_total /
                     (st.mp * st.pp),
-                    routable=routable))
+                    routable=routable, n_wafers=wf,
+                    inter_wafer_bw=agg_inter_bw if wf > 1 else 0.0))
     for fabric in set(r.fabric for r in results):
         subset = [r for r in results if r.fabric == fabric]
         for r in pareto_front(subset):
@@ -193,34 +277,56 @@ def pareto_front(results: Sequence[SweepResult],
                  keys: Tuple[str, str] = ("time_per_sample",
                                           "param_bytes_per_npu")
                  ) -> List[SweepResult]:
-    """Results not dominated on the (minimize, minimize) objective pair."""
-    vals = [(tuple(getattr(r, k) for k in keys), r) for r in results]
+    """Results not dominated on the (minimize, minimize) objective pair.
 
-    def dominated(v):
-        return any(all(o <= x for o, x in zip(ov, v)) and
-                   any(o < x for o, x in zip(ov, v)) for ov, _ in vals)
+    Sort-based O(n log n) scan (cluster sweeps multiply point counts):
+    sorted by the first key, a point survives iff its second key is the
+    minimum within its first-key tie group AND strictly below every
+    earlier group's minimum.  Exact duplicates don't dominate each other,
+    so they all survive together; input order is preserved."""
+    n = len(results)
+    vals = [tuple(getattr(r, k) for k in keys) for r in results]
+    order = sorted(range(n), key=vals.__getitem__)
+    keep = [False] * n
+    best2 = float("inf")            # min 2nd key over strictly-lower groups
+    i = 0
+    while i < n:
+        j = i
+        while j < n and vals[order[j]][0] == vals[order[i]][0]:
+            j += 1
+        group = order[i:j]
+        gmin = min(vals[idx][1] for idx in group)
+        if gmin < best2:
+            for idx in group:
+                if vals[idx][1] == gmin:
+                    keep[idx] = True
+            best2 = gmin
+        i = j
+    return [r for r, k in zip(results, keep) if k]
 
-    return [r for v, r in vals if not dominated(v)]
 
-
-CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_npus,mp,dp,pp,minibatch,"
-              "compute_s,input_load_s,mp_s,dp_s,pp_s,stream_s,total_s,"
+CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
+              "inter_wafer_bw,mp,dp,pp,minibatch,"
+              "compute_s,input_load_s,mp_s,dp_s,dp_intra_s,dp_inter_s,"
+              "pp_s,stream_s,total_s,"
               "time_per_sample_s,param_bytes_per_npu,routable,pareto")
 
 
 def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
     """One row per sweep point; schema in benchmarks/README.md.  shape_a/b
-    are rows/cols (baseline) or n_groups/group_size (FRED)."""
+    are rows/cols (baseline) or n_groups/group_size (FRED), per wafer;
+    n_npus = shape_a·shape_b·n_wafers."""
     rows = []
     for r in results:
         br = r.breakdown
         rows.append(
             f"{br.workload},{r.fabric},{r.shape[0]},{r.shape[1]},"
-            f"{r.shape[0] * r.shape[1]},"
+            f"{r.n_wafers},{r.n_npus},{r.inter_wafer_bw:.9g},"
             f"{r.strategy.mp},{r.strategy.dp},{r.strategy.pp},"
             f"{r.minibatch},"
             f"{br.compute:.9g},{br.input_load:.9g},{br.mp:.9g},"
-            f"{br.dp:.9g},{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
+            f"{br.dp:.9g},{br.dp_intra:.9g},{br.dp_inter:.9g},"
+            f"{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
             f"{r.time_per_sample:.9g},{r.param_bytes_per_npu:.9g},"
             f"{'' if r.routable is None else int(r.routable)},"
             f"{int(r.pareto)}")

@@ -106,13 +106,23 @@ def test_mesh_n_io_override():
 
 
 def test_bisection_scaling():
-    # mesh: min-dimension links cross the cut
+    # mesh: min-dimension links cross the cut, ×2 full duplex — pinned
+    assert MeshFabric(5, 4).bisection_bw() == 2 * 4 * 750e9
     assert MeshFabric(5, 8).bisection_bw() == \
         pytest.approx(MeshFabric(5, 4).bisection_bw() * 5 / 4)
-    # FRED: one uplink per group — doubling groups doubles bisection
-    a = FredFabric(CONFIGS["FRED-C"], n_groups=5, group_size=4).bisection
-    b = FredFabric(CONFIGS["FRED-C"], n_groups=10, group_size=4).bisection
+    # FRED: the cut severs the smaller half's uplinks (n_groups // 2),
+    # ×2 full duplex, consistent with the mesh definition — pinned
+    cfg = CONFIGS["FRED-C"]
+    assert FredFabric(cfg, n_groups=4, group_size=4).bisection == \
+        2 * 2 * cfg.l1_l2_bw
+    # odd group counts: the smaller half has floor(n_groups/2) uplinks
+    assert FredFabric(cfg, n_groups=5, group_size=4).bisection == \
+        2 * 2 * cfg.l1_l2_bw
+    a = FredFabric(cfg, n_groups=4, group_size=4).bisection
+    b = FredFabric(cfg, n_groups=8, group_size=4).bisection
     assert b == pytest.approx(2 * a)
+    # bisection_bw() alias matches MeshFabric naming
+    assert FredFabric(cfg).bisection_bw() == FredFabric(cfg).bisection
 
 
 @pytest.mark.parametrize("cfg", ALL_FABRICS[1:])
@@ -168,6 +178,11 @@ def test_strategy_routable_generalized_shapes():
     assert strategy_routable(Strategy(3, 3, 2), 20)
     assert strategy_routable(Strategy(4, 2, 2), 16)
     assert not strategy_routable(Strategy(5, 5, 1), 20)  # oversubscribed
+    # shape-aware path: the actual (n_groups, group_size) fabric shape
+    assert strategy_routable(Strategy(3, 3, 2), (5, 4))
+    assert strategy_routable(Strategy(4, 2, 2), (4, 4))
+    assert not strategy_routable(Strategy(5, 5, 1), (5, 4))  # oversubscribed
+    assert strategy_routable(Strategy(1, 1, 1), (2, 2))      # trivial
 
 
 # --------------------------------------------------------------------------
