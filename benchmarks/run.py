@@ -195,6 +195,53 @@ def bench_sweep():
 
 
 # --------------------------------------------------------------------------
+# autostrategy — sweep-driven (mp, dp, pp, wafers) decisions per model
+# --------------------------------------------------------------------------
+
+# 2-3 registry models spanning the decision space: small-dense (DP-heavy),
+# MoE mid (MP-heavy), and the 480B streaming fallback.  CI diffs these
+# against tests/goldens/autostrategy.json.
+AUTOSTRATEGY_ARCHS = ("llama3.2-1b", "mixtral-8x7b", "arctic-480b")
+
+
+def bench_autostrategy(goldens: str = ""):
+    from repro.core.autostrategy import (DECISION_CSV_HEADER, check_goldens,
+                                         decision_csv_rows, decision_table)
+    box = []
+
+    def run():
+        box[:] = decision_table(AUTOSTRATEGY_ARCHS)
+    us = _time(run, iters=1)
+    decisions = box
+    emit("autostrategy_decisions", us, f"models={len(decisions)}")
+    for d in decisions:
+        emit(f"autostrategy[{d.arch}]", 0.0,
+             f"chosen={d.strategy}@{d.fabric};"
+             f"shape={d.wafer_shape[0]}x{d.wafer_shape[1]};"
+             f"execution={d.execution};"
+             f"mem_GiB={d.memory_bytes_per_npu/2**30:.2f};"
+             f"t_per_sample_us={d.time_per_sample*1e6:.3f};"
+             f"candidates={d.n_candidates};infeasible={d.n_infeasible};"
+             f"dominated={d.n_dominated}")
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    path = out / "autostrategy_decisions.csv"
+    path.write_text("\n".join([DECISION_CSV_HEADER] +
+                              decision_csv_rows(decisions)) + "\n")
+    emit("autostrategy[csv]", 0.0, f"{path} rows={len(decisions)}")
+    if goldens:
+        errors = check_goldens(decisions, goldens)
+        if errors:
+            for e in errors:
+                print(f"autostrategy[GOLDEN-DIFF],0.0,{e}", file=sys.stderr)
+            sys.exit("autostrategy: chosen strategies diverge from "
+                     f"{goldens} — if the cost-model change is intended, "
+                     "regenerate the goldens (tests/test_autostrategy.py "
+                     "prints the new table)")
+        emit("autostrategy[goldens]", 0.0, f"match {goldens}")
+
+
+# --------------------------------------------------------------------------
 # Table III — FRED switch HW overhead
 # --------------------------------------------------------------------------
 
@@ -308,6 +355,7 @@ BENCHES = {
     "fig9": bench_fig9,
     "fig10": bench_fig10,
     "sweep": bench_sweep,
+    "autostrategy": bench_autostrategy,
     "table3": bench_table3,
     "routing": bench_routing,
     "collectives": bench_collectives,
@@ -318,6 +366,10 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--goldens", type=str, default="",
+                    help="autostrategy only: diff chosen strategies "
+                         "against this JSON (tests/goldens/"
+                         "autostrategy.json); exit non-zero on mismatch")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
@@ -326,7 +378,10 @@ def main() -> None:
                  f"choose from {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
-        BENCHES[n]()
+        if n == "autostrategy":
+            bench_autostrategy(goldens=args.goldens)
+        else:
+            BENCHES[n]()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+"""Sweep-driven auto-strategy demo (core/autostrategy.py).
+
+The paper's Fig. 2 question — which (mp, dp, pp) should this model use? —
+answered by the analytical FRED simulator instead of a hand-set config:
+for each requested registry architecture the (fabric × wafer shape ×
+wafer count × strategy) sweep runs under the per-NPU memory-feasibility
+model (weights + optimizer state + remat-scaled activations vs the HBM
+budget) and the Pareto-optimal feasible point is chosen.  Models too big
+to hold weights stationary (arctic-480b) fall back to weight streaming
+(Sec. III-A), exactly like the paper's Transformer-1T.
+
+    PYTHONPATH=src python examples/autostrategy.py [--archs a,b,...]
+        [--shape train_4k] [--npus 64] [--max-wafers 2] [--hbm-gib 16]
+        [--fabrics baseline,FRED-C,FRED-D]
+"""
+
+import argparse
+
+
+def main():
+    from repro.configs.registry import ARCH_IDS
+    from repro.core.autostrategy import decision_table
+    from repro.core.workloads import DEFAULT_NPU_HBM_BYTES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", type=str, default=",".join(ARCH_IDS))
+    ap.add_argument("--shape", type=str, default="train_4k")
+    ap.add_argument("--npus", type=int, default=64, help="NPUs per wafer")
+    ap.add_argument("--max-wafers", type=int, default=2)
+    ap.add_argument("--hbm-gib", type=float,
+                    default=DEFAULT_NPU_HBM_BYTES / 2**30,
+                    help="per-NPU HBM budget, GiB")
+    ap.add_argument("--fabrics", type=str, default="baseline,FRED-C,FRED-D")
+    args = ap.parse_args()
+
+    decisions = decision_table(
+        args.archs.split(","), shape_name=args.shape,
+        n_npus=args.npus, max_wafers=args.max_wafers,
+        npu_hbm_bytes=args.hbm_gib * 2**30,
+        fabrics=tuple(args.fabrics.split(",")))
+
+    print(f"{'arch':16s} {'chosen':24s} {'fabric':8s} {'wafer':7s} "
+          f"{'exec':10s} {'mem/NPU':>8s} {'t/sample':>10s} "
+          f"{'cand':>5s} {'infeas':>6s} {'dom':>5s}")
+    for d in decisions:
+        print(f"{d.arch:16s} {str(d.strategy):24s} {d.fabric:8s} "
+              f"{d.wafer_shape[0]}x{d.wafer_shape[1]:<5d} "
+              f"{d.execution:10s} "
+              f"{d.memory_bytes_per_npu / 2**30:6.2f}Gi "
+              f"{d.time_per_sample * 1e6:8.3f}us "
+              f"{d.n_candidates:5d} {d.n_infeasible:6d} {d.n_dominated:5d}")
+    print(f"\n(memory budget {args.hbm_gib:.0f} GiB/NPU; 'infeas' = "
+          f"candidates failing it, 'dom' = feasible but Pareto-dominated)")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,18 +54,26 @@ def main():
     ap.add_argument("--check-routing", action="store_true",
                     help="verify conflict-free routing per FRED "
                          "(strategy, shape) pair")
+    ap.add_argument("--hbm-gib", type=float, default=0.0,
+                    help="per-NPU HBM budget in GiB: turns on the "
+                         "memory-feasibility objective (Pareto on "
+                         "time/sample × memory/NPU over feasible points)")
     ap.add_argument("--csv", type=str, default="",
                     help="write the full sweep as CSV (schema incl. wafer "
                          "columns: benchmarks/README.md)")
     args = ap.parse_args()
 
+    from repro.core.workloads import MemoryModel
+    memory = (MemoryModel(npu_hbm_bytes=args.hbm_gib * 2**30)
+              if args.hbm_gib else None)
     workload_fn, n_layers = WORKLOADS[args.workload]
     results = sweep(workload_fn, args.npus,
                     fabrics=tuple(args.fabrics.split(",")),
                     n_layers=n_layers, check_routing=args.check_routing,
                     max_wafers=args.max_wafers,
                     inter_wafer_links=args.inter_links,
-                    inter_wafer_bw=args.inter_bw_gbps * 1e9)
+                    inter_wafer_bw=args.inter_bw_gbps * 1e9,
+                    memory=memory, prune_symmetric=True)
     wafers = f", up to {args.max_wafers} wafers" if args.max_wafers > 1 else ""
     print(f"{args.workload} on {args.npus} NPUs/wafer{wafers}: "
           f"{len(results)} sweep points")
@@ -85,11 +93,14 @@ def main():
                 level = (f"  dp intra/inter="
                          f"{r.breakdown.dp_intra*1e3:.2f}/"
                          f"{r.breakdown.dp_inter*1e3:.2f} ms")
+            mem = ""
+            if r.feasible is not None:
+                mem = f"  mem/NPU={r.memory_bytes_per_npu/2**30:6.2f} GiB"
             print(f"  {str(r.strategy):26s} shape={r.shape[0]}x{r.shape[1]}"
                   f"{'x' + str(r.n_wafers) + 'w' if r.n_wafers > 1 else ''}"
                   f"  t/sample={r.time_per_sample*1e6:9.2f} us"
                   f"  params/NPU={r.param_bytes_per_npu/1e9:6.2f} GB"
-                  f"{route}{level}")
+                  f"{mem}{route}{level}")
 
     if args.csv:
         with open(args.csv, "w") as fh:

@@ -1,0 +1,239 @@
+"""Sweep-driven auto-strategy: the simulator picks (mp, dp, pp, wafers).
+
+The paper's thesis (Sec. I, Fig. 2) is that a flexible fabric lets the
+*compiler* pick whatever parallelization strategy compute/memory prefers.
+This module closes that loop for the JAX substrate: given a registry
+``ModelConfig`` and a ``ShapeConfig`` cell, it
+
+  1. derives the analytical :class:`~repro.core.workloads.Workload` via
+     :func:`~repro.core.workloads.from_model_config`,
+  2. runs the (fabric × wafer shape × wafer count × strategy) sweep of
+     :mod:`repro.core.sweep` with the per-NPU memory-feasibility model
+     (weights + optimizer state per the OptimConfig master/moments dtypes
+     + activation footprint under the remat setting, against an
+     ``npu_hbm_bytes`` budget) and canonical-form symmetry pruning,
+  3. falls back to weight-streaming execution (Sec. III-A: weights stream
+     through I/O, optimizer runs near storage) when no weight-stationary
+     strategy fits — the paper's own answer for Transformer-1T-class
+     models, and
+  4. returns the Pareto-optimal feasible point as an
+     :class:`AutoStrategyDecision`, with the dominated/infeasible counts
+     that explain *why* (recorded by the dry-run and the decision table).
+
+``repro.parallel.policy.cell_policy(..., autostrategy=True)`` consumes
+this; ``benchmarks.run --only autostrategy`` emits the per-model decision
+table the CI strategy-regression gate diffs against
+``tests/goldens/autostrategy.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
+
+from .placement import Strategy
+from .sweep import SweepResult, sweep
+from .workloads import (DEFAULT_NPU_HBM_BYTES, MemoryModel,
+                        adapter_n_layers, from_model_config)
+
+if TYPE_CHECKING:
+    from repro.models.config import ModelConfig, ShapeConfig
+
+DEFAULT_FABRICS = ("baseline", "FRED-C", "FRED-D")
+
+
+class InfeasibleModelError(RuntimeError):
+    """No (fabric × shape × wafers × strategy × execution) candidate fits
+    the per-NPU HBM budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoStrategyDecision:
+    """One row of the auto-strategy decision table."""
+    arch: str
+    shape: str                        # ShapeConfig.name
+    fabric: str
+    wafer_shape: Tuple[int, int]      # per-wafer (rows, cols) / (g, k)
+    strategy: Strategy
+    execution: str                    # stationary | streaming
+    remat: str
+    master: bool
+    moments_dtype: str
+    time_per_sample: float
+    memory_bytes_per_npu: float
+    npu_hbm_bytes: float
+    n_candidates: int                 # simulated sweep points (all modes)
+    n_infeasible: int                 # failed the memory predicate
+    n_dominated: int                  # feasible but off the Pareto front
+    sweep_seconds: float
+
+    @property
+    def mp(self) -> int:
+        return self.strategy.mp
+
+    @property
+    def dp(self) -> int:
+        return self.strategy.dp
+
+    @property
+    def pp(self) -> int:
+        return self.strategy.pp
+
+    @property
+    def wafers(self) -> int:
+        return self.strategy.wafers
+
+    def golden(self) -> Dict[str, object]:
+        """The fields the CI strategy-regression gate pins."""
+        return {"mp": self.mp, "dp": self.dp, "pp": self.pp,
+                "wafers": self.wafers, "fabric": self.fabric,
+                "execution": self.execution}
+
+
+def _pick(front: Sequence[SweepResult]) -> SweepResult:
+    """Deterministic choice from the feasible Pareto front: fastest first,
+    then smallest footprint, fewest wafers, and a total lexical tiebreak."""
+    return min(front, key=lambda r: (
+        r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers, r.fabric,
+        r.shape, (r.strategy.mp, r.strategy.dp, r.strategy.pp)))
+
+
+def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
+                    n_npus: int = 64,
+                    fabrics: Sequence[str] = DEFAULT_FABRICS,
+                    max_wafers: int = 2,
+                    npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
+                    master: bool = True,
+                    moments_dtype: str = "float32",
+                    remat: str = "full",
+                    min_utilization: float = 0.9,
+                    prune_symmetric: bool = True) -> AutoStrategyDecision:
+    """Return the simulator-chosen, memory-feasible strategy for a cell.
+
+    Weight-stationary execution is preferred (paper Sec. III-A);
+    weight-streaming is tried only when no stationary candidate fits the
+    HBM budget, which is how Transformer-1T-class models (arctic-480b)
+    become feasible at wafer scale.  Raises :class:`InfeasibleModelError`
+    if neither mode yields a feasible point.
+
+    Serving cells (``shape.kind != "train"``) drop gradients/optimizer
+    state and add the KV cache in the memory model; the simulated time is
+    still the training-iteration model, so serving decisions rank
+    strategies by the same communication structure, not absolute latency.
+    """
+    training = shape.kind == "train"
+    mem = MemoryModel(npu_hbm_bytes=npu_hbm_bytes, master=master,
+                      moments_dtype=moments_dtype, remat=remat,
+                      training=training)
+    n_layers = adapter_n_layers(cfg)
+    n_candidates = n_infeasible = 0
+    t0 = time.perf_counter()
+    for execution in ("stationary", "streaming"):
+        def wl(st: Strategy, _e=execution):
+            return from_model_config(cfg, shape, st, execution=_e)
+        results = sweep(wl, n_npus, fabrics=fabrics, n_layers=n_layers,
+                        min_utilization=min_utilization,
+                        max_wafers=max_wafers, memory=mem,
+                        prune_symmetric=prune_symmetric)
+        n_candidates += len(results)
+        feasible = [r for r in results if r.feasible]
+        n_infeasible += len(results) - len(feasible)
+        if not feasible:
+            continue
+        front = [r for r in feasible if r.pareto]
+        chosen = _pick(front)
+        return AutoStrategyDecision(
+            arch=cfg.name, shape=shape.name, fabric=chosen.fabric,
+            wafer_shape=chosen.shape, strategy=chosen.strategy,
+            execution=execution, remat=remat, master=master,
+            moments_dtype=moments_dtype,
+            time_per_sample=chosen.time_per_sample,
+            memory_bytes_per_npu=chosen.memory_bytes_per_npu,
+            npu_hbm_bytes=npu_hbm_bytes,
+            n_candidates=n_candidates, n_infeasible=n_infeasible,
+            n_dominated=len(feasible) - len(front),
+            sweep_seconds=time.perf_counter() - t0)
+    raise InfeasibleModelError(
+        f"{cfg.name}/{shape.name}: none of {n_candidates} candidates fits "
+        f"{npu_hbm_bytes / 2**30:.1f} GiB/NPU at {n_npus} NPUs/wafer × "
+        f"≤{max_wafers} wafers (try more NPUs, wafers, or a leaner "
+        f"OptimConfig)")
+
+
+# --------------------------------------------------------------------------
+# decision table (benchmarks.run --only autostrategy / CI artifact)
+# --------------------------------------------------------------------------
+
+DECISION_CSV_HEADER = (
+    "arch,shape,fabric,shape_a,shape_b,mp,dp,pp,wafers,execution,remat,"
+    "master,moments_dtype,time_per_sample_s,memory_bytes_per_npu,"
+    "npu_hbm_bytes,n_candidates,n_infeasible,n_dominated,sweep_s")
+
+
+def decision_csv_rows(decisions: Sequence[AutoStrategyDecision]) -> List[str]:
+    rows = []
+    for d in decisions:
+        rows.append(
+            f"{d.arch},{d.shape},{d.fabric},"
+            f"{d.wafer_shape[0]},{d.wafer_shape[1]},"
+            f"{d.mp},{d.dp},{d.pp},{d.wafers},{d.execution},{d.remat},"
+            f"{int(d.master)},{d.moments_dtype},"
+            f"{d.time_per_sample:.9g},{d.memory_bytes_per_npu:.9g},"
+            f"{d.npu_hbm_bytes:.9g},{d.n_candidates},{d.n_infeasible},"
+            f"{d.n_dominated},{d.sweep_seconds:.3f}")
+    return rows
+
+
+def decision_table(archs: Sequence[str], shape_name: str = "train_4k",
+                   **kw) -> List[AutoStrategyDecision]:
+    """Run :func:`choose_strategy` for each registry arch on one shape.
+
+    The policy's frozen per-arch OptimConfig defaults feed the memory
+    model (the same settings ``cell_policy`` would return), so the table
+    is exactly what ``autostrategy=True`` decides."""
+    from repro.configs.registry import get_config
+    from repro.models.config import SHAPES_BY_NAME
+    from repro.parallel.policy import paper_defaults
+    shape = SHAPES_BY_NAME[shape_name]
+    out = []
+    for arch in archs:
+        cfg = get_config(arch)
+        pcfg, ocfg = paper_defaults(cfg, shape)
+        out.append(choose_strategy(
+            cfg, shape, master=ocfg.master,
+            moments_dtype=ocfg.moments_dtype, remat=pcfg.remat, **kw))
+    return out
+
+
+def check_goldens(decisions: Sequence[AutoStrategyDecision],
+                  golden_path: str) -> List[str]:
+    """Diff chosen strategies against the checked-in goldens.
+
+    Returns human-readable mismatch lines (empty = green).  The golden
+    file maps ``"{arch}/{shape}"`` → :meth:`AutoStrategyDecision.golden`
+    dicts; a cost-model change that silently flips any (mp, dp, pp,
+    wafers, fabric, execution) fails the CI gate."""
+    with open(golden_path) as fh:
+        goldens = json.load(fh)
+    errors = []
+    seen = set()
+    for d in decisions:
+        key = f"{d.arch}/{d.shape}"
+        seen.add(key)
+        want = goldens.get(key)
+        if want is None:
+            errors.append(f"{key}: no golden entry (add it to "
+                          f"{golden_path})")
+            continue
+        got = d.golden()
+        if got != want:
+            errors.append(f"{key}: chosen {got} != golden {want}")
+    # a golden with no matching decision means the gate lost coverage
+    # (model dropped/renamed in the bench list) — that must fail too
+    for key in sorted(set(goldens) - seen):
+        errors.append(f"{key}: golden has no matching decision (model "
+                      f"removed from the bench list? delete the golden "
+                      f"entry if intended)")
+    return errors

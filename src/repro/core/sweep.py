@@ -32,7 +32,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .placement import Strategy
 from .simulator import Breakdown, Simulator
-from .workloads import Workload, transformer
+from .workloads import (MemoryModel, Workload, is_feasible,
+                        memory_bytes_per_npu, transformer)
 
 FABRICS = ("baseline", "FRED-A", "FRED-B", "FRED-C", "FRED-D")
 
@@ -115,6 +116,54 @@ def strategy_space(n_npus: int, n_layers: Optional[int] = None,
 
 
 # --------------------------------------------------------------------------
+# canonical-form dedup (symmetry pruning)
+# --------------------------------------------------------------------------
+
+def sim_signature(st: Strategy, w: Workload) -> Tuple:
+    """Canonical form of a divisor triple: the exact inputs
+    :meth:`Simulator.run` reads for ``w`` under ``st``.
+
+    Two strategies with equal signatures produce bit-identical Breakdowns
+    (and sweep objectives) on *any* fabric/shape, so the sweep simulates
+    only one representative per signature and replicates the result.
+
+    Note the often-assumed mp↔dp swap symmetry does NOT hold in this
+    model — (mp=9, dp=2) and (mp=2, dp=9) differ in compute shard, MP
+    collective group, DP gradient bytes AND both Pareto objectives
+    (tests/test_autostrategy.py pins a numeric counterexample) — which is
+    exactly why the dedup keys on the simulation inputs instead of a
+    syntactic (sorted-triple) canonical form: pruning can never change
+    the Pareto front, only skip provably redundant simulator calls.
+    """
+    layers_per_stage = -(-w.n_layers // st.pp)
+    microbatches = 8 if (st.pp > 1 and w.execution == "stationary") else \
+        max(st.pp, 1)
+    act_bytes = w.act_bytes_per_sample * w.samples_per_dp
+    # components are guarded exactly as Simulator.run guards the terms, so
+    # a skipped term contributes nothing to the canonical form
+    mp_term = (st.mp, st.dp * st.pp, act_bytes, w.mp_allreduce_per_layer) \
+        if (st.mp > 1 and w.mp_allreduce_per_layer) else None
+    pp_term = (act_bytes, microbatches, st.pp) if st.pp > 1 else None
+    dp_term = ((st.dp, st.mp, st.pp, w.params_per_layer / st.mp)
+               if (st.dp > 1 and w.execution == "stationary") else None)
+    stream_term = ((w.param_bytes_total / st.pp,
+                    w.minibatch * w.act_bytes_per_sample)
+                   if w.execution == "streaming" else None)
+    return (
+        w.name, w.execution, st.wafers,
+        # compute: per-NPU FLOPs share and pipeline pacing
+        w.flops_fwd_per_sample_layer * w.samples_per_dp / st.mp,
+        layers_per_stage, microbatches,
+        mp_term, pp_term, dp_term, stream_term,
+        # normalizers / objectives (incl. the memory-model inputs: seq,
+        # per-MP-shard layer params, KV bytes — exact under any MemoryModel)
+        w.samples_per_dp, w.minibatch, w.seq,
+        w.params_per_layer / st.mp, w.kv_bytes_per_sample_layer,
+        w.param_bytes_total / (st.mp * st.pp),
+    )
+
+
+# --------------------------------------------------------------------------
 # sweep
 # --------------------------------------------------------------------------
 
@@ -131,6 +180,10 @@ class SweepResult:
     n_wafers: int = 1                 # wafers in the cluster (shape is
                                       # per wafer; total NPUs scale with it)
     inter_wafer_bw: float = 0.0       # aggregate wafer↔wafer B/s (0 ≡ n/a)
+    memory_bytes_per_npu: float = 0.0  # per-NPU footprint under the sweep's
+                                       # MemoryModel (0 when none given)
+    feasible: Optional[bool] = None    # fits npu_hbm_bytes; None = not
+                                       # evaluated (no MemoryModel)
 
     @property
     def total(self) -> float:
@@ -177,7 +230,9 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           max_wafers: int = 1,
           inter_wafer_links: int = 32,
           inter_wafer_bw: float = 400e9,
-          inter_wafer_latency: float = 5e-7) -> List[SweepResult]:
+          inter_wafer_latency: float = 5e-7,
+          memory: Optional[MemoryModel] = None,
+          prune_symmetric: bool = False) -> List[SweepResult]:
     """Run the full (fabric × wafer shape × wafer count × strategy)
     cross-product.
 
@@ -199,7 +254,19 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     shape): the memo is keyed on both, and the actual (n_groups,
     group_size) shape is passed to :func:`repro.core.routing
     .strategy_routable` — for clusters, the per-wafer sub-strategy is
-    what must route on the wafer switch."""
+    what must route on the wafer switch.
+
+    ``memory`` (a :class:`~repro.core.workloads.MemoryModel`) turns on the
+    per-NPU memory-feasibility objective: every result carries
+    ``memory_bytes_per_npu`` and ``feasible``, and the Pareto front is
+    computed on (time_per_sample, memory_bytes_per_npu) over *feasible*
+    points only — an infeasible strategy is never flagged pareto.
+
+    ``prune_symmetric`` dedupes candidate strategies by canonical
+    simulation signature (:func:`sim_signature`) before simulating and
+    replicates results onto the pruned twins, so the returned point set
+    and Pareto front are identical to the unpruned sweep by construction
+    (pinned at 20 NPUs in tests/test_autostrategy.py)."""
     if n_npus < 1:
         raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
     # explicitly passed strategies always run: widen the wafer-count
@@ -233,6 +300,9 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 cands = [st for st in strategies if st.wafers == wf]
             else:
                 cands = space[wf]
+            # canonical-form dedup: one simulation per signature on this
+            # (fabric, shape, wafer-count); twins replicate the breakdown
+            sig_memo: Dict[Tuple, Breakdown] = {}
             for st in cands:
                 if st.n_workers > sim.n_npus or \
                         st.dp % st.wafers != 0 or \
@@ -241,7 +311,19 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 w = workload_fn(st)
                 if st.pp > w.n_layers:    # stages must hold whole layers
                     continue
-                br = sim.run(w)
+                if prune_symmetric:
+                    sig = sim_signature(st, w)
+                    br = sig_memo.get(sig)
+                    if br is None:
+                        br = sim.run(w)
+                        sig_memo[sig] = br
+                else:
+                    br = sim.run(w)
+                mem_bytes = 0.0
+                feas: Optional[bool] = None
+                if memory is not None:
+                    mem_bytes = memory_bytes_per_npu(w, memory)
+                    feas = is_feasible(w, memory)
                 routable = None
                 if check_routing and fabric != "baseline":
                     # uplink count depends on the FRED config, so it is
@@ -261,10 +343,19 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                     param_bytes_per_npu=w.param_bytes_total /
                     (st.mp * st.pp),
                     routable=routable, n_wafers=wf,
-                    inter_wafer_bw=agg_inter_bw if wf > 1 else 0.0))
+                    inter_wafer_bw=agg_inter_bw if wf > 1 else 0.0,
+                    memory_bytes_per_npu=mem_bytes, feasible=feas))
     for fabric in set(r.fabric for r in results):
         subset = [r for r in results if r.fabric == fabric]
-        for r in pareto_front(subset):
+        if memory is not None:
+            # infeasible points never make the front; the memory objective
+            # replaces the weight-only param_bytes proxy
+            front = pareto_front([r for r in subset if r.feasible],
+                                 keys=("time_per_sample",
+                                       "memory_bytes_per_npu"))
+        else:
+            front = pareto_front(subset)
+        for r in front:
             r.pareto = True
     return results
 
@@ -309,7 +400,8 @@ CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
               "inter_wafer_bw,mp,dp,pp,minibatch,"
               "compute_s,input_load_s,mp_s,dp_s,dp_intra_s,dp_inter_s,"
               "pp_s,stream_s,total_s,"
-              "time_per_sample_s,param_bytes_per_npu,routable,pareto")
+              "time_per_sample_s,param_bytes_per_npu,"
+              "memory_bytes_per_npu,feasible,routable,pareto")
 
 
 def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
@@ -328,6 +420,8 @@ def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
             f"{br.dp:.9g},{br.dp_intra:.9g},{br.dp_inter:.9g},"
             f"{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
             f"{r.time_per_sample:.9g},{r.param_bytes_per_npu:.9g},"
+            f"{r.memory_bytes_per_npu:.9g},"
+            f"{'' if r.feasible is None else int(r.feasible)},"
             f"{'' if r.routable is None else int(r.routable)},"
             f"{int(r.pareto)}")
     return rows

@@ -41,8 +41,15 @@ def _build_mesh(kind: str):
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             pcfg_overrides=None, probe: bool = True) -> dict:
-    """Lower + compile one cell; return the roofline record."""
+             pcfg_overrides=None, probe: bool = True,
+             autostrategy: bool = False) -> dict:
+    """Lower + compile one cell; return the roofline record.
+
+    ``autostrategy=True`` lets the FRED simulator sweep pick the cell's
+    (mp, dp, pp, wafers) — the chosen strategy and the *why* (candidate /
+    infeasible / dominated counts) are recorded under ``"autostrategy"``
+    and the strategy is stamped on the recorded pcfg.  ``pcfg_overrides``
+    still win afterwards (§Perf hillclimbs)."""
     import jax
     from repro.configs.registry import get_config, shape_applicability
     from repro.models.config import SHAPES_BY_NAME
@@ -59,7 +66,31 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "status": "skipped", "reason": why}
 
     mesh = _build_mesh(mesh_kind)
-    pcfg, ocfg = cell_policy(cfg, shape, mesh)
+    auto_rec = None
+    decision = None
+    if autostrategy:
+        from repro.core.autostrategy import choose_strategy
+        from repro.parallel.policy import paper_defaults
+        pcfg0, ocfg0 = paper_defaults(cfg, shape)
+        decision = choose_strategy(cfg, shape, master=ocfg0.master,
+                                   moments_dtype=ocfg0.moments_dtype,
+                                   remat=pcfg0.remat)
+        d = decision
+        auto_rec = {
+            "chosen": {"mp": d.mp, "dp": d.dp, "pp": d.pp,
+                       "wafers": d.wafers, "fabric": d.fabric,
+                       "wafer_shape": list(d.wafer_shape),
+                       "execution": d.execution},
+            "time_per_sample_s": d.time_per_sample,
+            "memory_bytes_per_npu": d.memory_bytes_per_npu,
+            "npu_hbm_bytes": d.npu_hbm_bytes,
+            "why": {"n_candidates": d.n_candidates,
+                    "n_infeasible": d.n_infeasible,
+                    "n_dominated": d.n_dominated},
+            "sweep_seconds": round(d.sweep_seconds, 3),
+        }
+    pcfg, ocfg = cell_policy(cfg, shape, mesh, autostrategy=autostrategy,
+                             decision=decision)
     if pcfg_overrides:
         pcfg = pcfg.replace(**pcfg_overrides)
 
@@ -96,6 +127,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "collectives": colls,
         "pcfg": {k: v for k, v in dataclasses.asdict(pcfg).items()},
     }
+    if auto_rec is not None:
+        rec["autostrategy"] = auto_rec
 
     if probe:
         rec["probe"] = probe_layer_cost(cfg, shape, mesh, pcfg)
@@ -153,6 +186,10 @@ def main(argv=None):
                     default="single")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--autostrategy", action="store_true",
+                    help="let the FRED simulator sweep pick (mp, dp, pp, "
+                         "wafers) per cell; records the decision + "
+                         "dominated/infeasible counts in the artifact")
     ap.add_argument("--out", type=str, default="artifacts/dryrun")
     args = ap.parse_args(argv)
 
@@ -173,7 +210,8 @@ def main(argv=None):
                 name = f"{arch}__{shape}__{mk}"
                 path = outdir / f"{name}.json"
                 try:
-                    rec = run_cell(arch, shape, mk, probe=not args.no_probe)
+                    rec = run_cell(arch, shape, mk, probe=not args.no_probe,
+                                   autostrategy=args.autostrategy)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape, "mesh": mk,
@@ -186,6 +224,11 @@ def main(argv=None):
                     mb = rec["memory_per_device"]["total_bytes"] / 2**30
                     extra = (f" mem/dev={mb:.2f}GiB "
                              f"compile={rec['seconds']['compile']}s")
+                    if "autostrategy" in rec:
+                        c = rec["autostrategy"]["chosen"]
+                        extra += (f" auto=MP{c['mp']}-DP{c['dp']}-"
+                                  f"PP{c['pp']}-W{c['wafers']}"
+                                  f"@{c['fabric']}/{c['execution']}")
                 print(f"[dryrun] {name}: {status}{extra}", flush=True)
     if failures:
         print(f"[dryrun] {failures} FAILURES", file=sys.stderr)

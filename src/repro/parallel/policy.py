@@ -5,17 +5,35 @@ parallelization strategy compute/memory prefers (Sec. I, Fig. 2).  This
 module is that policy layer for the JAX runtime: given (arch × shape × mesh)
 it returns the ParallelConfig/OptimConfig the step builders use.
 
-Defaults are the *paper-faithful hierarchical* schedule; the dry-run records
-these, and §Perf hillclimbs override via ``pcfg_overrides``.
+Two modes:
+
+* ``autostrategy=False`` (default) — the frozen *paper-faithful* schedule:
+  hand-set optimizer memory modes, remat, and attention chunking, exactly
+  as recorded by the dry-runs (pinned in tests/test_autostrategy.py).
+* ``autostrategy=True`` — sweep-driven: the analytical FRED simulator
+  (``core.sweep`` via ``core.autostrategy.choose_strategy``) picks the
+  memory-feasible Pareto-optimal (mp, dp, pp, wafers) for the cell under
+  the frozen defaults' OptimConfig/remat settings, and the decision lands
+  in ``ParallelConfig.auto_strategy`` (plus ``grad_sync="hierarchical"``
+  for cross-wafer DP).  The JAX mesh itself is built by the launcher —
+  the recorded strategy is what the dry-run logs and what wafer-side
+  placement (``core.placement``) executes.
+
+§Perf hillclimbs still override via ``pcfg_overrides`` after either mode.
 """
 
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 from repro.models.config import ModelConfig, ParallelConfig, ShapeConfig
 from repro.train.optim import OptimConfig
 
 
-def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh):
+def paper_defaults(cfg: ModelConfig, shape: ShapeConfig
+                   ) -> Tuple[ParallelConfig, OptimConfig]:
+    """The frozen paper-faithful hierarchical schedule (pre-autostrategy
+    behavior, bit-identical; pinned in tests/test_autostrategy.py)."""
     pcfg = ParallelConfig()
     ocfg = OptimConfig()
 
@@ -39,4 +57,35 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh):
     if shape.seq_len >= 32_768:
         pcfg = pcfg.replace(attn_q_chunk=512, attn_k_chunk=1024)
 
+    return pcfg, ocfg
+
+
+def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                autostrategy: bool = False,
+                sweep_kw: Optional[dict] = None,
+                decision=None) -> Tuple[ParallelConfig, OptimConfig]:
+    """Policy for one (arch × shape × mesh) cell.
+
+    ``autostrategy=True`` runs the simulator sweep (``sweep_kw`` forwards
+    to :func:`repro.core.autostrategy.choose_strategy`: n_npus, fabrics,
+    max_wafers, npu_hbm_bytes, ...) and stamps the chosen strategy on the
+    returned ``ParallelConfig``; the frozen defaults are returned
+    unchanged when ``False``.  A precomputed
+    :class:`~repro.core.autostrategy.AutoStrategyDecision` can be passed
+    as ``decision`` to skip the sweep (the dry-run records it anyway)."""
+    pcfg, ocfg = paper_defaults(cfg, shape)
+    if not autostrategy:
+        return pcfg, ocfg
+
+    if decision is None:
+        from repro.core.autostrategy import choose_strategy
+        decision = choose_strategy(
+            cfg, shape, master=ocfg.master, moments_dtype=ocfg.moments_dtype,
+            remat=pcfg.remat, **(sweep_kw or {}))
+    st = decision.strategy
+    pcfg = pcfg.replace(auto_strategy=(st.mp, st.dp, st.pp, st.wafers))
+    if st.wafers > 1:
+        # cross-wafer DP must use the FRED-style reduction tree: RS within
+        # the wafer, AR on the shard over the wafer↔wafer links, AG within
+        pcfg = pcfg.replace(grad_sync="hierarchical")
     return pcfg, ocfg
