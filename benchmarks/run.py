@@ -195,6 +195,83 @@ def bench_sweep():
 
 
 # --------------------------------------------------------------------------
+# sweepperf — scalar vs batched sweep-engine wall time (BENCH_sweep.json)
+# --------------------------------------------------------------------------
+
+# (case name, sweep kwargs): the perf-trajectory grid.  64-NPU and
+# 64-NPU × 4-wafer run both engines; the exhaustive 512-NPU sweep (8×64 /
+# 16×32-class FRED shapes) is batched-only unless --sweepperf-full — the
+# scalar oracle needs tens of seconds there, which is the point.
+SWEEPPERF_CASES = (
+    ("64npu", dict(n_npus=64, max_wafers=1)),
+    ("64npu_4wafer", dict(n_npus=64, max_wafers=4)),
+    ("512npu", dict(n_npus=512, max_wafers=1)),
+)
+
+
+def bench_sweepperf(full: bool = False, budget_64: float = 0.0,
+                    budget_512: float = 0.0):
+    """Wall-time + points/sec for the sweep engines; writes
+    BENCH_sweep.json (schema: benchmarks/README.md) so future PRs have a
+    perf baseline to regress against.  ``budget_*`` (seconds, 0 = off)
+    turn the bench into a CI gate on the batched engine."""
+    from repro.core import batch_engine  # noqa: F401 — preload numpy path
+    from repro.core.sweep import transformer_17b_sweep
+
+    transformer_17b_sweep(20)            # warm imports/allocators once
+    cases = {}
+    for name, kw in SWEEPPERF_CASES:
+        engines = ["batched", "scalar"]
+        if name == "512npu" and not full:
+            engines = ["batched"]
+        entry = {"n_npus": kw["n_npus"], "max_wafers": kw["max_wafers"],
+                 "points": 0, "engines": {}}
+        for eng in engines:
+            if eng == "scalar":
+                iters = 1 if kw["n_npus"] >= 512 else 3
+            else:
+                iters = 5
+            best = None
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                res = transformer_17b_sweep(engine=eng, **kw)
+                dt = time.perf_counter() - t0
+                best = dt if best is None else min(best, dt)
+            entry["points"] = len(res)
+            entry["engines"][eng] = {
+                "seconds": round(best, 4),
+                "points_per_sec": round(len(res) / best, 1)}
+            emit(f"sweepperf[{name}|{eng}]", best * 1e6,
+                 f"points={len(res)};points_per_sec={len(res)/best:.0f}")
+        if "scalar" in entry["engines"]:
+            sp = (entry["engines"]["scalar"]["seconds"] /
+                  entry["engines"]["batched"]["seconds"])
+            entry["speedup_batched_vs_scalar"] = round(sp, 2)
+            emit(f"sweepperf[{name}|speedup]", 0.0,
+                 f"batched_vs_scalar={sp:.1f}x")
+        cases[name] = entry
+    payload = {"schema": 1, "workload": "Transformer-17B",
+               "timing": "best-of-N wall time per engine", "cases": cases}
+    Path("BENCH_sweep.json").write_text(
+        json.dumps(payload, indent=2) + "\n")
+    emit("sweepperf[json]", 0.0, f"BENCH_sweep.json cases={len(cases)}")
+    errors = []
+    b64 = cases["64npu"]["engines"]["batched"]["seconds"]
+    b512 = cases["512npu"]["engines"]["batched"]["seconds"]
+    if budget_64 and b64 > budget_64:
+        errors.append(f"64npu batched sweep {b64:.3f}s > {budget_64}s budget")
+    if budget_512 and b512 > budget_512:
+        errors.append(f"512npu batched sweep {b512:.3f}s > "
+                      f"{budget_512}s budget")
+    if errors:
+        for e in errors:
+            print(f"sweepperf[BUDGET],0.0,{e}", file=sys.stderr)
+        sys.exit("sweepperf: batched sweep blew the CI wall-time budget — "
+                 "a perf regression in core/batch_engine.py or core/"
+                 "sweep.py (compare against the committed BENCH_sweep.json)")
+
+
+# --------------------------------------------------------------------------
 # autostrategy — sweep-driven (mp, dp, pp, wafers) decisions per model
 # --------------------------------------------------------------------------
 
@@ -355,6 +432,7 @@ BENCHES = {
     "fig9": bench_fig9,
     "fig10": bench_fig10,
     "sweep": bench_sweep,
+    "sweepperf": bench_sweepperf,
     "autostrategy": bench_autostrategy,
     "table3": bench_table3,
     "routing": bench_routing,
@@ -370,6 +448,17 @@ def main() -> None:
                     help="autostrategy only: diff chosen strategies "
                          "against this JSON (tests/goldens/"
                          "autostrategy.json); exit non-zero on mismatch")
+    ap.add_argument("--sweepperf-full", action="store_true",
+                    help="sweepperf only: also time the scalar engine on "
+                         "the 512-NPU sweep (tens of seconds — the "
+                         "committed BENCH_sweep.json is generated with "
+                         "this flag)")
+    ap.add_argument("--sweepperf-budget-64", type=float, default=0.0,
+                    help="sweepperf only: fail if the 64-NPU batched "
+                         "sweep exceeds this many seconds (CI gate)")
+    ap.add_argument("--sweepperf-budget-512", type=float, default=0.0,
+                    help="sweepperf only: fail if the 512-NPU batched "
+                         "sweep exceeds this many seconds (CI gate)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
@@ -380,6 +469,10 @@ def main() -> None:
     for n in names:
         if n == "autostrategy":
             bench_autostrategy(goldens=args.goldens)
+        elif n == "sweepperf":
+            bench_sweepperf(full=args.sweepperf_full,
+                            budget_64=args.sweepperf_budget_64,
+                            budget_512=args.sweepperf_budget_512)
         else:
             BENCHES[n]()
 

@@ -15,13 +15,22 @@ print as ``...-W(n)`` with their per-level (intra/inter-wafer) DP time;
 the CSV gains the ``n_wafers`` / ``inter_wafer_bw`` / ``dp_intra_s`` /
 ``dp_inter_s`` columns (schema: benchmarks/README.md).
 
+``--engine {batched,scalar}`` selects the evaluator (default batched —
+the vectorized NumPy engine of core/batch_engine.py; scalar walks
+``Simulator.run`` per point).  Both are bit-identical; the measured
+sweep wall time is printed so the speedup is visible:
+
+    PYTHONPATH=src python examples/topology_sweep.py --npus 64 \
+        --max-wafers 4 --engine scalar     # ~10-15x the batched time
+
     PYTHONPATH=src python examples/topology_sweep.py [--npus 20]
         [--fabrics baseline,FRED-C,FRED-D] [--workload t17b|gpt3]
         [--max-wafers 2] [--inter-links 32] [--inter-bw-gbps 400]
-        [--check-routing] [--csv out.csv]
+        [--check-routing] [--engine batched|scalar] [--csv out.csv]
 """
 
 import argparse
+import time
 
 from repro.core.placement import Strategy
 from repro.core.sweep import (CSV_HEADER, sweep, to_csv_rows,
@@ -58,6 +67,11 @@ def main():
                     help="per-NPU HBM budget in GiB: turns on the "
                          "memory-feasibility objective (Pareto on "
                          "time/sample × memory/NPU over feasible points)")
+    ap.add_argument("--engine", choices=("batched", "scalar"),
+                    default="batched",
+                    help="sweep evaluator: vectorized NumPy batch engine "
+                         "(default) or the scalar per-point reference — "
+                         "bit-identical results, very different wall time")
     ap.add_argument("--csv", type=str, default="",
                     help="write the full sweep as CSV (schema incl. wafer "
                          "columns: benchmarks/README.md)")
@@ -67,16 +81,20 @@ def main():
     memory = (MemoryModel(npu_hbm_bytes=args.hbm_gib * 2**30)
               if args.hbm_gib else None)
     workload_fn, n_layers = WORKLOADS[args.workload]
+    t0 = time.perf_counter()
     results = sweep(workload_fn, args.npus,
                     fabrics=tuple(args.fabrics.split(",")),
                     n_layers=n_layers, check_routing=args.check_routing,
                     max_wafers=args.max_wafers,
                     inter_wafer_links=args.inter_links,
                     inter_wafer_bw=args.inter_bw_gbps * 1e9,
-                    memory=memory, prune_symmetric=True)
+                    memory=memory, prune_symmetric=True,
+                    engine=args.engine)
+    elapsed = time.perf_counter() - t0
     wafers = f", up to {args.max_wafers} wafers" if args.max_wafers > 1 else ""
     print(f"{args.workload} on {args.npus} NPUs/wafer{wafers}: "
-          f"{len(results)} sweep points")
+          f"{len(results)} sweep points in {elapsed:.3f} s "
+          f"({args.engine} engine, {len(results)/elapsed:,.0f} points/s)")
 
     for fabric in args.fabrics.split(","):
         front = sorted((r for r in results

@@ -1,0 +1,631 @@
+"""Batched array-programming evaluation of the analytical cost model.
+
+The scalar reference (:meth:`repro.core.simulator.Simulator.run`) walks
+one strategy at a time: it materializes a full device placement, extracts
+the representative collective groups, and dispatches per-strategy Python
+calls into the fabric models.  That is ~1.8 s for a 64-NPU × 4-wafer
+sweep and prohibitive at 500+-NPU wafers.  This module evaluates *all*
+strategies of one (fabric, wafer shape, wafer count) configuration as
+vectorized NumPy ops over ``float64``/``int64`` arrays, reproducing the
+scalar engine's floating-point results **bit-for-bit** by performing the
+exact same IEEE-754 operations in the exact same order (pinned by the
+hypothesis property tests in tests/test_batch_engine.py).
+
+Three facts make full vectorization possible without placement surgery:
+
+  1. Under the canonical placements (``fred_placement`` /
+     ``mesh_placement`` / ``cluster_placement``) every representative
+     group the simulator reads is an arithmetic progression from NPU 0:
+     the first MP group is ``strided_group(mp, 1)`` and the first DP
+     group (per wafer) is ``strided_group(dp_per_wafer, mp·pp)``.
+  2. The only *group-dependent* inputs of the fabric models are small
+     integer structures — the mesh ring's (congestion, mean X-Y hops)
+     and the FRED tree's (L1 span g, max members per L1 k) — computed
+     once per distinct (topology, count, stride) pattern via
+     :meth:`MeshFabric.ring_structure` / :meth:`FredFabric
+     .span_structure`, memoized at module level, and broadcast into the
+     array math.
+  3. The per-candidate workload parameters are fabric-independent, so a
+     :class:`CandidateBatch` packs them into tensors once per wafer
+     count and every (fabric, shape) configuration reuses the pack.
+
+Term map onto the paper's Sec. VII cost model (and the scalar code):
+
+  * **compute** (Sec. VII-A): per-layer FLOPs / (peak·efficiency),
+    MP-sharded — ``flops · samples / mp / eff`` — times the GPipe bubble
+    ``(M + S − 1)/M`` (Sec. VII-C) with M = 8 microbatches for
+    weight-stationary pipelines;
+  * **MP comm** (Sec. VII-B): blocking per-layer All-Reduces, fwd + bwd,
+    at the fabric's effective bandwidth — mesh rings: ``2(n−1)`` steps of
+    ``2(n−1)/n·D`` endpoint traffic over congested X-Y routes (the
+    wafer-wide case switches to the hierarchical-2D algorithm exactly
+    where ``n == rows·cols``); FRED trees: 4 fabric traversals of
+    (in-network: halved) traffic (Sec. V/VIII) — with ``dp·pp/wafers``
+    groups contending for the spine;
+  * **PP comm** (Sec. VII-C): boundary activation transfer per
+    microbatch, exposed for the ``M + S − 1`` bubble slots;
+  * **DP comm** (Sec. VII-B): per-layer gradient All-Reduce — on
+    clusters the hierarchical RS(intra) → AR(inter-wafer ring) →
+    AG(intra) decomposition of core/cluster.py — water-filled against
+    the remaining backward compute.  The scalar engine accumulates the
+    per-layer All-Reduce with repeated float adds; the batch engine
+    replays that *iterated* sum (deduplicated over distinct
+    (time, layers) pairs), because collapsing it to a multiply would
+    round differently;
+  * **weight streaming + input load** (Sec. III-A, VIII): model streamed
+    at the wafer's sustainable I/O rate overlapped with compute + MP;
+    minibatch load exposed while I/O is busy.
+
+The engine also vectorizes the per-NPU memory-feasibility model
+(:func:`repro.core.workloads.memory_bytes_per_npu`) so sweeps mask
+infeasible points in array math before any per-point Python runs, and
+``repro.core.sweep.sweep(engine="batched")`` rides it by default with
+the scalar path retained as the reference oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .simulator import Breakdown, NPU_PEAK_FLOPS, Simulator
+from .workloads import (ACT_REMAT_MULT, BYTES, MemoryModel, Workload,
+                        optimizer_bytes_per_param)
+
+# module-level structural memos — keyed by the *topology* identity only
+# (mesh rows×cols / FRED group_size), so FRED-C and FRED-D of one shape,
+# and every wafer count of a cluster, share entries
+_RING_STRUCTS: Dict[Tuple[int, int, int, int], Tuple[int, float]] = {}
+_SPAN_STRUCTS: Dict[Tuple[int, int, int], Tuple[int, int]] = {}
+
+
+def _f(a) -> np.ndarray:
+    return np.asarray(a, dtype=np.float64)
+
+
+def _unique_rows(arrs: Sequence[np.ndarray]
+                 ) -> Tuple[List[Tuple[int, ...]], np.ndarray]:
+    """(unique rows as int tuples, inverse indices) for parallel int64
+    columns — bytewise void-view dedup, far faster than unique(axis=0)."""
+    key = np.stack(arrs, axis=1)
+    kv = np.ascontiguousarray(key).view(
+        np.dtype((np.void, key.shape[1] * 8))).ravel()
+    _, first, inv = np.unique(kv, return_index=True, return_inverse=True)
+    return [tuple(r) for r in key[first].tolist()], inv
+
+
+def _ring_structures_np(rows: int, cols: int, counts: np.ndarray,
+                        strides: np.ndarray
+                        ) -> List[Tuple[int, float]]:
+    """NumPy twin of :meth:`MeshFabric.ring_structure` for a *batch* of
+    strided rings on one rows×cols mesh.
+
+    Counts the directed X-Y unit links of every ring edge with
+    difference-array sweeps over four (pattern × row/col × direction)
+    planes — exact integer congestion and the same ``tot / n`` mean-hops
+    ratio, so each result is identical to the scalar walk (pinned in
+    tests/test_batch_engine.py); a constant number of array ops covers
+    every pattern of a 500-NPU sweep at once."""
+    counts = np.asarray(counts, dtype=np.int64)
+    strides = np.asarray(strides, dtype=np.int64)
+    n_pat = len(counts)
+    pid = np.repeat(np.arange(n_pat), counts)
+    idx = np.arange(counts.sum()) - np.repeat(counts.cumsum() - counts,
+                                              counts)
+    s_rep = np.repeat(strides, counts)
+    v = idx * s_rep
+    nxt = np.where(idx + 1 < np.repeat(counts, counts), idx + 1, 0) * s_rep
+    r0, c0 = v // cols, v % cols
+    r1, c1 = nxt // cols, nxt % cols
+    dh = c1 - c0
+    dv = r1 - r0
+    tot = np.bincount(pid, weights=_f(np.abs(dh) + np.abs(dv)),
+                      minlength=n_pat)
+    cong = np.zeros(n_pat, dtype=np.int64)
+    # horizontal links live on row r0 (X first), vertical on column c1
+    for sel, axis_idx, lo, hi, n_axes, width in (
+            (dh > 0, r0, c0, c1, rows, cols),
+            (dh < 0, r0, c1, c0, rows, cols),
+            (dv > 0, c1, r0, r1, cols, rows),
+            (dv < 0, c1, r1, r0, cols, rows)):
+        if not sel.any():
+            continue
+        diff = np.zeros((n_pat, n_axes, width + 1), dtype=np.int64)
+        np.add.at(diff, (pid[sel], axis_idx[sel], lo[sel]), 1)
+        np.add.at(diff, (pid[sel], axis_idx[sel], hi[sel]), -1)
+        cong = np.maximum(cong, diff.cumsum(axis=2).max(axis=(1, 2)))
+    cong = np.maximum(cong, 1)
+    hops = np.maximum(tot / counts, 1.0)
+    return list(zip(cong.tolist(), hops.tolist()))
+
+
+def _span_structures_np(group_size: int, counts: np.ndarray,
+                        strides: np.ndarray) -> List[Tuple[int, int]]:
+    """NumPy twin of :meth:`FredFabric.span_structure` for a batch of
+    strided groups: (L1 switches spanned, max members under one L1)."""
+    counts = np.asarray(counts, dtype=np.int64)
+    strides = np.asarray(strides, dtype=np.int64)
+    n_pat = len(counts)
+    pid = np.repeat(np.arange(n_pat), counts)
+    idx = np.arange(counts.sum()) - np.repeat(counts.cumsum() - counts,
+                                              counts)
+    l1 = (idx * np.repeat(strides, counts)) // group_size
+    n_l1 = int(l1.max()) + 1
+    per = np.bincount(pid * n_l1 + l1,
+                      minlength=n_pat * n_l1).reshape(n_pat, n_l1)
+    g = (per > 0).sum(axis=1)
+    k = per.max(axis=1)
+    return list(zip(g.tolist(), k.tolist()))
+
+
+class CandidateBatch:
+    """Fabric-independent per-candidate parameter tensors.
+
+    Packs the strategy and workload scalars :meth:`Simulator.run` reads
+    into ``int64``/``float64`` arrays once; the sweep builds one pack per
+    wafer count and reuses it across every (fabric, shape) it visits.
+    """
+
+    _ARRAYS = ("mp", "dp", "pp", "wafers", "n_layers", "mp_ar", "samples",
+               "minibatch", "seq", "params_layer", "flops", "abps", "pbt",
+               "kv_layer", "streaming")
+    __slots__ = ("workloads",) + _ARRAYS
+
+    def __init__(self, workloads: Sequence[Workload]):
+        self.workloads = list(workloads)
+        n = len(self.workloads)
+        ints = np.empty((9, n), dtype=np.int64)
+        flts = np.empty((5, n), dtype=np.float64)
+        streaming = np.empty(n, dtype=bool)
+        for i, w in enumerate(self.workloads):
+            st = w.strategy
+            ints[0, i] = st.mp
+            ints[1, i] = st.dp
+            ints[2, i] = st.pp
+            ints[3, i] = st.wafers
+            ints[4, i] = w.n_layers
+            ints[5, i] = w.mp_allreduce_per_layer
+            ints[6, i] = w.samples_per_dp
+            ints[7, i] = w.minibatch
+            ints[8, i] = w.seq
+            flts[0, i] = w.params_per_layer
+            flts[1, i] = w.flops_fwd_per_sample_layer
+            flts[2, i] = w.act_bytes_per_sample
+            flts[3, i] = w.param_bytes_total
+            flts[4, i] = w.kv_bytes_per_sample_layer
+            streaming[i] = w.execution == "streaming"
+        (self.mp, self.dp, self.pp, self.wafers, self.n_layers, self.mp_ar,
+         self.samples, self.minibatch, self.seq) = ints
+        (self.params_layer, self.flops, self.abps, self.pbt,
+         self.kv_layer) = flts
+        self.streaming = streaming
+
+    def __len__(self) -> int:
+        return len(self.workloads)
+
+    def take(self, indices: Sequence[int]) -> "CandidateBatch":
+        """Sub-batch at ``indices`` (used to evaluate only the symmetry-
+        pruned representatives)."""
+        sub = object.__new__(CandidateBatch)
+        sub.workloads = [self.workloads[i] for i in indices]
+        idx = np.asarray(indices, dtype=np.int64)
+        for name in self._ARRAYS:
+            setattr(sub, name, getattr(self, name)[idx])
+        return sub
+
+    @classmethod
+    def concat(cls, parts: Sequence["CandidateBatch"]) -> "CandidateBatch":
+        """Fuse several packs into one lane space — the sweep evaluates
+        every (shape, wafer count) configuration of a fabric in a single
+        vectorized call and slices the results back per configuration."""
+        if len(parts) == 1:
+            return parts[0]
+        fused = object.__new__(cls)
+        fused.workloads = [w for p in parts for w in p.workloads]
+        for name in cls._ARRAYS:
+            setattr(fused, name,
+                    np.concatenate([getattr(p, name) for p in parts]))
+        return fused
+
+
+@dataclasses.dataclass
+class BatchEngine:
+    """Vectorized evaluator bound to one :class:`Simulator` (one fabric ×
+    wafer shape × wafer count).  ``run_batch`` maps a list of Workloads
+    (each carrying its strategy) to Breakdowns bit-identical to
+    ``[sim.run(w) for w in workloads]``."""
+
+    sim: Simulator
+
+    def __post_init__(self):
+        self._io_rate = self.sim._io_rate()
+        self._gs_lane: Optional[np.ndarray] = None   # per-lane FRED group
+                                                     # sizes in fused runs
+
+    # ---- structural tables (one batched computation per missing pattern) ---
+    def _ring_structs(self, counts: np.ndarray, strides: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        mesh = self.sim.mesh
+        rows, cols = mesh.rows, mesh.cols
+        uniq, inv = _unique_rows((counts, strides))
+        missing = [(c, s) for c, s in uniq
+                   if c > 1 and (rows, cols, c, s) not in _RING_STRUCTS]
+        if missing:
+            mc = np.array([p[0] for p in missing], dtype=np.int64)
+            ms = np.array([p[1] for p in missing], dtype=np.int64)
+            for p, st in zip(missing, _ring_structures_np(rows, cols,
+                                                          mc, ms)):
+                _RING_STRUCTS[(rows, cols) + p] = st
+        m = len(uniq)
+        cong = np.empty(m, dtype=np.int64)
+        hops = np.empty(m, dtype=np.float64)
+        for j, (c, s) in enumerate(uniq):
+            cong[j], hops[j] = (_RING_STRUCTS[(rows, cols, c, s)]
+                                if c > 1 else (1, 1.0))
+        return cong[inv], hops[inv]
+
+    def _span_structs(self, counts: np.ndarray, strides: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        gsl = self._gs_lane
+        if gsl is None:
+            gs0 = self.sim.fred.group_size
+            uniq, inv = _unique_rows((counts, strides))
+            triples = [(gs0, c, s) for c, s in uniq]
+        else:
+            uniq, inv = _unique_rows((gsl, counts, strides))
+            triples = [tuple(t) for t in uniq]
+        missing = [t for t in triples
+                   if t[1] > 1 and t not in _SPAN_STRUCTS]
+        if missing:
+            by_gs: Dict[int, List[Tuple[int, ...]]] = {}
+            for t in missing:
+                by_gs.setdefault(t[0], []).append(t)
+            for gs, pats in by_gs.items():
+                mc = np.array([t[1] for t in pats], dtype=np.int64)
+                ms = np.array([t[2] for t in pats], dtype=np.int64)
+                for t, st in zip(pats, _span_structures_np(gs, mc, ms)):
+                    _SPAN_STRUCTS[t] = st
+        m = len(triples)
+        g = np.empty(m, dtype=np.int64)
+        k = np.empty(m, dtype=np.int64)
+        for j, t in enumerate(triples):
+            g[j], k[j] = _SPAN_STRUCTS[t] if t[1] > 1 else (1, 1)
+        return g[inv], k[inv]
+
+    # ---- vectorized fabric kernels (op-for-op the scalar formulas) ----------
+    def _mesh_coll(self, kind: str, n: np.ndarray, cong: np.ndarray,
+                   hops: np.ndarray, nbytes: np.ndarray) -> np.ndarray:
+        """:meth:`MeshFabric.collective_time` over arrays — wafer-wide
+        hierarchical-2D branch selected exactly where ``n == mesh.n``."""
+        mesh = self.sim.mesh
+        nf = _f(n)
+        if kind == "all_reduce":
+            traffic = 2.0 * (nf - 1) / nf * nbytes
+        else:
+            traffic = (nf - 1) / nf * nbytes
+        wafer = n == mesh.n
+        steps_w = 2 * ((mesh.cols - 1) + (mesh.rows - 1))
+        if kind != "all_reduce":
+            steps_w //= 2
+        steps_r = 2 * (n - 1) if kind == "all_reduce" else (n - 1)
+        steps = np.where(wafer, steps_w, steps_r)
+        bw = np.where(wafer, mesh.wafer_wide_allreduce_bw(),
+                      mesh.link_bw / _f(cong))
+        h = np.where(wafer, 1.0, hops)
+        chunk = traffic / np.maximum(steps, 1)
+        per_step = (chunk / bw + mesh.latency_per_hop * h +
+                    mesh.step_overhead)
+        return np.where((n <= 1) | (nbytes <= 0), 0.0, steps * per_step)
+
+    def _fred_coll(self, kind: str, n: np.ndarray, g: np.ndarray,
+                   k: np.ndarray, conc: np.ndarray, nbytes: np.ndarray
+                   ) -> np.ndarray:
+        """:meth:`FredFabric.collective_time` (incl. ``effective_npu_bw``)
+        over arrays."""
+        cfg = self.sim.fred.config
+        nf = _f(n)
+        if cfg.in_network:
+            if kind == "all_reduce":
+                traffic = nbytes
+            else:
+                traffic = (nf - 1) / nf * nbytes
+            steps = np.where(g > 1, 4, 2)
+        else:
+            if kind == "all_reduce":
+                traffic = 2.0 * (nf - 1) / nf * nbytes
+            else:
+                traffic = (nf - 1) / nf * nbytes
+            steps = np.where(g > 1, 2 * (k - 1) + 2 * (g - 1), 2 * (n - 1))
+            steps = np.maximum(steps, 2)
+            if kind != "all_reduce":
+                steps = np.maximum(steps // 2, 1)
+        share = cfg.l1_l2_bw / np.maximum(k * conc, 1)
+        if cfg.in_network:
+            bw_multi = np.minimum(cfg.npu_l1_bw,
+                                  cfg.l1_l2_bw / np.maximum(conc, 1))
+        else:
+            bw_multi = np.where(k > 1,
+                                np.minimum(cfg.npu_l1_bw, share * (1 + k)),
+                                np.minimum(cfg.npu_l1_bw, share))
+        bw = np.where(g <= 1, cfg.npu_l1_bw, bw_multi)
+        per_step = ((traffic / np.maximum(steps, 1)) / bw +
+                    cfg.switch_latency + cfg.step_overhead)
+        return np.where((n <= 1) | (nbytes <= 0), 0.0, steps * per_step)
+
+    def _wafer_coll(self, kind: str, counts: np.ndarray, strides: np.ndarray,
+                    conc: np.ndarray, nbytes: np.ndarray) -> np.ndarray:
+        """One intra-wafer collective over the (count, stride) pattern —
+        mesh rings ignore concurrency exactly like the scalar path."""
+        if self.sim.mesh is not None:
+            cong, hops = self._ring_structs(counts, strides)
+            return self._mesh_coll(kind, counts, cong, hops, nbytes)
+        g, k = self._span_structs(counts, strides)
+        return self._fred_coll(kind, counts, g, k, conc, nbytes)
+
+    def _inter_ring(self, wafers: np.ndarray, conc: np.ndarray,
+                    nbytes: np.ndarray) -> np.ndarray:
+        """:meth:`WaferCluster.inter_allreduce_time` over arrays."""
+        agg_bw, latency = self.sim.cluster.inter_ring_params()
+        wf = _f(wafers)
+        traffic = 2.0 * (wf - 1) / wf * nbytes
+        steps = 2 * (wafers - 1)
+        bw = agg_bw / np.maximum(conc, 1)
+        t = steps * ((traffic / np.maximum(steps, 1)) / bw + latency)
+        return np.where((wafers <= 1) | (nbytes <= 0), 0.0, t)
+
+    # ---- validation (scalar-path error parity) ------------------------------
+    def _validate(self, b: CandidateBatch) -> None:
+        sim = self.sim
+        npw = (sim.cluster.npus_per_wafer if sim.cluster is not None
+               else sim.n_npus)
+        bad = (b.mp * b.pp * (b.dp // np.maximum(b.wafers, 1)) > npw) | \
+            (b.pp > b.n_layers) | (b.dp % np.maximum(b.wafers, 1) != 0)
+        if sim.cluster is None:
+            bad |= b.wafers > 1
+        else:
+            bad |= b.wafers > sim.n_wafers
+        if not bad.any():
+            return
+        for w in b.workloads:            # re-derive the precise message
+            st = w.strategy
+            if sim.cluster is None and st.wafers > 1:
+                raise ValueError(
+                    f"{st} spans {st.wafers} wafers but this "
+                    f"simulator models a single wafer (n_wafers=1)")
+            if sim.cluster is not None:
+                if st.wafers > sim.n_wafers:
+                    raise ValueError(f"{st} spans {st.wafers} wafers, "
+                                     f"cluster has {sim.n_wafers}")
+                if st.dp % st.wafers != 0:
+                    raise ValueError(
+                        f"{st}: dp={st.dp} not divisible by wafers="
+                        f"{st.wafers} — DP replicas map whole onto wafers")
+            per_wafer = st.mp * st.pp * (st.dp // st.wafers)
+            if per_wafer > npw:
+                raise ValueError(f"{st} needs {per_wafer} NPUs per wafer, "
+                                 f"wafer has {npw}")
+            if st.pp > w.n_layers:
+                raise ValueError(
+                    f"{st} has pp={st.pp} stages but {w.name} only "
+                    f"{w.n_layers} layers — stages must hold whole layers")
+
+    # ---- main ----------------------------------------------------------------
+    def run_batch(self, batch: Union[CandidateBatch, Sequence[Workload]],
+                  indices: Optional[Sequence[int]] = None,
+                  gs_lane: Optional[np.ndarray] = None) -> List[Breakdown]:
+        """Evaluate every candidate (with its own strategy) on this fabric.
+
+        ``batch`` is a :class:`CandidateBatch` or a plain Workload list
+        (packed on the fly); ``indices`` restricts evaluation to a
+        sub-batch.  ``gs_lane`` supplies per-lane FRED group sizes when
+        the batch fuses several wafer shapes of one FRED config (the
+        only shape-dependent input of the FRED kernels).  Returns
+        Breakdowns bit-identical to the scalar reference — the same
+        IEEE-754 ops in the same order."""
+        sim = self.sim
+        if not isinstance(batch, CandidateBatch):
+            batch = CandidateBatch(batch)
+        if indices is not None:
+            batch = batch.take(indices)
+            if gs_lane is not None:
+                gs_lane = np.asarray(gs_lane)[np.asarray(indices)]
+        if not len(batch):
+            return []
+        self._gs_lane = gs_lane
+        self._validate(batch)
+        b = batch
+        mp, dp, pp, wafers = b.mp, b.dp, b.pp, b.wafers
+        streaming = b.streaming
+        stationary = ~streaming
+
+        layers = -(-b.n_layers // pp)                 # ceil(n_layers / pp)
+
+        # ---- compute (Sec. VII-A + GPipe bubble, Sec. VII-C) ---------------
+        eff_flops = NPU_PEAK_FLOPS * sim.compute_efficiency
+        fwd_layer = b.flops * b.samples / mp / eff_flops
+        bwd_layer = 2 * fwd_layer
+        fwd_stage = fwd_layer * layers
+        bwd_stage = bwd_layer * layers
+        mb = np.where((pp > 1) & stationary, 8, np.maximum(pp, 1))
+        bubble = np.where(pp > 1, (mb + pp - 1) / mb, 1.0)
+        compute = (fwd_stage + bwd_stage) * bubble
+
+        # ---- MP comm (Sec. VII-B): per-layer All-Reduce, fwd + bwd ---------
+        act_bytes = b.abps * b.samples
+        mp_mask = (mp > 1) & (b.mp_ar > 0)
+        mp_conc = np.maximum(1, (dp * pp) // wafers)
+        per_layer = self._wafer_coll("all_reduce", mp, np.ones_like(mp),
+                                     mp_conc, act_bytes)
+        mp_time = np.where(mp_mask,
+                           per_layer * b.mp_ar * 2 * layers * bubble, 0.0)
+
+        # ---- PP comm (Sec. VII-C): boundary transfer per microbatch --------
+        pp_bw = (sim.mesh.link_bw if sim.mesh is not None
+                 else sim.fred.config.npu_l1_bw)
+        per_mb = 2 * ((act_bytes / mb) / pp_bw)
+        pp_time = np.where(pp > 1, per_mb * (mb + pp - 1), 0.0)
+
+        # ---- DP comm (Sec. VII-B, hierarchical on clusters) ----------------
+        grad = b.params_layer * BYTES / mp
+        dp_mask = (dp > 1) & stationary
+        n_dp_groups = mp * pp
+        stride = mp * pp
+        if sim.cluster is not None:
+            multi = wafers > 1
+            dpw = dp // wafers
+            counts = np.where(multi, dpw, dp)
+            # one structural lookup serves AR, RS and AG (same pattern);
+            # RS and AG are bit-equal by construction (the kernels only
+            # branch on all_reduce vs not), mirroring the scalar engine
+            # computing both to the same value
+            if sim.mesh is not None:
+                cong, hops = self._ring_structs(counts, stride)
+                t_ar = self._mesh_coll("all_reduce", counts, cong, hops,
+                                       grad)
+                t_rs = self._mesh_coll("reduce_scatter", counts, cong,
+                                       hops, grad)
+            else:
+                g, k = self._span_structs(counts, stride)
+                t_ar = self._fred_coll("all_reduce", counts, g, k,
+                                       n_dp_groups, grad)
+                t_rs = self._fred_coll("reduce_scatter", counts, g, k,
+                                       n_dp_groups, grad)
+            intra_multi = np.where(counts > 1, t_rs + t_rs, 0.0)
+            ti = np.where(multi, intra_multi, t_ar)
+            te = np.where(multi, self._inter_ring(wafers, mp, grad), 0.0)
+        else:
+            ti = self._wafer_coll("all_reduce", dp, stride, n_dp_groups,
+                                  grad)
+            te = np.zeros_like(ti)
+        dp_intra, dp_inter = _iterated_layer_sum(ti, te, layers, dp_mask)
+        total_ar = dp_intra + dp_inter
+        if sim.overlap_dp:
+            exposed_dp = np.maximum(
+                0.0, total_ar - bwd_stage * (1 - 1 / np.maximum(layers, 1)))
+        else:
+            exposed_dp = total_ar
+        dp_time = np.where(dp_mask, exposed_dp, 0.0)
+
+        # ---- weight streaming + input load (Sec. III-A, VIII) --------------
+        stream_bytes = b.pbt * (2 + 1) / pp
+        io_time = stream_bytes / self._io_rate
+        stream_time = np.where(
+            streaming, np.maximum(0.0, io_time - compute - mp_time), 0.0)
+        in_bytes = b.minibatch * b.abps
+        input_load = np.where(streaming,
+                              in_bytes / (self._io_rate * wafers), 0.0)
+
+        # bulk-convert to Python floats once (tolist is C-speed) and
+        # bypass the dataclass __init__ — Breakdown construction is the
+        # hottest remaining per-point Python in a 500+-NPU sweep
+        cols = [a.tolist() for a in
+                (compute, input_load, mp_time, dp_time, pp_time,
+                 stream_time, dp_intra, dp_inter)]
+        fabric = sim.fabric_name
+        new = Breakdown.__new__
+        out = []
+        for i, w in enumerate(b.workloads):
+            br = new(Breakdown)
+            br.__dict__ = {
+                "workload": w.name, "fabric": fabric,
+                "compute": cols[0][i], "input_load": cols[1][i],
+                "mp": cols[2][i], "dp": cols[3][i], "pp": cols[4][i],
+                "stream": cols[5][i], "dp_intra": cols[6][i],
+                "dp_inter": cols[7][i]}
+            out.append(br)
+        return out
+
+
+def _iterated_layer_sum(ti: np.ndarray, te: np.ndarray, layers: np.ndarray,
+                        mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-layer DP accumulation replayed as *iterated* float adds.
+
+    The scalar engine adds the per-layer All-Reduce time ``layers`` times
+    in a loop; ``layers · t`` would round differently after the third
+    add, so bit-parity requires replaying the additions.  Distinct
+    (tᵢ, tₑ, layers) triples are deduplicated first — strategies sharing
+    a DP group pattern collapse to one replay lane each."""
+    n = ti.shape[0]
+    dp_intra = np.zeros(n)
+    dp_inter = np.zeros(n)
+    idx = np.nonzero(mask)[0]
+    if not len(idx):
+        return dp_intra, dp_inter
+    key = np.empty((len(idx), 3), dtype=np.int64)
+    key[:, 0] = ti[idx].view(np.int64)
+    key[:, 1] = te[idx].view(np.int64)
+    key[:, 2] = layers[idx]
+    # bytewise row dedup (void view) — much faster than unique(axis=0)
+    kv = np.ascontiguousarray(key).view(np.dtype((np.void, 24))).ravel()
+    _, first, inv = np.unique(kv, return_index=True, return_inverse=True)
+    uniq = key[first]
+    uti = uniq[:, 0].copy().view(np.float64)
+    ute = uniq[:, 1].copy().view(np.float64)
+    ul = uniq[:, 2]
+    milestones = set(ul.tolist())
+    m = len(uniq)
+    acc_i = np.zeros(m)
+    acc_e = np.zeros(m)
+    out_i = np.zeros(m)
+    out_e = np.zeros(m)
+    for step in range(1, int(ul.max()) + 1):
+        acc_i = acc_i + uti
+        acc_e = acc_e + ute
+        if step in milestones:
+            hit = ul == step
+            out_i[hit] = acc_i[hit]
+            out_e[hit] = acc_e[hit]
+    dp_intra[idx] = out_i[inv]
+    dp_inter[idx] = out_e[inv]
+    return dp_intra, dp_inter
+
+
+# --------------------------------------------------------------------------
+# vectorized memory-feasibility model
+# --------------------------------------------------------------------------
+
+def memory_bytes_batch(batch: Union[CandidateBatch, Sequence[Workload]],
+                       mem: MemoryModel) -> np.ndarray:
+    """Vectorized :func:`repro.core.workloads.memory_bytes_per_npu` —
+    identical op order, so each element is bit-equal to the scalar call."""
+    if not isinstance(batch, CandidateBatch):
+        batch = CandidateBatch(batch)
+    b = batch
+    if not len(b):
+        return np.zeros(0)
+    mp = b.mp
+    streaming = b.streaming
+    stationary = ~streaming
+    layers = -(-b.n_layers // b.pp)
+    buffers = 3 if mem.training else 2
+    resident = np.where(streaming,
+                        buffers * b.params_layer / mp,
+                        b.params_layer * layers / mp)
+    opt_per_param = optimizer_bytes_per_param(mem.master, mem.moments_dtype)
+    if mem.training:
+        opt_bytes = np.where(stationary, resident * opt_per_param, 0.0)
+        grad_bytes = np.where(stationary, resident * BYTES, 0.0)
+    else:
+        opt_bytes = np.zeros_like(resident)
+        grad_bytes = np.zeros_like(resident)
+    weight_bytes = resident * BYTES
+
+    mult = ACT_REMAT_MULT[mem.remat] if mem.training else 1.0
+    act_layers = layers if mem.training else np.ones_like(layers)
+    act_bytes = mult * act_layers * b.abps * np.maximum(b.seq, 1) / mp
+
+    kv_bytes = np.zeros_like(resident)
+    if not mem.training:
+        kv_bytes = np.where(b.kv_layer != 0.0,
+                            b.kv_layer * b.samples * layers / mp, 0.0)
+    return weight_bytes + grad_bytes + opt_bytes + act_bytes + kv_bytes
+
+
+def feasible_batch(batch: Union[CandidateBatch, Sequence[Workload]],
+                   mem: MemoryModel) -> Tuple[np.ndarray, np.ndarray]:
+    """(memory_bytes_per_npu, feasible) arrays for a candidate batch —
+    the sweep masks infeasible points on these before any cost math."""
+    mem_bytes = memory_bytes_batch(batch, mem)
+    return mem_bytes, mem_bytes <= mem.npu_hbm_bytes

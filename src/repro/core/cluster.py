@@ -66,11 +66,15 @@ class WaferCluster:
     def __post_init__(self):
         if self.n_wafers < 1:
             raise ValueError(f"cluster needs ≥ 1 wafer, got {self.n_wafers}")
+        # wafer.n_npus is a property chain hit on every id translation —
+        # hot enough to show in sweep profiles, so snapshot it once (the
+        # wafer shape is fixed for the cluster's lifetime)
+        self._npus_per_wafer = self.wafer.n_npus
 
     # ---- id space --------------------------------------------------------------
     @property
     def npus_per_wafer(self) -> int:
-        return self.wafer.n_npus
+        return self._npus_per_wafer
 
     @property
     def n_npus(self) -> int:
@@ -96,6 +100,13 @@ class WaferCluster:
             return self.wafer.collective_time(kind, local_group, nbytes)
         return self.wafer.collective_time(kind, local_group, nbytes,
                                           concurrent_groups=concurrent_groups)
+
+    def inter_ring_params(self) -> Tuple[float, float]:
+        """(aggregate wafer↔wafer BW, per-step latency) — the only
+        cluster-level inputs :meth:`inter_allreduce_time` consumes besides
+        the span/payload.  The batched sweep engine reads these once and
+        evaluates the inter-wafer ring for every strategy as array ops."""
+        return self.link.agg_bw, self.link.latency
 
     def inter_allreduce_time(self, n_wafers_spanned: int, nbytes: float,
                              concurrent_groups: int = 1) -> float:

@@ -105,6 +105,17 @@ class FredFabric:
             span[l1] = span.get(l1, 0) + 1
         return span
 
+    def span_structure(self, group: Sequence[int]) -> Tuple[int, int]:
+        """(g, k) = (#L1 switches spanned, max members under one L1) —
+        the only group-dependent structure :meth:`collective_time` and
+        :meth:`effective_npu_bw` consume.  The batched sweep engine
+        (core/batch_engine.py) memoizes this per distinct group pattern
+        and vectorizes the remaining pure arithmetic."""
+        span = self._group_l1_span(group)
+        if not span:
+            return 1, 1
+        return len(span), max(span.values())
+
     def effective_npu_bw(self, group: Sequence[int],
                          concurrent_groups: int = 1) -> float:
         """Sustained per-NPU injection BW for one collective flow.

@@ -133,6 +133,55 @@ class MeshFabric:
                   for i in range(n))
         return max(tot / n, 1.0)
 
+    def ring_structure(self, group: Sequence[int]) -> Tuple[int, float]:
+        """(congestion, mean hops) of the single logical ring over
+        ``group`` — the exact structural inputs :meth:`collective_time`
+        derives for its non-wafer-wide branch (``cong`` already floored
+        at 1).  Pure integer/ratio topology quantities, independent of
+        payload size and step overheads; the batched sweep engine
+        (core/batch_engine.py) computes them once per distinct group
+        pattern and then evaluates every strategy's times as array ops.
+
+        Implemented as a single integer-keyed pass over the ring's X-Y
+        unit links (directed, X before Y — the same walk
+        :meth:`xy_links` materializes as tuple paths), hot enough in
+        500+-NPU sweeps that the tuple allocations mattered; equivalence
+        with ``ring_max_congestion`` + ``_ring_hops`` is pinned in
+        tests/test_batch_engine.py."""
+        ring = list(group)
+        n = len(ring)
+        if n < 2:
+            return 1, 1.0
+        C = self.cols
+        base_v = 2 * self.rows * C           # separate id space for Y links
+        load: Dict[int, int] = {}
+        tot = 0
+        for i in range(n):
+            (r0, c0) = divmod(ring[i], C)
+            (r1, c1) = divmod(ring[(i + 1) % n], C)
+            if c1 > c0:                      # X first, heading right
+                for c in range(c0, c1):
+                    key = (r0 * C + c) * 2
+                    load[key] = load.get(key, 0) + 1
+                tot += c1 - c0
+            elif c0 > c1:                    # heading left
+                for c in range(c1, c0):
+                    key = (r0 * C + c) * 2 + 1
+                    load[key] = load.get(key, 0) + 1
+                tot += c0 - c1
+            if r1 > r0:                      # then Y along column c1, down
+                for r in range(r0, r1):
+                    key = base_v + (r * C + c1) * 2
+                    load[key] = load.get(key, 0) + 1
+                tot += r1 - r0
+            elif r0 > r1:                    # up
+                for r in range(r1, r0):
+                    key = base_v + (r * C + c1) * 2 + 1
+                    load[key] = load.get(key, 0) + 1
+                tot += r0 - r1
+        cong = max(load.values()) if load else 0
+        return max(cong, 1), max(tot / n, 1.0)
+
     def collective_time(self, kind: str, group: Sequence[int], nbytes: float,
                         concurrent_rings: Sequence[Sequence[int]] = ()
                         ) -> float:

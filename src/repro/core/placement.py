@@ -12,6 +12,7 @@ the 2D mesh row-major (favoring MP adjacency, as in Megatron-LM [28]).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Iterator, List, Tuple
 
 Worker = Tuple[int, int, int]          # (mp, dp, pp) coordinates
@@ -138,3 +139,41 @@ def placement_groups(strategy: Strategy, placement: Dict[Worker, int]
     return {"mp": as_ids(strategy.mp_groups()),
             "dp": as_ids(strategy.dp_groups()),
             "pp": as_ids(strategy.pp_groups())}
+
+
+@functools.lru_cache(maxsize=4096)
+def cached_placement_groups(strategy: Strategy, n_wafers: int,
+                            npus_per_wafer: int
+                            ) -> Dict[str, List[List[int]]]:
+    """Memoized :func:`placement_groups` for the canonical placements.
+
+    The NPU-id groups depend only on (strategy, n_wafers, npus_per_wafer):
+    ``mesh_placement``'s row-major (row, col) linearizes back to the same
+    ids ``fred_placement`` assigns, and ``cluster_placement`` is already
+    id-based — so one memo entry serves every fabric type and shape with
+    the same per-wafer capacity.  Sweeps re-run the same strategy across
+    many (fabric, shape) pairs; this turns the dominant per-``run`` cost
+    (rebuilding O(n_workers) group lists) into a dict hit.
+
+    Callers must treat the returned lists as immutable (they are shared).
+    Capacity violations raise ``ValueError`` exactly like the uncached
+    placements (exceptions are not cached by ``lru_cache``).
+    """
+    if n_wafers > 1:
+        ids = cluster_placement(strategy, n_wafers, npus_per_wafer)
+    else:
+        ids = fred_placement(strategy, npus_per_wafer)
+    return placement_groups(strategy, ids)
+
+
+def strided_group(count: int, stride: int) -> List[int]:
+    """The NPU-id pattern every canonical first group reduces to.
+
+    Under :func:`fred_placement` / :func:`mesh_placement` /
+    :func:`cluster_placement` the simulator's representative groups are
+    arithmetic progressions from 0: the first MP group is
+    ``strided_group(mp, 1)`` and the first DP group (per wafer) is
+    ``strided_group(dp_per_wafer, mp * pp)``.  The batched engine
+    (core/batch_engine.py) keys its structural tables on (count, stride)
+    instead of materializing whole placements."""
+    return list(range(0, count * stride, stride))

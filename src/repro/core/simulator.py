@@ -30,16 +30,47 @@ is bit-identical to the single-wafer model.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from .fabric import FredFabric
 from .meshnet import MeshFabric
-from .placement import (Strategy, cluster_placement, fred_placement,
-                        mesh_placement, placement_groups)
+from .placement import Strategy, cached_placement_groups
 from .workloads import Workload, BYTES
 
 NPU_PEAK_FLOPS = 1000e12      # FP16 (Table II)
+
+
+class LRUCache(collections.OrderedDict):
+    """Bounded dict for ``Simulator.collective_cache`` sharing.
+
+    Long multi-wafer sweeps accumulate one entry per distinct
+    (fabric tag, kind, group, bytes, concurrency) tuple; unbounded, a
+    500+-NPU scalar sweep grows without limit.  Reads refresh recency,
+    writes evict the least-recently-used entry past ``maxsize`` — drop-in
+    for the plain dict the Simulator expects (``get`` + item assignment).
+    """
+
+    def __init__(self, maxsize: int = 1 << 17):
+        super().__init__()
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be ≥ 1, got {maxsize}")
+        self.maxsize = maxsize
+
+    def get(self, key, default=None):
+        try:
+            value = super().__getitem__(key)
+        except KeyError:
+            return default
+        self.move_to_end(key)
+        return value
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            self.popitem(last=False)
 
 
 @dataclasses.dataclass
@@ -126,19 +157,18 @@ class Simulator:
 
     # ---- fabric dispatch -------------------------------------------------------
     def _groups(self, strategy: Strategy):
+        """NPU-id groups for ``strategy`` on this fabric — memoized per
+        (strategy, n_wafers, npus_per_wafer): mesh row-major placement
+        linearizes to the same ids as fred_placement, so the canonical
+        cached groups serve every fabric type (treat them as read-only)."""
         if self.cluster is not None:
-            ids = cluster_placement(strategy, self.n_wafers,
-                                    self.cluster.npus_per_wafer)
-        elif strategy.wafers > 1:
+            return cached_placement_groups(strategy, self.n_wafers,
+                                           self.cluster.npus_per_wafer)
+        if strategy.wafers > 1:
             raise ValueError(
                 f"{strategy} spans {strategy.wafers} wafers but this "
                 f"simulator models a single wafer (n_wafers=1)")
-        elif self.mesh is not None:
-            pl = mesh_placement(strategy, self.mesh.rows, self.mesh.cols)
-            ids = {w: r * self.mesh.cols + c for w, (r, c) in pl.items()}
-        else:
-            ids = fred_placement(strategy, self.fred.n_npus)
-        return placement_groups(strategy, ids)
+        return cached_placement_groups(strategy, 1, self.n_npus)
 
     def _fabric_tag(self):
         """Physical identity of the fabric, so one collective_cache dict

@@ -13,11 +13,17 @@ NPU count it enumerates
     the wafer is the manufacturing unit, so 2 wafers double the NPUs and
     the DP axis splits across them (Strategy.wafers, core/cluster.py),
 
-then runs :class:`repro.core.simulator.Simulator` over the cross-product.
-Collective times are memoized per (fabric, shape) — strategies share
-collective calls heavily (the same wafer-wide or per-group All-Reduce
-appears in many strategies), so the sweep is near-free beyond the first
-strategy per group shape.
+then evaluates the cross-product under one of two bit-identical engines:
+the default ``engine="batched"`` vectorizes all strategies of each
+(fabric, shape, wafer count) configuration as NumPy array ops
+(:mod:`repro.core.batch_engine` — what makes exhaustive 500+-NPU sweeps
+fit the CI budget), while ``engine="scalar"`` walks
+:class:`repro.core.simulator.Simulator` per point as the reference
+oracle.  Scalar collective times are memoized per (fabric, shape) in a
+bounded LRU — strategies share collective calls heavily (the same
+wafer-wide or per-group All-Reduce appears in many strategies) — and
+placement groups are memoized per (strategy, wafer count, wafer size)
+across the whole process.
 
 Reporting: :func:`pareto_front` extracts the strategies not dominated on
 (time-per-sample, parameter-bytes-per-NPU) — the throughput/memory
@@ -28,14 +34,21 @@ documented in ``benchmarks/README.md``.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .placement import Strategy
-from .simulator import Breakdown, Simulator
+from .simulator import Breakdown, LRUCache, Simulator
 from .workloads import (MemoryModel, Workload, is_feasible,
                         memory_bytes_per_npu, transformer)
 
 FABRICS = ("baseline", "FRED-A", "FRED-B", "FRED-C", "FRED-D")
+ENGINES = ("batched", "scalar")
+
+# bound on the shared collective memo — a 500+-NPU multi-wafer scalar
+# sweep would otherwise grow it without limit (the batched engine keeps
+# its own per-pattern structural tables and never touches this)
+COLLECTIVE_CACHE_SIZE = 1 << 17
 
 
 # --------------------------------------------------------------------------
@@ -232,7 +245,8 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           inter_wafer_bw: float = 400e9,
           inter_wafer_latency: float = 5e-7,
           memory: Optional[MemoryModel] = None,
-          prune_symmetric: bool = False) -> List[SweepResult]:
+          prune_symmetric: bool = False,
+          engine: str = "batched") -> List[SweepResult]:
     """Run the full (fabric × wafer shape × wafer count × strategy)
     cross-product.
 
@@ -266,9 +280,23 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     simulation signature (:func:`sim_signature`) before simulating and
     replicates results onto the pruned twins, so the returned point set
     and Pareto front are identical to the unpruned sweep by construction
-    (pinned at 20 NPUs in tests/test_autostrategy.py)."""
+    (pinned at 20 NPUs in tests/test_autostrategy.py).
+
+    ``engine`` selects the evaluator: ``"batched"`` (the default)
+    evaluates all strategies of each (fabric, shape, wafer count) as
+    vectorized NumPy ops via :class:`repro.core.batch_engine.BatchEngine`
+    — with the memory model vectorized alongside, so feasibility is
+    masked in array math before any per-point Python runs — while
+    ``"scalar"`` walks :meth:`Simulator.run` per point as the reference
+    oracle.  Both produce bit-identical Breakdowns and Pareto fronts
+    (enforced by hypothesis property tests in tests/test_batch_engine.py);
+    batched is ≥10× faster on multi-wafer sweeps and is what makes
+    exhaustive 500+-NPU sweeps fit the CI budget (BENCH_sweep.json)."""
     if n_npus < 1:
         raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{ENGINES}")
     # explicitly passed strategies always run: widen the wafer-count
     # enumeration to cover the largest split they ask for
     if strategies:
@@ -285,66 +313,175 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                                         n_wafers=wf)
                          if st.wafers == wf]
     results: List[SweepResult] = []
-    cache: dict = {}
+    cache = LRUCache(COLLECTIVE_CACHE_SIZE)
     route_memo: Dict[Tuple[Strategy, Tuple[int, int], int], bool] = {}
     inter_kw = dict(inter_wafer_links=inter_wafer_links,
                     inter_wafer_bw=inter_wafer_bw,
                     inter_wafer_latency=inter_wafer_latency)
     agg_inter_bw = inter_wafer_links * inter_wafer_bw
-    for fabric in fabrics:
-        shape_fn = mesh_shapes if fabric == "baseline" else fred_shapes
-        for wf, shape in cluster_shapes(n_npus, max_wafers, shape_fn):
-            sim = _simulator(fabric, shape, n_npus, cache,
-                             compute_efficiency, n_wafers=wf, **inter_kw)
-            if strategies is not None:
-                cands = [st for st in strategies if st.wafers == wf]
-            else:
-                cands = space[wf]
-            # canonical-form dedup: one simulation per signature on this
-            # (fabric, shape, wafer-count); twins replicate the breakdown
-            sig_memo: Dict[Tuple, Breakdown] = {}
-            for st in cands:
-                if st.n_workers > sim.n_npus or \
-                        st.dp % st.wafers != 0 or \
-                        st.mp * st.pp * (st.dp // st.wafers) > n_npus:
-                    continue
-                w = workload_fn(st)
-                if st.pp > w.n_layers:    # stages must hold whole layers
-                    continue
-                if prune_symmetric:
-                    sig = sim_signature(st, w)
-                    br = sig_memo.get(sig)
-                    if br is None:
-                        br = sim.run(w)
-                        sig_memo[sig] = br
+
+    # the valid candidate list, its symmetry-pruned representatives, the
+    # packed parameter tensors, and the vectorized memory predicate are
+    # all fabric/shape-independent — build them once per wafer count and
+    # reuse across every (fabric, shape) below (workload_fn is assumed
+    # pure: it was already called per (fabric, shape) with the same
+    # strategy before this memo existed)
+    per_wf: Dict[int, Tuple] = {}
+
+    def _candidates(wf: int):
+        ent = per_wf.get(wf)
+        if ent is not None:
+            return ent
+        cands = ([st for st in strategies if st.wafers == wf]
+                 if strategies is not None else space[wf])
+        evals: List[Tuple[Strategy, Workload]] = []
+        for st in cands:
+            if st.n_workers > wf * n_npus or \
+                    st.dp % st.wafers != 0 or \
+                    st.mp * st.pp * (st.dp // st.wafers) > n_npus:
+                continue
+            w = workload_fn(st)
+            if st.pp > w.n_layers:        # stages must hold whole layers
+                continue
+            evals.append((st, w))
+        # canonical-form dedup: one simulation per signature per
+        # (fabric, shape, wafer count); twins replicate the breakdown
+        if prune_symmetric:
+            sig_index: Dict[Tuple, int] = {}
+            rep_of: List[int] = []
+            rep_idx: List[int] = []
+            for i, (st, w) in enumerate(evals):
+                sig = sim_signature(st, w)
+                j = sig_index.get(sig)
+                if j is None:
+                    j = len(rep_idx)
+                    sig_index[sig] = j
+                    rep_idx.append(i)
+                rep_of.append(j)
+        else:
+            rep_idx = list(range(len(evals)))
+            rep_of = rep_idx
+        rep_pack = mem_list = feas_list = None
+        if engine == "batched":
+            from .batch_engine import CandidateBatch, feasible_batch
+            pack = CandidateBatch([w for _st, w in evals])
+            rep_pack = (pack.take(rep_idx)
+                        if len(rep_idx) != len(evals) else pack)
+            if memory is not None:
+                # vectorized feasibility — infeasible points are masked
+                # on arrays before any per-point Python runs; bulk-
+                # converted to Python scalars once per wafer count
+                mem_arr, feas_arr = feasible_batch(pack, memory)
+                mem_list = mem_arr.tolist()
+                feas_list = feas_arr.tolist()
+        ent = (evals, rep_idx, rep_of, rep_pack, mem_list, feas_list)
+        per_wf[wf] = ent
+        return ent
+
+    def _emit(fabric, wf, shape, sim, evals, rep_of, rep_brs,
+              mem_list, feas_list):
+        """One SweepResult row per candidate of this (fabric, shape,
+        wafer count) — shared by both engines so row order, Pareto and
+        CSV output are engine-independent.  Construction bypasses the
+        dataclass __init__ — this loop runs once per sweep point and is
+        the hottest shared Python in a 500+-NPU sweep."""
+        check_route = check_routing and fabric != "baseline"
+        inter_bw = agg_inter_bw if wf > 1 else 0.0
+        new = SweepResult.__new__
+        for i, (st, w) in enumerate(evals):
+            mem_bytes = 0.0
+            feas: Optional[bool] = None
+            if memory is not None:
+                if mem_list is not None:
+                    mem_bytes = mem_list[i]
+                    feas = feas_list[i]
                 else:
-                    br = sim.run(w)
-                mem_bytes = 0.0
-                feas: Optional[bool] = None
-                if memory is not None:
                     mem_bytes = memory_bytes_per_npu(w, memory)
                     feas = is_feasible(w, memory)
-                routable = None
-                if check_routing and fabric != "baseline":
-                    # uplink count depends on the FRED config, so it is
-                    # part of the memo key alongside (strategy, shape)
-                    up = sim.fred.uplinks_per_l1()
-                    key = (st, shape, up)
-                    if key not in route_memo:
-                        from .routing import strategy_routable
-                        sub = st if st.wafers == 1 else \
-                            Strategy(st.mp, st.dp // st.wafers, st.pp)
-                        route_memo[key] = strategy_routable(sub, shape,
-                                                            uplinks=up)
-                    routable = route_memo[key]
-                results.append(SweepResult(
-                    fabric=fabric, shape=shape, strategy=st, breakdown=br,
-                    minibatch=w.minibatch,
-                    param_bytes_per_npu=w.param_bytes_total /
-                    (st.mp * st.pp),
-                    routable=routable, n_wafers=wf,
-                    inter_wafer_bw=agg_inter_bw if wf > 1 else 0.0,
-                    memory_bytes_per_npu=mem_bytes, feasible=feas))
+            routable = None
+            if check_route:
+                # uplink count depends on the FRED config, so it is
+                # part of the memo key alongside (strategy, shape)
+                up = sim.fred.uplinks_per_l1()
+                key = (st, shape, up)
+                if key not in route_memo:
+                    from .routing import strategy_routable
+                    sub = st if st.wafers == 1 else \
+                        Strategy(st.mp, st.dp // st.wafers, st.pp)
+                    route_memo[key] = strategy_routable(sub, shape,
+                                                        uplinks=up)
+                routable = route_memo[key]
+            r = new(SweepResult)
+            r.__dict__ = {
+                "fabric": fabric, "shape": shape, "strategy": st,
+                "breakdown": rep_brs[rep_of[i]],
+                "minibatch": w.minibatch,
+                "param_bytes_per_npu": w.param_bytes_total /
+                (st.mp * st.pp),
+                "routable": routable, "pareto": False, "n_wafers": wf,
+                "inter_wafer_bw": inter_bw,
+                "memory_bytes_per_npu": mem_bytes, "feasible": feas}
+            results.append(r)
+
+    for fabric in fabrics:
+        shape_fn = mesh_shapes if fabric == "baseline" else fred_shapes
+        configs = cluster_shapes(n_npus, max_wafers, shape_fn)
+        if engine == "batched":
+            import numpy as np
+            from .batch_engine import BatchEngine, CandidateBatch
+            # fuse configurations into as few vectorized runs as the
+            # kernels allow: the wafer count is already a per-lane input,
+            # so every wafer count of a shape shares one run; FRED shapes
+            # additionally fuse across shapes (group_size is the only
+            # shape-dependent kernel input, passed per lane)
+            if fabric == "baseline":
+                by_shape: Dict[Tuple[int, int], List] = {}
+                for wf, shape in configs:
+                    by_shape.setdefault(shape, []).append((wf, shape))
+                grp_list = list(by_shape.values())
+            else:
+                grp_list = [configs]
+            brs_by_config: Dict[Tuple[int, Tuple[int, int]], list] = {}
+            sim_by_config: Dict[Tuple[int, Tuple[int, int]], Simulator] = {}
+            for grp in grp_list:
+                max_wf = max(wf for wf, _s in grp)
+                sim = _simulator(fabric, grp[0][1], n_npus, cache,
+                                 compute_efficiency, n_wafers=max_wf,
+                                 **inter_kw)
+                parts, gs_parts, metas = [], [], []
+                for wf, shape in grp:
+                    _e, _ri, _ro, rep_pack, _m, _f2 = _candidates(wf)
+                    parts.append(rep_pack)
+                    metas.append((wf, shape, len(rep_pack)))
+                    if fabric != "baseline":
+                        gs_parts.append(np.full(len(rep_pack), shape[1],
+                                                dtype=np.int64))
+                fused = CandidateBatch.concat(parts)
+                gs_lane = np.concatenate(gs_parts) if gs_parts else None
+                brs = BatchEngine(sim).run_batch(fused, gs_lane=gs_lane)
+                off = 0
+                for wf, shape, nrep in metas:
+                    brs_by_config[(wf, shape)] = brs[off:off + nrep]
+                    sim_by_config[(wf, shape)] = sim
+                    off += nrep
+            # emit in the same (wafer count, shape) order as the scalar
+            # engine so row order, Pareto and CSV are engine-independent
+            for wf, shape in configs:
+                evals, _ri, rep_of, _rp, mem_arr, feas_arr = \
+                    _candidates(wf)
+                _emit(fabric, wf, shape, sim_by_config[(wf, shape)],
+                      evals, rep_of, brs_by_config[(wf, shape)],
+                      mem_arr, feas_arr)
+        else:
+            for wf, shape in configs:
+                sim = _simulator(fabric, shape, n_npus, cache,
+                                 compute_efficiency, n_wafers=wf,
+                                 **inter_kw)
+                evals, rep_idx, rep_of, _rp, mem_arr, feas_arr = \
+                    _candidates(wf)
+                rep_brs = [sim.run(evals[i][1]) for i in rep_idx]
+                _emit(fabric, wf, shape, sim, evals, rep_of, rep_brs,
+                      mem_arr, feas_arr)
     for fabric in set(r.fabric for r in results):
         subset = [r for r in results if r.fabric == fabric]
         if memory is not None:
@@ -376,7 +513,7 @@ def pareto_front(results: Sequence[SweepResult],
     earlier group's minimum.  Exact duplicates don't dominate each other,
     so they all survive together; input order is preserved."""
     n = len(results)
-    vals = [tuple(getattr(r, k) for k in keys) for r in results]
+    vals = list(map(operator.attrgetter(*keys), results))
     order = sorted(range(n), key=vals.__getitem__)
     keep = [False] * n
     best2 = float("inf")            # min 2nd key over strictly-lower groups

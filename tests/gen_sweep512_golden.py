@@ -1,0 +1,23 @@
+"""Regenerate tests/goldens/sweep512_pareto.json — the pinned Pareto
+front of the exhaustive 512-NPU single-wafer Transformer-17B sweep
+(batched engine).  Run after an *intentional* cost-model change:
+
+    PYTHONPATH=src python -m tests.gen_sweep512_golden
+"""
+
+import json
+from pathlib import Path
+
+
+def main() -> None:
+    from repro.core.sweep import transformer_17b_sweep
+    from tests.test_batch_engine import GOLDEN, _front_rows
+    res = transformer_17b_sweep(512, engine="batched")
+    rows = _front_rows(res)
+    GOLDEN.write_text(json.dumps(rows, indent=1) + "\n")
+    print(f"wrote {GOLDEN} ({len(rows)} Pareto points over "
+          f"{len(res)} sweep points)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Hypothesis property tests for the batched sweep engine (ISSUE 4).
+
+The acceptance property: batched and scalar engines agree bit-identically
+on ``Breakdown.total`` (in fact every field) and on ``pareto_front``
+membership across random (workload, fabric, shape, wafers, strategy)
+draws.  Deterministic seeded-random versions of the same invariants live
+in tests/test_batch_engine.py so coverage survives without hypothesis;
+this module skips wholesale when hypothesis is absent.
+"""
+
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core.batch_engine import (BatchEngine, _ring_structures_np,
+                                     _span_structures_np, feasible_batch)
+from repro.core.fabric import CONFIGS, FredFabric
+from repro.core.meshnet import MeshFabric
+from repro.core.placement import Strategy, strided_group
+from repro.core.simulator import Simulator
+from repro.core.sweep import sweep
+from repro.core.workloads import (MemoryModel, Workload,
+                                  memory_bytes_per_npu, transformer)
+from tests.test_batch_engine import (ALL_FABRICS,
+                                     assert_sweeps_bit_identical)
+
+
+@st.composite
+def sim_cases(draw):
+    """(Simulator, Workload) with a random fabric, shape, wafer count and
+    strategy — every branch of the cost model reachable."""
+    fabric = draw(st.sampled_from(ALL_FABRICS))
+    a = draw(st.integers(min_value=1, max_value=8))
+    b = draw(st.integers(min_value=1, max_value=8))
+    npw = a * b
+    n_wafers = draw(st.integers(min_value=1, max_value=3))
+    wafers = draw(st.integers(min_value=1, max_value=n_wafers))
+    mp = draw(st.integers(min_value=1, max_value=4))
+    pp = draw(st.integers(min_value=1, max_value=3))
+    dpw = draw(st.integers(min_value=1, max_value=4))
+    assume(mp * pp * dpw <= npw)
+    strategy = Strategy(mp, dpw * wafers, pp, wafers=wafers)
+    fin = dict(allow_nan=False, allow_infinity=False)
+    w = Workload(
+        name="rand", n_layers=draw(st.integers(min_value=pp, max_value=60)),
+        params_per_layer=draw(st.floats(1e3, 1e10, **fin)),
+        flops_fwd_per_sample_layer=draw(st.floats(1e3, 1e12, **fin)),
+        act_bytes_per_sample=draw(st.floats(1.0, 1e7, **fin)),
+        strategy=strategy,
+        execution=draw(st.sampled_from(("stationary", "streaming"))),
+        mp_allreduce_per_layer=draw(st.integers(min_value=0, max_value=2)),
+        samples_per_dp=draw(st.integers(min_value=1, max_value=64)),
+        seq=draw(st.integers(min_value=1, max_value=64)),
+        kv_bytes_per_sample_layer=draw(st.floats(0.0, 1e5, **fin)),
+    )
+    kw = {}
+    if n_wafers > 1:
+        kw = dict(n_wafers=n_wafers,
+                  inter_wafer_links=draw(st.integers(1, 64)),
+                  inter_wafer_bw=draw(st.floats(1e9, 1e12, **fin)))
+    sim = Simulator(fabric, mesh_shape=(a, b), fred_shape=(a, b),
+                    n_io=draw(st.integers(min_value=1, max_value=32)), **kw)
+    return sim, w
+
+
+@st.composite
+def memory_models(draw):
+    fin = dict(allow_nan=False, allow_infinity=False)
+    return MemoryModel(
+        npu_hbm_bytes=draw(st.floats(2**28, 2**36, **fin)),
+        master=draw(st.booleans()),
+        moments_dtype=draw(st.sampled_from(("float32", "bfloat16", "int8"))),
+        remat=draw(st.sampled_from(("none", "block", "full"))),
+        training=draw(st.booleans()))
+
+
+@settings(deadline=None)
+@given(case=sim_cases())
+def test_batched_breakdown_bit_identical_to_scalar(case):
+    sim, w = case
+    scalar = sim.run(w).as_dict()
+    batched = BatchEngine(sim).run_batch([w])[0].as_dict()
+    assert batched == scalar                    # exact, not approx
+
+
+@settings(deadline=None)
+@given(case=sim_cases(), mem=memory_models())
+def test_memory_batch_bit_identical_to_scalar(case, mem):
+    _sim, w = case
+    scalar = memory_bytes_per_npu(w, mem)
+    arr, feas = feasible_batch([w], mem)
+    assert float(arr[0]) == scalar
+    assert bool(feas[0]) == (scalar <= mem.npu_hbm_bytes)
+
+
+@st.composite
+def sweep_cases(draw):
+    n_npus = draw(st.sampled_from((8, 12, 16, 20)))
+    max_wafers = draw(st.integers(min_value=1, max_value=2))
+    fabrics = tuple(draw(st.sets(st.sampled_from(ALL_FABRICS),
+                                 min_size=1, max_size=3)))
+    n_layers = draw(st.sampled_from((12, 24, 78)))
+    seq = draw(st.sampled_from((64, 1024)))
+    execution = draw(st.sampled_from(("stationary", "streaming")))
+    mem = draw(st.one_of(st.none(), memory_models()))
+    prune = draw(st.booleans())
+
+    def workload_fn(strat):
+        return transformer("rand", n_layers, 1024, seq, strat, execution)
+
+    return dict(workload_fn=workload_fn, n_npus=n_npus, fabrics=fabrics,
+                n_layers=n_layers, max_wafers=max_wafers, memory=mem,
+                prune_symmetric=prune)
+
+
+@settings(deadline=None, max_examples=20)
+@given(kw=sweep_cases())
+def test_sweep_engines_agree_on_totals_and_pareto(kw):
+    """The tentpole acceptance property, full-sweep form."""
+    a = sweep(engine="scalar", **kw)
+    b = sweep(engine="batched", **kw)
+    assert_sweeps_bit_identical(a, b)
+
+
+@settings(deadline=None)
+@given(rows=st.integers(1, 24), cols=st.integers(1, 24),
+       count=st.integers(2, 32), stride=st.integers(1, 16))
+def test_ring_structures_np_match_scalar_walk(rows, cols, count, stride):
+    assume((count - 1) * stride < rows * cols)
+    mesh = MeshFabric(rows=rows, cols=cols)
+    group = strided_group(count, stride)
+    ref = (max(mesh.ring_max_congestion([group]), 1),
+           mesh._ring_hops(group))
+    assert mesh.ring_structure(group) == ref
+    got = _ring_structures_np(rows, cols, np.array([count]),
+                              np.array([stride]))[0]
+    assert got == ref
+
+
+@settings(deadline=None)
+@given(gs=st.integers(1, 16), count=st.integers(2, 64),
+       stride=st.integers(1, 16))
+def test_span_structures_np_match_scalar_walk(gs, count, stride):
+    max_id = (count - 1) * stride
+    fab = FredFabric(CONFIGS["FRED-C"], n_groups=max_id // gs + 1,
+                     group_size=gs)
+    ref = fab.span_structure(strided_group(count, stride))
+    got = _span_structures_np(gs, np.array([count]), np.array([stride]))[0]
+    assert got == ref
