@@ -19,6 +19,15 @@ from pathlib import Path
 import numpy as np
 
 
+def _artifacts() -> Path:
+    """The artifacts/ output directory, created on demand — every bench
+    that writes files goes through this (CI uploads warn, not silently
+    skip, when a gate produced nothing)."""
+    out = Path("artifacts")
+    out.mkdir(parents=True, exist_ok=True)
+    return out
+
+
 def _time(fn, iters=3):
     fn()
     t0 = time.perf_counter()
@@ -181,8 +190,7 @@ def bench_sweep():
              f"{r.n_wafers}w;t_per_sample_us={r.time_per_sample*1e6:.2f};"
              f"dp_intra_ms={r.breakdown.dp_intra*1e3:.3f};"
              f"dp_inter_ms={r.breakdown.dp_inter*1e3:.3f}")
-    out = Path("artifacts")
-    out.mkdir(exist_ok=True)
+    out = _artifacts()
     from repro.core.sweep import CSV_HEADER
     # the cluster sweep's n_wafers=1 slice duplicates the 20-NPU rows
     # above (with pareto flags computed over a different population), so
@@ -272,6 +280,92 @@ def bench_sweepperf(full: bool = False, budget_64: float = 0.0,
 
 
 # --------------------------------------------------------------------------
+# hiersweep — hierarchical scale-out × inter-wafer topology gate
+# --------------------------------------------------------------------------
+
+# 64-NPU wafers × clusters of ≤4 wafers × every inter-wafer topology ×
+# ≤2 hierarchy levels (flat ring-of-wafers and rack×pod stackings) — the
+# ISSUE 5 acceptance sweep.
+HIERSWEEP_KW = dict(n_npus=64, max_wafers=4, max_levels=2, n_layers=78)
+
+
+def bench_hiersweep(budget: float = 0.0):
+    """Times the batched (fabric × shape × wafers × hierarchy × topology
+    × strategy) sweep, verifies it bit-identical to the scalar oracle,
+    and writes the decision CSV (Pareto front + best strategy per
+    (fabric, topology, hierarchy) slice) to
+    ``artifacts/hiersweep_decisions.csv``.  ``budget`` (seconds, 0 = off)
+    turns the batched wall time into a CI gate, mirroring sweepperf."""
+    from repro.core.cluster import INTER_TOPOLOGIES
+    from repro.core.sweep import CSV_HEADER, sweep, to_csv_rows, \
+        transformer_17b
+
+    kw = dict(HIERSWEEP_KW, inter_topologies=INTER_TOPOLOGIES)
+    sweep(transformer_17b, 20, n_layers=78)      # warm imports/allocators
+    best = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = sweep(transformer_17b, engine="batched", **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    emit("hiersweep[batched]", best * 1e6,
+         f"points={len(res)};points_per_sec={len(res)/best:.0f}")
+    # batched-vs-scalar parity gate: the vectorized per-level inter
+    # collectives must reproduce the scalar decomposition bit-for-bit
+    t0 = time.perf_counter()
+    oracle = sweep(transformer_17b, engine="scalar", **kw)
+    emit("hiersweep[scalar]", (time.perf_counter() - t0) * 1e6,
+         f"points={len(oracle)}")
+    mismatches = 0
+    for ra, rb in zip(oracle, res):
+        if ((ra.fabric, ra.shape, ra.strategy, ra.n_wafers, ra.hierarchy,
+             ra.inter_topology) !=
+            (rb.fabric, rb.shape, rb.strategy, rb.n_wafers, rb.hierarchy,
+             rb.inter_topology) or
+                ra.breakdown.as_dict() != rb.breakdown.as_dict() or
+                ra.breakdown.dp_levels != rb.breakdown.dp_levels or
+                ra.pareto != rb.pareto):
+            mismatches += 1
+    if len(oracle) != len(res) or mismatches:
+        print(f"hiersweep[PARITY],0.0,{mismatches} mismatching points "
+              f"(scalar {len(oracle)} vs batched {len(res)})",
+              file=sys.stderr)
+        sys.exit("hiersweep: batched engine diverged from the scalar "
+                 "oracle on the hierarchy/topology axes — a bit-parity "
+                 "regression in core/batch_engine.py")
+    emit("hiersweep[parity]", 0.0,
+         f"batched==scalar over {len(res)} points")
+    # decision CSV: the Pareto front plus the fastest strategy of every
+    # (fabric, inter topology, hierarchy) slice — small enough to ride
+    # as a CI artifact, complete enough to diff topology decisions
+    chosen = {}
+    for r in res:
+        key = (r.fabric, r.inter_topology, r.hierarchy)
+        if key not in chosen or r.time_per_sample < \
+                chosen[key].time_per_sample:
+            chosen[key] = r
+    rows = [r for r in res if r.pareto]
+    rows += [r for r in chosen.values() if not r.pareto]
+    path = _artifacts() / "hiersweep_decisions.csv"
+    path.write_text("\n".join([CSV_HEADER] + to_csv_rows(rows)) + "\n")
+    emit("hiersweep[csv]", 0.0, f"{path} rows={len(rows)}")
+    for (fab, topo, hier), r in sorted(chosen.items()):
+        if topo:
+            emit(f"hiersweep[{fab}|{topo}|{'x'.join(map(str, hier))}]",
+                 0.0,
+                 f"best={r.strategy};shape={r.shape[0]}x{r.shape[1]};"
+                 f"t_per_sample_us={r.time_per_sample*1e6:.3f};"
+                 f"dp_levels_ms="
+                 f"{'/'.join(f'{x*1e3:.3f}' for x in r.breakdown.dp_levels)}")
+    if budget and best > budget:
+        print(f"hiersweep[BUDGET],0.0,batched {best:.3f}s > {budget}s",
+              file=sys.stderr)
+        sys.exit("hiersweep: batched hierarchy sweep blew the CI "
+                 "wall-time budget — a perf regression in "
+                 "core/batch_engine.py or core/sweep.py")
+
+
+# --------------------------------------------------------------------------
 # autostrategy — sweep-driven (mp, dp, pp, wafers) decisions per model
 # --------------------------------------------------------------------------
 
@@ -300,9 +394,7 @@ def bench_autostrategy(goldens: str = ""):
              f"t_per_sample_us={d.time_per_sample*1e6:.3f};"
              f"candidates={d.n_candidates};infeasible={d.n_infeasible};"
              f"dominated={d.n_dominated}")
-    out = Path("artifacts")
-    out.mkdir(exist_ok=True)
-    path = out / "autostrategy_decisions.csv"
+    path = _artifacts() / "autostrategy_decisions.csv"
     path.write_text("\n".join([DECISION_CSV_HEADER] +
                               decision_csv_rows(decisions)) + "\n")
     emit("autostrategy[csv]", 0.0, f"{path} rows={len(decisions)}")
@@ -433,6 +525,7 @@ BENCHES = {
     "fig10": bench_fig10,
     "sweep": bench_sweep,
     "sweepperf": bench_sweepperf,
+    "hiersweep": bench_hiersweep,
     "autostrategy": bench_autostrategy,
     "table3": bench_table3,
     "routing": bench_routing,
@@ -459,6 +552,12 @@ def main() -> None:
     ap.add_argument("--sweepperf-budget-512", type=float, default=0.0,
                     help="sweepperf only: fail if the 512-NPU batched "
                          "sweep exceeds this many seconds (CI gate)")
+    ap.add_argument("--hiersweep-budget", type=float, default=0.0,
+                    help="hiersweep only: fail if the batched 64-NPU × "
+                         "4-wafer × {ring,fully_connected,switch} × "
+                         "≤2-level sweep exceeds this many seconds "
+                         "(CI gate; parity vs the scalar oracle is "
+                         "always checked)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
@@ -473,6 +572,8 @@ def main() -> None:
             bench_sweepperf(full=args.sweepperf_full,
                             budget_64=args.sweepperf_budget_64,
                             budget_512=args.sweepperf_budget_512)
+        elif n == "hiersweep":
+            bench_hiersweep(budget=args.hiersweep_budget)
         else:
             BENCHES[n]()
 

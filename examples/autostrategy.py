@@ -40,12 +40,15 @@ def main():
         fabrics=tuple(args.fabrics.split(",")))
 
     print(f"{'arch':16s} {'chosen':24s} {'fabric':8s} {'wafer':7s} "
-          f"{'exec':10s} {'mem/NPU':>8s} {'t/sample':>10s} "
+          f"{'inter':16s} {'exec':10s} {'mem/NPU':>8s} {'t/sample':>10s} "
           f"{'cand':>5s} {'infeas':>6s} {'dom':>5s}")
     for d in decisions:
+        inter = (f"{d.inter_topology}[" +
+                 "x".join(map(str, d.hierarchy)) + "]"
+                 if d.wafers > 1 else "-")
         print(f"{d.arch:16s} {str(d.strategy):24s} {d.fabric:8s} "
               f"{d.wafer_shape[0]}x{d.wafer_shape[1]:<5d} "
-              f"{d.execution:10s} "
+              f"{inter:16s} {d.execution:10s} "
               f"{d.memory_bytes_per_npu / 2**30:6.2f}Gi "
               f"{d.time_per_sample * 1e6:8.3f}us "
               f"{d.n_candidates:5d} {d.n_infeasible:6d} {d.n_dominated:5d}")

@@ -9,11 +9,16 @@ arbitrary ones.
 ``--max-wafers N`` adds the multi-wafer scale-out axis (core/cluster.py):
 the wafer is the manufacturing unit, so clusters of 2..N wafers multiply
 the NPU count, DP replicas map across wafers, and the DP All-Reduce runs
-hierarchically (reduce-scatter within wafer → all-reduce over the
-wafer↔wafer links → all-gather within wafer).  Cross-wafer strategies
-print as ``...-W(n)`` with their per-level (intra/inter-wafer) DP time;
-the CSV gains the ``n_wafers`` / ``inter_wafer_bw`` / ``dp_intra_s`` /
-``dp_inter_s`` columns (schema: benchmarks/README.md).
+hierarchically (reduce-scatter within wafer → per-level inter
+collectives → all-gather within wafer).  ``--inter-topologies`` crosses
+every cluster with the listed inter-wafer collective models (ring /
+fully_connected / switch) and ``--max-levels 2`` adds the rack/pod
+stackings of each wafer count (4 wafers → flat ring-of-4 and 2×2
+rack×pod).  Cross-wafer strategies print as ``...-W(n)`` with their
+per-level (intra/inter-wafer) DP time; the CSV gains the ``n_wafers`` /
+``inter_wafer_bw`` / ``hierarchy`` / ``inter_topology`` /
+``dp_intra_s`` / ``dp_inter_s`` / ``dp_level_*_s`` columns (schema:
+benchmarks/README.md).
 
 ``--engine {batched,scalar}`` selects the evaluator (default batched —
 the vectorized NumPy engine of core/batch_engine.py; scalar walks
@@ -26,6 +31,7 @@ sweep wall time is printed so the speedup is visible:
     PYTHONPATH=src python examples/topology_sweep.py [--npus 20]
         [--fabrics baseline,FRED-C,FRED-D] [--workload t17b|gpt3]
         [--max-wafers 2] [--inter-links 32] [--inter-bw-gbps 400]
+        [--inter-topologies ring,fully_connected,switch] [--max-levels 2]
         [--check-routing] [--engine batched|scalar] [--csv out.csv]
 """
 
@@ -60,6 +66,14 @@ def main():
     ap.add_argument("--inter-bw-gbps", type=float, default=400.0,
                     help="per-link wafer↔wafer bandwidth, GB/s per "
                          "direction")
+    ap.add_argument("--inter-topologies", type=str, default="ring",
+                    help="comma list of inter-wafer collective models to "
+                         "sweep: ring, fully_connected, switch "
+                         "(core/cluster.py)")
+    ap.add_argument("--max-levels", type=int, default=1,
+                    help="hierarchy depth to sweep: 1 = flat "
+                         "wafer↔wafer level, 2 = also rack/pod "
+                         "stackings of each wafer count")
     ap.add_argument("--check-routing", action="store_true",
                     help="verify conflict-free routing per FRED "
                          "(strategy, shape) pair")
@@ -88,6 +102,9 @@ def main():
                     max_wafers=args.max_wafers,
                     inter_wafer_links=args.inter_links,
                     inter_wafer_bw=args.inter_bw_gbps * 1e9,
+                    inter_topologies=tuple(
+                        args.inter_topologies.split(",")),
+                    max_levels=args.max_levels,
                     memory=memory, prune_symmetric=True,
                     engine=args.engine)
     elapsed = time.perf_counter() - t0
@@ -108,7 +125,9 @@ def main():
                 route = "  routes" if r.routable else "  CONFLICT"
             level = ""
             if r.n_wafers > 1:
-                level = (f"  dp intra/inter="
+                hier = "x".join(map(str, r.hierarchy))
+                level = (f"  {r.inter_topology}[{hier}]"
+                         f"  dp intra/inter="
                          f"{r.breakdown.dp_intra*1e3:.2f}/"
                          f"{r.breakdown.dp_inter*1e3:.2f} ms")
             mem = ""

@@ -7,11 +7,15 @@ This module closes that loop for the JAX substrate: given a registry
 
   1. derives the analytical :class:`~repro.core.workloads.Workload` via
      :func:`~repro.core.workloads.from_model_config`,
-  2. runs the (fabric × wafer shape × wafer count × strategy) sweep of
-     :mod:`repro.core.sweep` with the per-NPU memory-feasibility model
-     (weights + optimizer state per the OptimConfig master/moments dtypes
-     + activation footprint under the remat setting, against an
-     ``npu_hbm_bytes`` budget) and canonical-form symmetry pruning,
+  2. runs the (fabric × wafer shape × wafer count × inter-wafer topology
+     × strategy) sweep of :mod:`repro.core.sweep` with the per-NPU
+     memory-feasibility model (weights + optimizer state per the
+     OptimConfig master/moments dtypes + activation footprint under the
+     remat setting, against an ``npu_hbm_bytes`` budget) and
+     canonical-form symmetry pruning — the inter-wafer topology (ring /
+     fully_connected / switch, core/cluster.py) is searched alongside
+     the strategy, so the fabric flexes to the parallelization *and*
+     vice versa,
   3. falls back to weight-streaming execution (Sec. III-A: weights stream
      through I/O, optimizer runs near storage) when no weight-stationary
      strategy fits — the paper's own answer for Transformer-1T-class
@@ -33,6 +37,7 @@ import json
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
+from .cluster import INTER_TOPOLOGIES, TOPOLOGY_CODES
 from .placement import Strategy
 from .sweep import SweepResult, sweep
 from .workloads import (DEFAULT_NPU_HBM_BYTES, MemoryModel,
@@ -57,6 +62,10 @@ class AutoStrategyDecision:
     fabric: str
     wafer_shape: Tuple[int, int]      # per-wafer (rows, cols) / (g, k)
     strategy: Strategy
+    inter_topology: str               # ring | fully_connected | switch;
+                                      # "" when the choice is single-wafer
+    hierarchy: Tuple[int, ...]        # inter-level counts ((1,) = single
+                                      # wafer, (4,) = flat, (2, 2) = rack×pod)
     execution: str                    # stationary | streaming
     remat: str
     master: bool
@@ -89,21 +98,29 @@ class AutoStrategyDecision:
         """The fields the CI strategy-regression gate pins."""
         return {"mp": self.mp, "dp": self.dp, "pp": self.pp,
                 "wafers": self.wafers, "fabric": self.fabric,
+                "inter_topology": self.inter_topology,
                 "execution": self.execution}
 
 
 def _pick(front: Sequence[SweepResult]) -> SweepResult:
     """Deterministic choice from the feasible Pareto front: fastest first,
-    then smallest footprint, fewest wafers, and a total lexical tiebreak."""
+    then smallest footprint, fewest wafers, the cheapest inter-wafer
+    interconnect (ring < fully-connected < switch — at 2 wafers all
+    three are time-equal, so the tiebreak buys the ring's 2 links over a
+    switch or n² point-to-point wiring), then a total lexical tiebreak."""
     return min(front, key=lambda r: (
-        r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers, r.fabric,
-        r.shape, (r.strategy.mp, r.strategy.dp, r.strategy.pp)))
+        r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers,
+        TOPOLOGY_CODES.get(r.inter_topology, -1), len(r.hierarchy),
+        r.fabric, r.hierarchy, r.shape,
+        (r.strategy.mp, r.strategy.dp, r.strategy.pp)))
 
 
 def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
                     n_npus: int = 64,
                     fabrics: Sequence[str] = DEFAULT_FABRICS,
                     max_wafers: int = 2,
+                    inter_topologies: Sequence[str] = INTER_TOPOLOGIES,
+                    max_levels: int = 1,
                     npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
                     master: bool = True,
                     moments_dtype: str = "float32",
@@ -117,6 +134,12 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
     HBM budget, which is how Transformer-1T-class models (arctic-480b)
     become feasible at wafer scale.  Raises :class:`InfeasibleModelError`
     if neither mode yields a feasible point.
+
+    The inter-wafer topology is a first-class decision axis: every
+    multi-wafer candidate is evaluated under each ``inter_topologies``
+    entry (and, with ``max_levels=2``, each rack/pod stacking), and the
+    winning topology/hierarchy is stamped on the decision — the CI
+    golden gate diffs it alongside (mp, dp, pp, wafers).
 
     Serving cells (``shape.kind != "train"``) drop gradients/optimizer
     state and add the KV cache in the memory model; the simulated time is
@@ -135,7 +158,9 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
             return from_model_config(cfg, shape, st, execution=_e)
         results = sweep(wl, n_npus, fabrics=fabrics, n_layers=n_layers,
                         min_utilization=min_utilization,
-                        max_wafers=max_wafers, memory=mem,
+                        max_wafers=max_wafers,
+                        inter_topologies=inter_topologies,
+                        max_levels=max_levels, memory=mem,
                         prune_symmetric=prune_symmetric)
         n_candidates += len(results)
         feasible = [r for r in results if r.feasible]
@@ -147,6 +172,8 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
         return AutoStrategyDecision(
             arch=cfg.name, shape=shape.name, fabric=chosen.fabric,
             wafer_shape=chosen.shape, strategy=chosen.strategy,
+            inter_topology=chosen.inter_topology,
+            hierarchy=chosen.hierarchy,
             execution=execution, remat=remat, master=master,
             moments_dtype=moments_dtype,
             time_per_sample=chosen.time_per_sample,
@@ -167,7 +194,8 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
 # --------------------------------------------------------------------------
 
 DECISION_CSV_HEADER = (
-    "arch,shape,fabric,shape_a,shape_b,mp,dp,pp,wafers,execution,remat,"
+    "arch,shape,fabric,shape_a,shape_b,mp,dp,pp,wafers,hierarchy,"
+    "inter_topology,execution,remat,"
     "master,moments_dtype,time_per_sample_s,memory_bytes_per_npu,"
     "npu_hbm_bytes,n_candidates,n_infeasible,n_dominated,sweep_s")
 
@@ -178,7 +206,9 @@ def decision_csv_rows(decisions: Sequence[AutoStrategyDecision]) -> List[str]:
         rows.append(
             f"{d.arch},{d.shape},{d.fabric},"
             f"{d.wafer_shape[0]},{d.wafer_shape[1]},"
-            f"{d.mp},{d.dp},{d.pp},{d.wafers},{d.execution},{d.remat},"
+            f"{d.mp},{d.dp},{d.pp},{d.wafers},"
+            f"{'x'.join(map(str, d.hierarchy))},{d.inter_topology},"
+            f"{d.execution},{d.remat},"
             f"{int(d.master)},{d.moments_dtype},"
             f"{d.time_per_sample:.9g},{d.memory_bytes_per_npu:.9g},"
             f"{d.npu_hbm_bytes:.9g},{d.n_candidates},{d.n_infeasible},"

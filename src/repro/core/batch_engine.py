@@ -45,12 +45,15 @@ Term map onto the paper's Sec. VII cost model (and the scalar code):
   * **PP comm** (Sec. VII-C): boundary activation transfer per
     microbatch, exposed for the ``M + S − 1`` bubble slots;
   * **DP comm** (Sec. VII-B): per-layer gradient All-Reduce — on
-    clusters the hierarchical RS(intra) → AR(inter-wafer ring) →
-    AG(intra) decomposition of core/cluster.py — water-filled against
-    the remaining backward compute.  The scalar engine accumulates the
-    per-layer All-Reduce with repeated float adds; the batch engine
-    replays that *iterated* sum (deduplicated over distinct
-    (time, layers) pairs), because collapsing it to a multiply would
+    clusters the hierarchical RS(intra) → per-inter-level collectives →
+    AG(intra) decomposition of core/cluster.py, with the level topology
+    (ring / fully-connected / switch) and the spanned unit counts
+    supplied per lane (:class:`InterLane`) so 1- and 2-level hierarchies
+    of every topology fuse into one vectorized run — water-filled
+    against the remaining backward compute.  The scalar engine
+    accumulates the per-layer All-Reduce with repeated float adds; the
+    batch engine replays that *iterated* sum (deduplicated over distinct
+    (time, layers) tuples), because collapsing it to a multiply would
     round differently;
   * **weight streaming + input load** (Sec. III-A, VIII): model streamed
     at the wafer's sustainable I/O rate overlapped with compute + MP;
@@ -70,6 +73,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .cluster import TOPOLOGY_CODES, hierarchy_spans
 from .simulator import Breakdown, NPU_PEAK_FLOPS, Simulator
 from .workloads import (ACT_REMAT_MULT, BYTES, MemoryModel, Workload,
                         optimizer_bytes_per_param)
@@ -158,6 +162,51 @@ def _span_structures_np(group_size: int, counts: np.ndarray,
     g = (per > 0).sum(axis=1)
     k = per.max(axis=1)
     return list(zip(g.tolist(), k.tolist()))
+
+
+@dataclasses.dataclass
+class InterLane:
+    """Per-lane inter-level structure for fused cluster runs.
+
+    One entry per candidate lane: how many inter levels its configuration
+    stacks (``n_levels``: 0 = single wafer), the topology code of each
+    level (``TOPOLOGY_CODES``), and the units spanned at each level by
+    the lane's cross-wafer DP group (``span1``/``span2`` — precomputed
+    via :func:`repro.core.cluster.hierarchy_spans`, 1 where a level is
+    absent or not crossed).  The engine supports up to two inter levels
+    (wafer → rack → pod), matching the sweep's ``max_levels`` cap."""
+    n_levels: np.ndarray
+    topo1: np.ndarray
+    topo2: np.ndarray
+    span1: np.ndarray
+    span2: np.ndarray
+
+    @classmethod
+    def for_config(cls, n_lanes: int, wafers: int, counts: Sequence[int],
+                   topology: str) -> "InterLane":
+        """Constant lanes for one (wafer count, hierarchy, topology)
+        configuration — every candidate of a sweep configuration spans
+        the same ``wafers``."""
+        if len(counts) > 2:
+            raise NotImplementedError(
+                f"batched engine supports ≤ 2 inter levels, got {counts}")
+        spans = hierarchy_spans(wafers, counts) + [1, 1]
+        code = TOPOLOGY_CODES[topology] if topology else 0
+        full = lambda v: np.full(n_lanes, v, dtype=np.int64)
+        return cls(full(len(counts)), full(code), full(code),
+                   full(spans[0]), full(spans[1]))
+
+    @classmethod
+    def concat(cls, parts: Sequence["InterLane"]) -> "InterLane":
+        if len(parts) == 1:
+            return parts[0]
+        return cls(*(np.concatenate([getattr(p, f.name) for p in parts])
+                     for f in dataclasses.fields(cls)))
+
+    def take(self, indices: Sequence[int]) -> "InterLane":
+        idx = np.asarray(indices, dtype=np.int64)
+        return InterLane(*(getattr(self, f.name)[idx]
+                           for f in dataclasses.fields(InterLane)))
 
 
 class CandidateBatch:
@@ -364,16 +413,55 @@ class BatchEngine:
         g, k = self._span_structs(counts, strides)
         return self._fred_coll(kind, counts, g, k, conc, nbytes)
 
-    def _inter_ring(self, wafers: np.ndarray, conc: np.ndarray,
-                    nbytes: np.ndarray) -> np.ndarray:
-        """:meth:`WaferCluster.inter_allreduce_time` over arrays."""
-        agg_bw, latency = self.sim.cluster.inter_ring_params()
-        wf = _f(wafers)
-        traffic = 2.0 * (wf - 1) / wf * nbytes
-        steps = 2 * (wafers - 1)
+    def _level_coll(self, kind: str, topo: np.ndarray, n: np.ndarray,
+                    conc: np.ndarray, nbytes: np.ndarray, agg_bw: float,
+                    latency: float) -> np.ndarray:
+        """:func:`repro.core.cluster.level_collective_time` over arrays —
+        every topology branch evaluated with the scalar op order and
+        selected per lane by ``topo`` code."""
+        nf = _f(n)
         bw = agg_bw / np.maximum(conc, 1)
-        t = steps * ((traffic / np.maximum(steps, 1)) / bw + latency)
-        return np.where((wafers <= 1) | (nbytes <= 0), 0.0, t)
+        ar = kind == "all_reduce"
+        # ring: endpoint traffic over 2(n−1) (AR) / (n−1) (RS/AG) steps
+        tr_ring = (2.0 * (nf - 1) / nf if ar else (nf - 1) / nf) * nbytes
+        steps_ring = 2 * (n - 1) if ar else (n - 1)
+        t_ring = steps_ring * ((tr_ring / np.maximum(steps_ring, 1)) / bw +
+                               latency)
+        # fully connected: the D/n shard moves over n−1 parallel peer
+        # links; 2 latency steps (RS + AG phase) for the All-Reduce
+        shard = nbytes / nf
+        per_link_bw = bw / np.maximum(nf - 1, 1)
+        steps_fc = 2 if ar else 1
+        t_fc = steps_fc * (shard / per_link_bw + latency)
+        # switch: in-network reduction — All-Reduce injects D, not
+        # 2(n−1)/n·D (core/switch.py R/D µswitch semantics)
+        tr_sw = nbytes if ar else (nf - 1) / nf * nbytes
+        steps_sw = 2 if ar else 1
+        t_sw = steps_sw * ((tr_sw / steps_sw) / bw + latency)
+        t = np.where(topo == 0, t_ring, np.where(topo == 1, t_fc, t_sw))
+        return np.where((n <= 1) | (nbytes <= 0), 0.0, t)
+
+    def _derived_inter_lane(self, wafers: np.ndarray) -> InterLane:
+        """InterLane from the bound cluster's own levels (direct
+        ``run_batch`` calls outside the sweep): spans depend only on the
+        lane's wafer count — computed once per distinct value."""
+        levels = self.sim.cluster.levels
+        if len(levels) > 2:
+            raise NotImplementedError(
+                f"batched engine supports ≤ 2 inter levels, got "
+                f"{len(levels)}")
+        n = len(wafers)
+        full = lambda v: np.full(n, v, dtype=np.int64)
+        topo1 = full(TOPOLOGY_CODES[levels[0].topology])
+        topo2 = full(TOPOLOGY_CODES[levels[-1].topology])
+        span1 = np.ones(n, dtype=np.int64)
+        span2 = np.ones(n, dtype=np.int64)
+        for w in np.unique(wafers).tolist():
+            spans = self.sim.cluster.spans_for(int(w)) + [1, 1]
+            sel = wafers == w
+            span1[sel] = spans[0]
+            span2[sel] = spans[1]
+        return InterLane(full(len(levels)), topo1, topo2, span1, span2)
 
     # ---- validation (scalar-path error parity) ------------------------------
     def _validate(self, b: CandidateBatch) -> None:
@@ -414,16 +502,20 @@ class BatchEngine:
     # ---- main ----------------------------------------------------------------
     def run_batch(self, batch: Union[CandidateBatch, Sequence[Workload]],
                   indices: Optional[Sequence[int]] = None,
-                  gs_lane: Optional[np.ndarray] = None) -> List[Breakdown]:
+                  gs_lane: Optional[np.ndarray] = None,
+                  inter_lane: Optional[InterLane] = None) -> List[Breakdown]:
         """Evaluate every candidate (with its own strategy) on this fabric.
 
         ``batch`` is a :class:`CandidateBatch` or a plain Workload list
         (packed on the fly); ``indices`` restricts evaluation to a
         sub-batch.  ``gs_lane`` supplies per-lane FRED group sizes when
         the batch fuses several wafer shapes of one FRED config (the
-        only shape-dependent input of the FRED kernels).  Returns
-        Breakdowns bit-identical to the scalar reference — the same
-        IEEE-754 ops in the same order."""
+        only shape-dependent input of the FRED kernels); ``inter_lane``
+        supplies the per-lane inter-level structure when the batch fuses
+        several (hierarchy, inter topology) configurations of one cluster
+        (absent, it is derived from the bound cluster's own levels).
+        Returns Breakdowns bit-identical to the scalar reference — the
+        same IEEE-754 ops in the same order."""
         sim = self.sim
         if not isinstance(batch, CandidateBatch):
             batch = CandidateBatch(batch)
@@ -431,6 +523,8 @@ class BatchEngine:
             batch = batch.take(indices)
             if gs_lane is not None:
                 gs_lane = np.asarray(gs_lane)[np.asarray(indices)]
+            if inter_lane is not None:
+                inter_lane = inter_lane.take(indices)
         if not len(batch):
             return []
         self._gs_lane = gs_lane
@@ -472,7 +566,11 @@ class BatchEngine:
         dp_mask = (dp > 1) & stationary
         n_dp_groups = mp * pp
         stride = mp * pp
+        n_lvl = np.zeros_like(dp)
         if sim.cluster is not None:
+            if inter_lane is None:
+                inter_lane = self._derived_inter_lane(wafers)
+            n_lvl = inter_lane.n_levels
             multi = wafers > 1
             dpw = dp // wafers
             counts = np.where(multi, dpw, dp)
@@ -494,12 +592,33 @@ class BatchEngine:
                                        n_dp_groups, grad)
             intra_multi = np.where(counts > 1, t_rs + t_rs, 0.0)
             ti = np.where(multi, intra_multi, t_ar)
-            te = np.where(multi, self._inter_ring(wafers, mp, grad), 0.0)
+            # per-level inter terms — level 1 runs RS+AG when a spanned
+            # level sits above it, All-Reduce when it is the outermost
+            # (the scalar decomposition of WaferCluster._level_times);
+            # only the mp groups of one pipeline stage contend on the
+            # inter links (inter_concurrent = mp, as in the scalar path)
+            agg1, lat1 = sim.cluster.level_params(0)
+            agg2, lat2 = sim.cluster.level_params(1)
+            s1, s2 = inter_lane.span1, inter_lane.span2
+            ar1 = self._level_coll("all_reduce", inter_lane.topo1, s1, mp,
+                                   grad, agg1, lat1)
+            rs1 = self._level_coll("reduce_scatter", inter_lane.topo1, s1,
+                                   mp, grad, agg1, lat1)
+            ag1 = self._level_coll("all_gather", inter_lane.topo1, s1,
+                                   mp, grad, agg1, lat1)
+            te1 = np.where(multi & (s2 > 1), rs1 + ag1,
+                           np.where(multi, ar1, 0.0))
+            te2 = np.where(multi,
+                           self._level_coll("all_reduce", inter_lane.topo2,
+                                            s2, mp, grad, agg2, lat2), 0.0)
         else:
             ti = self._wafer_coll("all_reduce", dp, stride, n_dp_groups,
                                   grad)
-            te = np.zeros_like(ti)
-        dp_intra, dp_inter = _iterated_layer_sum(ti, te, layers, dp_mask)
+            te1 = np.zeros_like(ti)
+            te2 = np.zeros_like(ti)
+        dp_intra, lvl1, lvl2 = _iterated_layer_sum(ti, te1, te2, layers,
+                                                   dp_mask)
+        dp_inter = lvl1 + lvl2
         total_ar = dp_intra + dp_inter
         if sim.overlap_dp:
             exposed_dp = np.maximum(
@@ -523,63 +642,78 @@ class BatchEngine:
         cols = [a.tolist() for a in
                 (compute, input_load, mp_time, dp_time, pp_time,
                  stream_time, dp_intra, dp_inter)]
+        l1s, l2s = lvl1.tolist(), lvl2.tolist()
+        nls = n_lvl.tolist()
         fabric = sim.fabric_name
         new = Breakdown.__new__
         out = []
         for i, w in enumerate(b.workloads):
+            nl = nls[i]
             br = new(Breakdown)
             br.__dict__ = {
                 "workload": w.name, "fabric": fabric,
                 "compute": cols[0][i], "input_load": cols[1][i],
                 "mp": cols[2][i], "dp": cols[3][i], "pp": cols[4][i],
                 "stream": cols[5][i], "dp_intra": cols[6][i],
-                "dp_inter": cols[7][i]}
+                "dp_inter": cols[7][i],
+                "dp_levels": (() if nl == 0 else
+                              (l1s[i],) if nl == 1 else (l1s[i], l2s[i]))}
             out.append(br)
         return out
 
 
-def _iterated_layer_sum(ti: np.ndarray, te: np.ndarray, layers: np.ndarray,
-                        mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def _iterated_layer_sum(ti: np.ndarray, te1: np.ndarray, te2: np.ndarray,
+                        layers: np.ndarray, mask: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-layer DP accumulation replayed as *iterated* float adds.
 
     The scalar engine adds the per-layer All-Reduce time ``layers`` times
     in a loop; ``layers · t`` would round differently after the third
-    add, so bit-parity requires replaying the additions.  Distinct
-    (tᵢ, tₑ, layers) triples are deduplicated first — strategies sharing
-    a DP group pattern collapse to one replay lane each."""
+    add, so bit-parity requires replaying the additions — for the intra
+    part and each inter level separately.  Distinct (tᵢ, tₑ₁, tₑ₂,
+    layers) tuples are deduplicated first — strategies sharing a DP
+    group pattern collapse to one replay lane each."""
     n = ti.shape[0]
     dp_intra = np.zeros(n)
-    dp_inter = np.zeros(n)
+    lvl1 = np.zeros(n)
+    lvl2 = np.zeros(n)
     idx = np.nonzero(mask)[0]
     if not len(idx):
-        return dp_intra, dp_inter
-    key = np.empty((len(idx), 3), dtype=np.int64)
+        return dp_intra, lvl1, lvl2
+    key = np.empty((len(idx), 4), dtype=np.int64)
     key[:, 0] = ti[idx].view(np.int64)
-    key[:, 1] = te[idx].view(np.int64)
-    key[:, 2] = layers[idx]
+    key[:, 1] = te1[idx].view(np.int64)
+    key[:, 2] = te2[idx].view(np.int64)
+    key[:, 3] = layers[idx]
     # bytewise row dedup (void view) — much faster than unique(axis=0)
-    kv = np.ascontiguousarray(key).view(np.dtype((np.void, 24))).ravel()
+    kv = np.ascontiguousarray(key).view(np.dtype((np.void, 32))).ravel()
     _, first, inv = np.unique(kv, return_index=True, return_inverse=True)
     uniq = key[first]
     uti = uniq[:, 0].copy().view(np.float64)
-    ute = uniq[:, 1].copy().view(np.float64)
-    ul = uniq[:, 2]
+    ue1 = uniq[:, 1].copy().view(np.float64)
+    ue2 = uniq[:, 2].copy().view(np.float64)
+    ul = uniq[:, 3]
     milestones = set(ul.tolist())
     m = len(uniq)
     acc_i = np.zeros(m)
-    acc_e = np.zeros(m)
+    acc_1 = np.zeros(m)
+    acc_2 = np.zeros(m)
     out_i = np.zeros(m)
-    out_e = np.zeros(m)
+    out_1 = np.zeros(m)
+    out_2 = np.zeros(m)
     for step in range(1, int(ul.max()) + 1):
         acc_i = acc_i + uti
-        acc_e = acc_e + ute
+        acc_1 = acc_1 + ue1
+        acc_2 = acc_2 + ue2
         if step in milestones:
             hit = ul == step
             out_i[hit] = acc_i[hit]
-            out_e[hit] = acc_e[hit]
+            out_1[hit] = acc_1[hit]
+            out_2[hit] = acc_2[hit]
     dp_intra[idx] = out_i[inv]
-    dp_inter[idx] = out_e[inv]
-    return dp_intra, dp_inter
+    lvl1[idx] = out_1[inv]
+    lvl2[idx] = out_2[inv]
+    return dp_intra, lvl1, lvl2
 
 
 # --------------------------------------------------------------------------

@@ -1,49 +1,79 @@
-"""Inter-wafer fabric level: a cluster of wafers joined by parameterized
-wafer↔wafer links (ROADMAP "multi-wafer scale-out"; LIBRA-style multi-level
-hierarchy, Hecaton-style wafer scale-out).
+"""Scale-out fabric levels: wafers stacked into a multi-level hierarchy
+(ROADMAP "multi-wafer scale-out"; LIBRA-style multi-dimensional topology
+optimization, Hecaton/Dragonfly-on-wafers-style scale-out variants).
 
-:class:`WaferCluster` wraps ``n_wafers`` identical wafer fabrics — either
-the baseline :class:`~repro.core.meshnet.MeshFabric` or a
-:class:`~repro.core.fabric.FredFabric` — connected by a
-:class:`WaferLink` (link count × per-link BW × latency).  The wafer is the
-manufacturing unit, so scale-out *adds* NPUs: a 2-wafer cluster of 5×4
-wafers has 40 NPUs.
+:class:`WaferCluster` wraps identical wafer fabrics — either the baseline
+:class:`~repro.core.meshnet.MeshFabric` or a
+:class:`~repro.core.fabric.FredFabric` — joined by a stack of
+:class:`HierarchyLevel` s (wafer → rack → pod):
+
+  * level 1 joins ``count`` wafers into a rack,
+  * level 2 joins ``count`` racks into a pod, …
+
+each with its own :class:`WaferLink` budget and an **inter-level topology**
+``topology ∈ {ring, fully_connected, switch}`` selecting the collective
+model for that level:
+
+  * ``ring``            — endpoint ring over the level's aggregate links:
+                          2(n−1) steps of 2(n−1)/n·D endpoint traffic for
+                          All-Reduce (the PR-2 model, bit-identical);
+  * ``fully_connected`` — single-hop direct exchange (Dragonfly-style
+                          all-to-all wiring): the same endpoint traffic
+                          leaves each node, but split across n−1 parallel
+                          peer links, so only 2 latency steps are paid;
+  * ``switch``          — an in-switch reduction stage between the units,
+                          reusing the FRED R/D µswitch semantics of
+                          ``core/switch.py`` (reduce on the way in,
+                          distribute on the way out, paper Sec. IV/V):
+                          All-Reduce traffic drops to D per node — the
+                          paper's ≈2× claim vs the 2(n−1)/n·D ring.
+
+The wafer is the manufacturing unit, so scale-out *adds* NPUs: a 2×2
+(rack×pod) cluster of 5×4 wafers has 80 NPUs.
 
 Collectives that span wafers run the classic hierarchical decomposition:
 
-  1. Reduce-Scatter among the group members *within* each wafer (on the
-     wafer's own fabric — FRED trees or mesh rings);
-  2. All-Reduce of the per-member shard *across* wafers over the
-     wafer↔wafer links (endpoint ring — there is no FRED switch between
-     wafers);
-  3. All-Gather within each wafer.
+  1. Reduce-Scatter among the group members *within* each wafer;
+  2. per inter level, innermost first: Reduce-Scatter across the level's
+     spanned units — or All-Reduce at the outermost spanned level;
+  3. All-Gather back down (per level, then within each wafer).
 
-``collective_time_parts`` returns the (intra-wafer, inter-wafer) split so
-the simulator can report per-level DP time; groups contained in one wafer
-delegate straight to the wafer fabric and the inter part is 0.
+``collective_time_levels`` returns the (intra-wafer, per-level) split so
+the simulator can report ``dp_levels``; a single ring level reproduces the
+PR-2 ``(intra, inter)`` model bit-for-bit, and groups contained in one
+wafer delegate straight to the wafer fabric.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .fabric import FredFabric
-from .flows import endpoint_traffic_bytes
+from .flows import endpoint_traffic_bytes, innetwork_traffic_bytes
 from .meshnet import MeshFabric
 
 WaferFabric = Union[MeshFabric, FredFabric]
 
+#: valid inter-level topologies, in deterministic sweep order
+INTER_TOPOLOGIES = ("ring", "fully_connected", "switch")
+
+#: integer codes shared with the batched engine's per-lane topology arrays
+TOPOLOGY_CODES = {t: i for i, t in enumerate(INTER_TOPOLOGIES)}
+
+#: default names of the stacked levels (level 1 joins wafers into a rack…)
+LEVEL_NAMES = ("rack", "pod", "row", "hall")
+
 
 @dataclasses.dataclass(frozen=True)
 class WaferLink:
-    """Wafer↔wafer interconnect budget, per wafer (Dojo-style wafer-edge
+    """Inter-level interconnect budget, per unit (Dojo-style wafer-edge
     bridges: many moderate links rather than one fat pipe — Dojo training
     tiles publish 9 TB/s per edge, 36 TB/s aggregate; the default 32×400
     GB/s = 12.8 TB/s sits inside that envelope)."""
     n_links: int = 32
     link_bw: float = 400e9            # B/s per link per direction
-    latency: float = 5e-7             # per inter-wafer ring step
+    latency: float = 5e-7             # per inter-level step
 
     def __post_init__(self):
         if self.n_links < 1 or self.link_bw <= 0:
@@ -52,18 +82,125 @@ class WaferLink:
 
     @property
     def agg_bw(self) -> float:
-        """Aggregate wafer↔wafer bandwidth per wafer, one direction."""
+        """Aggregate inter-level bandwidth per unit, one direction."""
         return self.n_links * self.link_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyLevel:
+    """One inter level of the scale-out hierarchy: ``count`` units of the
+    level below joined by ``link`` under ``topology``."""
+    name: str
+    count: int
+    topology: str = "ring"
+    link: WaferLink = dataclasses.field(default_factory=WaferLink)
+
+    def __post_init__(self):
+        if self.count < 1:
+            raise ValueError(f"level {self.name!r} needs count ≥ 1, "
+                             f"got {self.count}")
+        if self.topology not in INTER_TOPOLOGIES:
+            raise ValueError(
+                f"level {self.name!r}: unknown topology "
+                f"{self.topology!r}; expected one of {INTER_TOPOLOGIES}")
+
+
+def level_collective_time(topology: str, kind: str, n: int, nbytes: float,
+                          agg_bw: float, latency: float,
+                          concurrent_groups: int = 1) -> float:
+    """Time of one collective across ``n`` units of an inter level.
+
+    ``agg_bw`` is the per-unit aggregate link bandwidth, shared by
+    ``concurrent_groups`` groups crossing the level at once.  The ring
+    branch is op-for-op the PR-2 inter-wafer ring (bit-identical);
+    ``fully_connected`` splits the same aggregate across n−1 direct peer
+    links (2 latency steps instead of 2(n−1)); ``switch`` reduces
+    in-network (R µswitches in, D µswitches out — Sec. IV), so an
+    All-Reduce injects D instead of 2(n−1)/n·D per unit."""
+    if n <= 1 or nbytes <= 0:
+        return 0.0
+    bw = agg_bw / max(concurrent_groups, 1)
+    if topology == "ring":
+        traffic = endpoint_traffic_bytes(kind, n, nbytes)
+        steps = 2 * (n - 1) if kind == "all_reduce" else (n - 1)
+        return steps * ((traffic / steps) / bw + latency)
+    if topology == "fully_connected":
+        # direct exchange: each unit moves its D/n shard to every peer in
+        # parallel over n−1 links of bw/(n−1) each — same endpoint bytes
+        # as the ring, 2 latency steps (RS phase + AG phase) instead of
+        # 2(n−1)
+        shard = nbytes / n
+        per_link_bw = bw / (n - 1)
+        steps = 2 if kind == "all_reduce" else 1
+        return steps * (shard / per_link_bw + latency)
+    if topology == "switch":
+        # in-switch reduction/distribution (core/switch.py semantics):
+        # one traversal up (reduce), one down (broadcast)
+        traffic = innetwork_traffic_bytes(kind, n, nbytes)
+        steps = 2 if kind == "all_reduce" else 1
+        return steps * ((traffic / steps) / bw + latency)
+    raise ValueError(f"unknown inter-level topology {topology!r}; "
+                     f"expected one of {INTER_TOPOLOGIES}")
+
+
+def hierarchy_spans(n_wafers_spanned: int,
+                    counts: Sequence[int]) -> List[int]:
+    """Units spanned at each level by ``n_wafers_spanned`` consecutive
+    wafers under the level ``counts`` — the closed form of
+    :meth:`WaferCluster.spans_for` (the sweep and the batched engine
+    broadcast these per configuration without building a cluster)."""
+    rem = max(n_wafers_spanned, 1)
+    spans: List[int] = []
+    for c in counts:
+        spans.append(min(rem, c))
+        rem = -(-rem // c)
+    return spans
+
+
+def inter_traffic_bytes(topology: str, n: int, nbytes: float,
+                        kind: str = "all_reduce") -> float:
+    """Per-unit bytes injected onto an inter level's links.  Ring and
+    fully-connected are endpoint algorithms (All-Reduce: 2(n−1)/n·D);
+    the switch reduces in-network, dropping that to D — the ≈2× claim."""
+    if topology in ("ring", "fully_connected"):
+        return endpoint_traffic_bytes(kind, n, nbytes)
+    if topology == "switch":
+        return innetwork_traffic_bytes(kind, n, nbytes)
+    raise ValueError(f"unknown inter-level topology {topology!r}; "
+                     f"expected one of {INTER_TOPOLOGIES}")
 
 
 @dataclasses.dataclass
 class WaferCluster:
-    """``n_wafers`` identical wafers + the inter-wafer level."""
+    """Identical wafers + the stacked inter levels.
+
+    Backwards-compatible constructor: ``WaferCluster(wafer, n_wafers,
+    link, topology)`` builds the single-level hierarchy (the PR-2 model;
+    ``topology="ring"`` is bit-identical to it).  Pass ``levels`` for
+    rack/pod stacks — ``n_wafers`` must then equal the product of the
+    level counts (or be left at 1 to be derived)."""
     wafer: WaferFabric
-    n_wafers: int
+    n_wafers: int = 1
     link: WaferLink = dataclasses.field(default_factory=WaferLink)
+    topology: str = "ring"
+    levels: Optional[Sequence[HierarchyLevel]] = None
 
     def __post_init__(self):
+        if self.levels is not None:
+            self.levels = tuple(self.levels)
+            prod = 1
+            for lvl in self.levels:
+                prod *= lvl.count
+            if self.n_wafers == 1:
+                self.n_wafers = prod
+            elif self.n_wafers != prod:
+                raise ValueError(
+                    f"n_wafers={self.n_wafers} inconsistent with level "
+                    f"counts {tuple(l.count for l in self.levels)} "
+                    f"(product {prod})")
+        else:
+            self.levels = (HierarchyLevel(LEVEL_NAMES[0], self.n_wafers,
+                                          self.topology, self.link),)
         if self.n_wafers < 1:
             raise ValueError(f"cluster needs ≥ 1 wafer, got {self.n_wafers}")
         # wafer.n_npus is a property chain hit on every id translation —
@@ -80,6 +217,12 @@ class WaferCluster:
     def n_npus(self) -> int:
         return self.n_wafers * self.npus_per_wafer
 
+    @property
+    def hierarchy(self) -> Tuple[int, ...]:
+        """Level counts, innermost first — e.g. (2, 2) for 2 wafers/rack
+        × 2 racks/pod."""
+        return tuple(lvl.count for lvl in self.levels)
+
     def wafer_of(self, gid: int) -> int:
         return gid // self.npus_per_wafer
 
@@ -93,6 +236,29 @@ class WaferCluster:
             by.setdefault(self.wafer_of(gid), []).append(self.local_id(gid))
         return by
 
+    # ---- hierarchy geometry ----------------------------------------------------
+    def level_spans(self, wafer_idxs: Iterable[int]) -> List[int]:
+        """Units spanned at each level by a set of wafer indices (widest
+        parent at each level — wafers are numbered rack-major, so DP
+        groups placed by ``cluster_placement`` fill the innermost level
+        before spilling to the next)."""
+        idxs = set(wafer_idxs)
+        spans: List[int] = []
+        for lvl in self.levels:
+            by_parent: Dict[int, int] = {}
+            for i in idxs:
+                by_parent[i // lvl.count] = by_parent.get(i // lvl.count,
+                                                          0) + 1
+            spans.append(max(by_parent.values()) if by_parent else 1)
+            idxs = set(by_parent)
+        return spans
+
+    def spans_for(self, n_wafers_spanned: int) -> List[int]:
+        """``level_spans`` of ``n_wafers_spanned`` *consecutive* wafers —
+        what a cross-wafer DP group placed by ``cluster_placement``
+        occupies.  The batched engine broadcasts these per configuration."""
+        return self.level_spans(range(max(n_wafers_spanned, 1)))
+
     # ---- collectives -----------------------------------------------------------
     def _wafer_coll(self, kind: str, local_group: Sequence[int],
                     nbytes: float, concurrent_groups: int) -> float:
@@ -102,46 +268,81 @@ class WaferCluster:
                                           concurrent_groups=concurrent_groups)
 
     def inter_ring_params(self) -> Tuple[float, float]:
-        """(aggregate wafer↔wafer BW, per-step latency) — the only
-        cluster-level inputs :meth:`inter_allreduce_time` consumes besides
-        the span/payload.  The batched sweep engine reads these once and
-        evaluates the inter-wafer ring for every strategy as array ops."""
-        return self.link.agg_bw, self.link.latency
+        """(aggregate level-1 BW, per-step latency) — kept for the PR-2
+        API; :meth:`level_params` generalizes to deeper levels."""
+        return self.levels[0].link.agg_bw, self.levels[0].link.latency
+
+    def level_params(self, i: int) -> Tuple[float, float]:
+        """(aggregate BW, per-step latency) of inter level ``i`` — what
+        the batched engine reads once per run.  Levels past the stack
+        reuse the outermost level's link (uniform-link sweeps fuse 1- and
+        2-level configurations under one cluster object)."""
+        lvl = self.levels[min(i, len(self.levels) - 1)]
+        return lvl.link.agg_bw, lvl.link.latency
 
     def inter_allreduce_time(self, n_wafers_spanned: int, nbytes: float,
                              concurrent_groups: int = 1) -> float:
-        """Ring All-Reduce across wafers: 2(w−1) steps over the aggregate
-        wafer↔wafer BW, shared by groups crossing wafers concurrently."""
-        w = n_wafers_spanned
-        if w <= 1 or nbytes <= 0:
-            return 0.0
-        traffic = endpoint_traffic_bytes("all_reduce", w, nbytes)
-        steps = 2 * (w - 1)
-        bw = self.link.agg_bw / max(concurrent_groups, 1)
-        return steps * ((traffic / steps) / bw + self.link.latency)
+        """All-Reduce across ``n_wafers_spanned`` units of level 1 under
+        that level's topology (ring: 2(w−1) steps over the aggregate
+        links, shared by groups crossing concurrently — the PR-2 model)."""
+        lvl = self.levels[0]
+        return level_collective_time(lvl.topology, "all_reduce",
+                                     n_wafers_spanned, nbytes,
+                                     lvl.link.agg_bw, lvl.link.latency,
+                                     concurrent_groups)
 
-    def collective_time_parts(self, kind: str, group: Sequence[int],
-                              nbytes: float, concurrent_groups: int = 1,
-                              inter_concurrent_groups: "int | None" = None
-                              ) -> Tuple[float, float]:
-        """(intra-wafer, inter-wafer) time split for one collective.
+    def _level_times(self, spans: Sequence[int], nbytes: float,
+                     concurrent_groups: int) -> Tuple[float, ...]:
+        """Per-level collective time for the hierarchical decomposition:
+        Reduce-Scatter + All-Gather at every spanned level below the
+        outermost spanned one, All-Reduce at the outermost.  Each level
+        is billed the full payload — the concurrent per-shard exchanges
+        of the level below share the same links, so the boundary traffic
+        does not shrink with the local fan-in (see
+        ``collective_time_levels``)."""
+        out: List[float] = []
+        for i, (lvl, s) in enumerate(zip(self.levels, spans)):
+            if s <= 1 or nbytes <= 0:
+                out.append(0.0)
+                continue
+            bw, lat = lvl.link.agg_bw, lvl.link.latency
+            if any(s2 > 1 for s2 in spans[i + 1:]):
+                t = (level_collective_time(lvl.topology, "reduce_scatter",
+                                           s, nbytes, bw, lat,
+                                           concurrent_groups) +
+                     level_collective_time(lvl.topology, "all_gather",
+                                           s, nbytes, bw, lat,
+                                           concurrent_groups))
+            else:
+                t = level_collective_time(lvl.topology, "all_reduce",
+                                          s, nbytes, bw, lat,
+                                          concurrent_groups)
+            out.append(t)
+        return tuple(out)
 
-        Wafers run their intra phases in parallel, so the intra part is the
-        widest wafer's Reduce-Scatter + All-Gather; only All-Reduce is
-        supported across wafers (MP/PP groups are placed within one wafer
-        by ``cluster_placement``).  ``inter_concurrent_groups`` lets the
-        caller model a different contention level on the wafer↔wafer links
-        than inside the wafer (GPipe staggers the DP exchanges of distinct
-        pipeline stages, so only same-stage groups contend inter-wafer
-        while the wafer-internal fabric is shared by all of them);
-        defaults to ``concurrent_groups``."""
+    def collective_time_levels(self, kind: str, group: Sequence[int],
+                               nbytes: float, concurrent_groups: int = 1,
+                               inter_concurrent_groups: "int | None" = None
+                               ) -> Tuple[float, Tuple[float, ...]]:
+        """(intra-wafer, per-inter-level) time split for one collective.
+
+        Wafers run their intra phases in parallel, so the intra part is
+        the widest wafer's Reduce-Scatter + All-Gather; only All-Reduce
+        is supported across wafers (MP/PP groups are placed within one
+        wafer by ``cluster_placement``).  ``inter_concurrent_groups``
+        lets the caller model a different contention level on the inter
+        links than inside the wafer (GPipe staggers the DP exchanges of
+        distinct pipeline stages, so only same-stage groups contend on
+        the inter links while the wafer-internal fabric is shared by all
+        of them); defaults to ``concurrent_groups``."""
+        zeros = (0.0,) * len(self.levels)
         if len(group) <= 1 or nbytes <= 0:
-            return 0.0, 0.0
+            return 0.0, zeros
         by_wafer = self.split_by_wafer(group)
         if len(by_wafer) == 1:
             local = next(iter(by_wafer.values()))
             return (self._wafer_coll(kind, local, nbytes, concurrent_groups),
-                    0.0)
+                    zeros)
         if kind != "all_reduce":
             raise NotImplementedError(
                 f"cross-wafer {kind!r} not modeled: placement keeps MP/PP "
@@ -154,15 +355,30 @@ class WaferCluster:
         if k > 1:
             intra += self._wafer_coll("reduce_scatter", widest, nbytes,
                                       concurrent_groups)
-        # the k per-member shard rings run concurrently but share the same
-        # wafer↔wafer links, so the group's boundary traffic stays
-        # 2(w−1)/w · nbytes regardless of k — bill the full payload (the
+        # the k per-member shard exchanges run concurrently but share the
+        # same inter links at every level, so the group's boundary traffic
+        # at a level is set by its full payload regardless of k (the
         # reduce-scatter avoids the k× redundancy a flat per-member
         # All-Reduce would push across, it does not shrink the cut bytes)
-        inter = self.inter_allreduce_time(len(by_wafer), nbytes, inter_conc)
+        spans = self.level_spans(by_wafer.keys())
+        levels_t = self._level_times(spans, nbytes, inter_conc)
         if k > 1:
             intra += self._wafer_coll("all_gather", widest, nbytes,
                                       concurrent_groups)
+        return intra, levels_t
+
+    def collective_time_parts(self, kind: str, group: Sequence[int],
+                              nbytes: float, concurrent_groups: int = 1,
+                              inter_concurrent_groups: "int | None" = None
+                              ) -> Tuple[float, float]:
+        """(intra-wafer, total-inter) split — the PR-2 two-way view of
+        :meth:`collective_time_levels` (single-level clusters are
+        bit-identical; deeper stacks sum their levels)."""
+        intra, levels_t = self.collective_time_levels(
+            kind, group, nbytes, concurrent_groups, inter_concurrent_groups)
+        inter = 0.0
+        for t in levels_t:
+            inter += t
         return intra, inter
 
     def collective_time(self, kind: str, group: Sequence[int], nbytes: float,
@@ -180,8 +396,24 @@ class WaferCluster:
         own I/O controllers and streams its replicas' weights locally."""
         return self.wafer.io_stream_rate()
 
+    # ---- accounting ------------------------------------------------------------
+    def inter_switch_hw(self) -> List[Dict[str, float]]:
+        """HW accounting of the in-network reduction switches (one
+        ``FredSwitch`` with as many ports as units joined, per ``switch``
+        level) — Table-III-style area/power via ``core.switch``; empty
+        when no level uses the switch topology."""
+        from .switch import FredSwitch, hw_overhead
+        out = []
+        for lvl in self.levels:
+            if lvl.topology == "switch" and lvl.count >= 2:
+                o = hw_overhead(FredSwitch.build(lvl.count, 3))
+                o["level"] = lvl.name
+                out.append(o)
+        return out
+
     def tag(self) -> Tuple:
-        """Physical identity of the inter-wafer level for collective
-        memo keys (the wafer fabric contributes its own tag)."""
-        return ("cluster", self.n_wafers, self.link.n_links,
-                self.link.link_bw, self.link.latency)
+        """Physical identity of the inter levels for collective memo keys
+        (the wafer fabric contributes its own tag)."""
+        return ("cluster", self.n_wafers) + tuple(
+            (lvl.count, lvl.topology, lvl.link.n_links, lvl.link.link_bw,
+             lvl.link.latency) for lvl in self.levels)

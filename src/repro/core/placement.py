@@ -99,14 +99,19 @@ def cluster_placement(strategy: Strategy, n_wafers: int,
     """worker → global NPU id on a :class:`~repro.core.cluster.WaferCluster`.
 
     DP replicas are spread across wafers *first* (the DP gradient exchange
-    is the cheapest traffic to push over the wafer↔wafer links: one
+    is the cheapest traffic to push over the inter-wafer links: one
     hierarchical All-Reduce per layer, vs per-microbatch MP/PP activation
     traffic), and each model instance (its mp×pp workers) lives entirely
     within one wafer.  Within a wafer the ``fred_placement`` order — MP
     consecutive, then PP, then DP — is preserved, so ``strategy.wafers = 1``
     reproduces ``fred_placement`` exactly.
 
-    Global ids are ``wafer_idx * npus_per_wafer + local_id``.
+    Global ids are ``wafer_idx * npus_per_wafer + local_id``; wafers are
+    numbered rack-major (wafer ``w`` sits in rack ``w // rack_size``), so
+    a DP split maps across the *deepest* hierarchy levels progressively —
+    it fills one rack before spilling into the next, and only
+    wafer-counts beyond the rack size pay the pod-level exchange
+    (``WaferCluster.level_spans``).
     """
     w = strategy.wafers
     if w < 1:

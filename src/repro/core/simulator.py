@@ -22,10 +22,14 @@ input-load / MP / DP / PP / weight-stream times.
 
 Multi-wafer clusters (``n_wafers > 1``, core/cluster.py): DP replicas map
 across wafers (cluster_placement), MP/PP stay within a wafer; the DP
-All-Reduce runs hierarchically — Reduce-Scatter within wafer → All-Reduce
-across the wafer↔wafer links → All-Gather within wafer — and the raw
-per-level times are reported as ``dp_intra``/``dp_inter``.  ``n_wafers=1``
-is bit-identical to the single-wafer model.
+All-Reduce runs hierarchically — Reduce-Scatter within wafer → per-level
+inter collectives → All-Gather within wafer — and the raw per-level times
+are reported as ``dp_intra``/``dp_inter``/``dp_levels``.  The inter
+levels are configurable: ``hierarchy`` stacks wafer → rack → pod counts
+and ``inter_topology`` selects the per-level collective model (``ring`` |
+``fully_connected`` | ``switch`` — see core/cluster.py).  ``n_wafers=1``
+is bit-identical to the single-wafer model, and a single ``ring`` level
+(the defaults) is bit-identical to the PR-2 wafer↔wafer ring.
 """
 
 from __future__ import annotations
@@ -84,11 +88,14 @@ class Breakdown:
     pp: float
     stream: float
     # per-level DP split (informational): raw un-overlapped All-Reduce time
-    # spent within wafers vs across the wafer↔wafer links.  ``dp`` remains
+    # spent within wafers vs across the inter-level links.  ``dp`` remains
     # the *exposed* DP time and is what ``total`` counts; on a single wafer
-    # dp_intra is the raw AR sum and dp_inter is 0.
+    # dp_intra is the raw AR sum and dp_inter is 0.  ``dp_levels`` splits
+    # dp_inter per hierarchy level (wafer↔wafer/rack, rack↔rack/pod, …);
+    # empty on a single wafer, one entry per inter level on a cluster.
     dp_intra: float = 0.0
     dp_inter: float = 0.0
+    dp_levels: Tuple[float, ...] = ()
 
     @property
     def total(self) -> float:
@@ -96,6 +103,9 @@ class Breakdown:
                 self.pp + self.stream)
 
     def as_dict(self) -> Dict[str, float]:
+        # float-valued only (callers reduce over values); the per-level
+        # dp split lives in the ``dp_levels`` attribute, whose sum is
+        # ``dp_inter``
         return {"compute": self.compute, "input_load": self.input_load,
                 "mp": self.mp, "dp": self.dp, "pp": self.pp,
                 "stream": self.stream, "dp_intra": self.dp_intra,
@@ -111,11 +121,15 @@ class Simulator:
     fred_shape: Optional[Tuple[int, int]] = None   # (n_groups, group_size)
     n_io: Optional[int] = None                     # None → derived / paper 18
     collective_cache: Optional[dict] = None        # shared memo for sweeps
-    # ---- inter-wafer level (core/cluster.py); n_wafers=1 ≡ single wafer
+    # ---- inter-wafer levels (core/cluster.py); n_wafers=1 ≡ single wafer
     n_wafers: int = 1
-    inter_wafer_links: int = 32                    # wafer↔wafer links/wafer
+    inter_wafer_links: int = 32                    # links per unit per level
     inter_wafer_bw: float = 400e9                  # B/s per link per dir
-    inter_wafer_latency: float = 5e-7              # per inter-wafer step
+    inter_wafer_latency: float = 5e-7              # per inter-level step
+    inter_topology: str = "ring"                   # ring | fully_connected
+                                                   # | switch (every level)
+    hierarchy: Optional[Tuple[int, ...]] = None    # level counts, innermost
+                                                   # first; None → (n_wafers,)
 
     def __post_init__(self):
         if self.fabric_name == "baseline":
@@ -139,15 +153,31 @@ class Simulator:
             self.mesh = None
             self.fred = FredFabric(CONFIGS[self.fabric_name], **kw)
         self.cluster = None
+        if self.hierarchy is not None:
+            prod = 1
+            for c in self.hierarchy:
+                prod *= c
+            if self.n_wafers == 1:
+                self.n_wafers = prod
+            elif self.n_wafers != prod:
+                raise ValueError(
+                    f"n_wafers={self.n_wafers} inconsistent with "
+                    f"hierarchy={self.hierarchy} (product {prod})")
         if self.n_wafers < 1:
             raise ValueError(f"n_wafers must be ≥ 1, got {self.n_wafers}")
         if self.n_wafers > 1:
-            from .cluster import WaferCluster, WaferLink
+            from .cluster import (HierarchyLevel, LEVEL_NAMES, WaferCluster,
+                                  WaferLink)
             base = self.mesh if self.mesh is not None else self.fred
-            self.cluster = WaferCluster(
-                base, self.n_wafers,
-                WaferLink(self.inter_wafer_links, self.inter_wafer_bw,
-                          self.inter_wafer_latency))
+            link = WaferLink(self.inter_wafer_links, self.inter_wafer_bw,
+                             self.inter_wafer_latency)
+            counts = (self.hierarchy if self.hierarchy is not None
+                      else (self.n_wafers,))
+            levels = tuple(
+                HierarchyLevel(LEVEL_NAMES[min(i, len(LEVEL_NAMES) - 1)],
+                               c, self.inter_topology, link)
+                for i, c in enumerate(counts))
+            self.cluster = WaferCluster(base, self.n_wafers, levels=levels)
 
     @property
     def n_npus(self) -> int:
@@ -184,12 +214,13 @@ class Simulator:
             return self.cluster.tag() + tag
         return tag
 
-    def _coll_time_parts(self, kind: str, group, nbytes: float,
-                         concurrent: int,
-                         inter_concurrent: Optional[int] = None
-                         ) -> Tuple[float, float]:
-        """(intra-wafer, inter-wafer) time for one collective; the inter
-        part is 0 on a single wafer or for groups within one wafer."""
+    def _coll_time_levels(self, kind: str, group, nbytes: float,
+                          concurrent: int,
+                          inter_concurrent: Optional[int] = None
+                          ) -> Tuple[float, Tuple[float, ...]]:
+        """(intra-wafer, per-inter-level) time for one collective; the
+        inter tuple is empty on a single wafer and all-zero for groups
+        contained within one wafer of a cluster."""
         if self.collective_cache is not None:
             key = (self._fabric_tag(), kind, tuple(group), nbytes,
                    concurrent, inter_concurrent)
@@ -197,23 +228,27 @@ class Simulator:
             if hit is not None:
                 return hit
         if self.cluster is not None:
-            parts = self.cluster.collective_time_parts(
+            parts = self.cluster.collective_time_levels(
                 kind, group, nbytes, concurrent_groups=concurrent,
                 inter_concurrent_groups=inter_concurrent)
         elif self.mesh is not None:
-            parts = (self.mesh.collective_time(kind, group, nbytes), 0.0)
+            parts = (self.mesh.collective_time(kind, group, nbytes), ())
         else:
             parts = (self.fred.collective_time(kind, group, nbytes,
                                                concurrent_groups=concurrent),
-                     0.0)
+                     ())
         if self.collective_cache is not None:
             self.collective_cache[key] = parts
         return parts
 
     def _coll_time(self, kind: str, group, nbytes: float,
                    concurrent: int) -> float:
-        intra, inter = self._coll_time_parts(kind, group, nbytes, concurrent)
-        return intra + inter
+        intra, levels = self._coll_time_levels(kind, group, nbytes,
+                                               concurrent)
+        t = intra
+        for x in levels:
+            t += x
+        return t
 
     def _pp_time(self, nbytes: float) -> float:
         if self.cluster is not None:
@@ -290,19 +325,25 @@ class Simulator:
         # ---- DP comm ----------------------------------------------------------------
         dp_time = 0.0
         dp_intra = dp_inter = 0.0
+        n_inter_levels = (len(self.cluster.levels)
+                          if self.cluster is not None else 0)
+        lvl_acc = [0.0] * n_inter_levels
         grad_bytes_per_layer = w.params_per_layer * BYTES / st.mp
         if st.dp > 1 and w.execution == "stationary":
             # inside the wafer all mp·pp DP groups share the fabric, but on
-            # the wafer↔wafer links only the mp groups of the same pipeline
+            # the inter-level links only the mp groups of the same pipeline
             # stage contend — GPipe backward staggers the other stages.
             # One model evaluation; the per-layer accumulation stays a sum
             # (not a multiply) so totals match the seed bit-for-bit.
-            ti, te = self._coll_time_parts(
+            ti, te_levels = self._coll_time_levels(
                 "all_reduce", dp_group, grad_bytes_per_layer,
                 concurrent=n_dp_groups, inter_concurrent=st.mp)
             for _ in range(layers_per_stage):
                 dp_intra += ti
-                dp_inter += te
+                for i, te in enumerate(te_levels):
+                    lvl_acc[i] += te
+            for x in lvl_acc:
+                dp_inter += x
             total_ar = dp_intra + dp_inter
             if self.overlap_dp:
                 # layer-by-layer ARs overlap with remaining backward compute
@@ -335,7 +376,7 @@ class Simulator:
                          compute=compute, input_load=input_load,
                          mp=mp_time, dp=dp_time, pp=pp_time,
                          stream=stream_time, dp_intra=dp_intra,
-                         dp_inter=dp_inter)
+                         dp_inter=dp_inter, dp_levels=tuple(lvl_acc))
 
 
 def compare(workload: Workload, fabrics=("baseline", "FRED-C", "FRED-D"),

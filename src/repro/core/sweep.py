@@ -11,7 +11,11 @@ NPU count it enumerates
     baseline, n_groups×group_size almost-fat-trees for FRED, and
   * (``max_wafers > 1``) every wafer count of a multi-wafer cluster —
     the wafer is the manufacturing unit, so 2 wafers double the NPUs and
-    the DP axis splits across them (Strategy.wafers, core/cluster.py),
+    the DP axis splits across them (Strategy.wafers, core/cluster.py) —
+    crossed with every inter-wafer topology in ``inter_topologies``
+    (ring / fully_connected / switch) and every hierarchy stacking of
+    the wafer count into ≤ ``max_levels`` rack/pod levels
+    (:func:`hierarchy_specs`),
 
 then evaluates the cross-product under one of two bit-identical engines:
 the default ``engine="batched"`` vectorizes all strategies of each
@@ -37,6 +41,7 @@ import dataclasses
 import operator
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .cluster import INTER_TOPOLOGIES
 from .placement import Strategy
 from .simulator import Breakdown, LRUCache, Simulator
 from .workloads import (MemoryModel, Workload, is_feasible,
@@ -97,6 +102,58 @@ def cluster_shapes(n_npus: int, max_wafers: int,
         raise ValueError(f"max_wafers must be ≥ 1, got {max_wafers}")
     return [(w, s) for w in range(1, max_wafers + 1)
             for s in shape_fn(n_npus)]
+
+
+def hierarchy_specs(n_wafers: int, max_levels: int = 1
+                    ) -> List[Tuple[int, ...]]:
+    """Stackings of ``n_wafers`` into ≤ ``max_levels`` inter levels
+    (level counts innermost first, every level ≥ 2 wafers/units): 4
+    wafers at 2 levels → the flat ``(4,)`` ring-of-wafers and the
+    ``(2, 2)`` rack-of-2 × pod-of-2.  Deterministic order: flat spec
+    first, then ascending innermost count."""
+    if max_levels < 1:
+        raise ValueError(f"max_levels must be ≥ 1, got {max_levels}")
+    if n_wafers == 1:
+        return [(1,)]
+    specs: List[Tuple[int, ...]] = [(n_wafers,)]
+    if max_levels >= 2:
+        for c1 in range(2, n_wafers // 2 + 1):
+            if n_wafers % c1:
+                continue
+            for rest in hierarchy_specs(n_wafers // c1, max_levels - 1):
+                spec = (c1,) + rest
+                if all(c >= 2 for c in spec):
+                    specs.append(spec)
+    return specs
+
+
+def hierarchy_configs(n_npus: int, max_wafers: int,
+                      shape_fn: Callable[[int], List[Tuple[int, int]]]
+                      = fred_shapes,
+                      inter_topologies: Sequence[str] = ("ring",),
+                      max_levels: int = 1
+                      ) -> List[Tuple[int, Tuple[int, int],
+                                      Tuple[int, ...], str]]:
+    """(n_wafers, per-wafer shape, hierarchy, inter topology) tuples —
+    the full scale-out configuration axis of the sweep.  Single-wafer
+    configurations carry the degenerate ``((1,), "")`` hierarchy/topology
+    so the defaults reduce exactly to :func:`cluster_shapes` order."""
+    if max_wafers < 1:
+        raise ValueError(f"max_wafers must be ≥ 1, got {max_wafers}")
+    for t in inter_topologies:
+        if t not in INTER_TOPOLOGIES:
+            raise ValueError(f"unknown inter topology {t!r}; expected "
+                             f"a subset of {INTER_TOPOLOGIES}")
+    out: List[Tuple[int, Tuple[int, int], Tuple[int, ...], str]] = []
+    for w in range(1, max_wafers + 1):
+        for s in shape_fn(n_npus):
+            if w == 1:
+                out.append((1, s, (1,), ""))
+                continue
+            for hier in hierarchy_specs(w, max_levels):
+                for topo in inter_topologies:
+                    out.append((w, s, hier, topo))
+    return out
 
 
 def strategy_space(n_npus: int, n_layers: Optional[int] = None,
@@ -197,6 +254,11 @@ class SweepResult:
                                        # MemoryModel (0 when none given)
     feasible: Optional[bool] = None    # fits npu_hbm_bytes; None = not
                                        # evaluated (no MemoryModel)
+    hierarchy: Tuple[int, ...] = (1,)  # inter-level counts, innermost
+                                       # first ((4,) = flat ring of 4
+                                       # wafers, (2, 2) = rack×pod)
+    inter_topology: str = ""           # ring | fully_connected | switch;
+                                       # "" on a single wafer
 
     @property
     def total(self) -> float:
@@ -221,13 +283,22 @@ def scaled_n_io(n_npus: int) -> int:
 
 def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
                cache: dict, compute_efficiency: float,
-               n_wafers: int = 1, **inter_kw) -> Simulator:
+               n_wafers: int = 1,
+               hierarchy: Optional[Tuple[int, ...]] = None,
+               inter_topology: str = "",
+               **inter_kw) -> Simulator:
     """``n_npus`` is per wafer; ``inter_kw`` forwards the inter-wafer link
-    parameters (inter_wafer_links/bw/latency) when n_wafers > 1."""
+    parameters (inter_wafer_links/bw/latency) when n_wafers > 1, and
+    ``hierarchy``/``inter_topology`` shape the inter levels (single ring
+    level when unset — the PR-2 model)."""
     kw = dict(compute_efficiency=compute_efficiency,
               n_io=scaled_n_io(n_npus), collective_cache=cache)
     if n_wafers > 1:
         kw.update(n_wafers=n_wafers, **inter_kw)
+        if hierarchy is not None:
+            kw["hierarchy"] = hierarchy
+        if inter_topology:
+            kw["inter_topology"] = inter_topology
     if fabric == "baseline":
         return Simulator(fabric, mesh_shape=shape, **kw)
     return Simulator(fabric, fred_shape=shape, **kw)
@@ -244,6 +315,8 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           inter_wafer_links: int = 32,
           inter_wafer_bw: float = 400e9,
           inter_wafer_latency: float = 5e-7,
+          inter_topologies: Sequence[str] = ("ring",),
+          max_levels: int = 1,
           memory: Optional[MemoryModel] = None,
           prune_symmetric: bool = False,
           engine: str = "batched") -> List[SweepResult]:
@@ -263,6 +336,14 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     core/cluster.py), with DP replicas placed across wafers and
     wafer-split strategies tagged ``Strategy.wafers``.  ``max_wafers=1``
     (the default) is bit-identical to the single-wafer sweep.
+
+    ``inter_topologies`` crosses every multi-wafer configuration with the
+    listed inter-level collective models (ring / fully_connected /
+    switch — core/cluster.py), and ``max_levels=2`` additionally sweeps
+    the rack/pod stackings of each wafer count (:func:`hierarchy_specs`:
+    4 wafers → flat (4,) and (2, 2)); every level shares the
+    ``inter_wafer_*`` link budget.  The defaults (ring, 1 level) are
+    bit-identical to the PR-2 sweep, row for row.
 
     FRED routability (``check_routing=True``) is checked per (strategy,
     shape): the memo is keyed on both, and the actual (n_groups,
@@ -297,6 +378,9 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
                          f"{ENGINES}")
+    if not 1 <= max_levels <= 2:
+        raise ValueError(f"max_levels must be 1 or 2 (wafer → rack → "
+                         f"pod), got {max_levels}")
     # explicitly passed strategies always run: widen the wafer-count
     # enumeration to cover the largest split they ask for
     if strategies:
@@ -378,13 +462,14 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
         per_wf[wf] = ent
         return ent
 
-    def _emit(fabric, wf, shape, sim, evals, rep_of, rep_brs,
+    def _emit(fabric, wf, shape, hier, topo, sim, evals, rep_of, rep_brs,
               mem_list, feas_list):
         """One SweepResult row per candidate of this (fabric, shape,
-        wafer count) — shared by both engines so row order, Pareto and
-        CSV output are engine-independent.  Construction bypasses the
-        dataclass __init__ — this loop runs once per sweep point and is
-        the hottest shared Python in a 500+-NPU sweep."""
+        wafer count, hierarchy, inter topology) — shared by both engines
+        so row order, Pareto and CSV output are engine-independent.
+        Construction bypasses the dataclass __init__ — this loop runs
+        once per sweep point and is the hottest shared Python in a
+        500+-NPU sweep."""
         check_route = check_routing and fabric != "baseline"
         inter_bw = agg_inter_bw if wf > 1 else 0.0
         new = SweepResult.__new__
@@ -420,68 +505,82 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 (st.mp * st.pp),
                 "routable": routable, "pareto": False, "n_wafers": wf,
                 "inter_wafer_bw": inter_bw,
-                "memory_bytes_per_npu": mem_bytes, "feasible": feas}
+                "memory_bytes_per_npu": mem_bytes, "feasible": feas,
+                "hierarchy": hier, "inter_topology": topo}
             results.append(r)
 
     for fabric in fabrics:
         shape_fn = mesh_shapes if fabric == "baseline" else fred_shapes
-        configs = cluster_shapes(n_npus, max_wafers, shape_fn)
+        configs = hierarchy_configs(n_npus, max_wafers, shape_fn,
+                                    inter_topologies, max_levels)
         if engine == "batched":
             import numpy as np
-            from .batch_engine import BatchEngine, CandidateBatch
+            from .batch_engine import BatchEngine, CandidateBatch, InterLane
             # fuse configurations into as few vectorized runs as the
-            # kernels allow: the wafer count is already a per-lane input,
-            # so every wafer count of a shape shares one run; FRED shapes
-            # additionally fuse across shapes (group_size is the only
-            # shape-dependent kernel input, passed per lane)
+            # kernels allow: the wafer count, hierarchy spans and inter
+            # topology are all per-lane inputs (InterLane), so every
+            # (wafer count, hierarchy, topology) of a shape shares one
+            # run; FRED shapes additionally fuse across shapes
+            # (group_size is the only shape-dependent kernel input,
+            # passed per lane)
             if fabric == "baseline":
                 by_shape: Dict[Tuple[int, int], List] = {}
-                for wf, shape in configs:
-                    by_shape.setdefault(shape, []).append((wf, shape))
+                for c in configs:
+                    by_shape.setdefault(c[1], []).append(c)
                 grp_list = list(by_shape.values())
             else:
                 grp_list = [configs]
-            brs_by_config: Dict[Tuple[int, Tuple[int, int]], list] = {}
-            sim_by_config: Dict[Tuple[int, Tuple[int, int]], Simulator] = {}
+            brs_by_config: Dict[Tuple, list] = {}
+            sim_by_config: Dict[Tuple, Simulator] = {}
             for grp in grp_list:
-                max_wf = max(wf for wf, _s in grp)
+                max_wf = max(c[0] for c in grp)
+                # one single-level cluster serves every fused lane: the
+                # sweep's levels share one link budget, and the per-lane
+                # InterLane carries each configuration's topology/spans
                 sim = _simulator(fabric, grp[0][1], n_npus, cache,
                                  compute_efficiency, n_wafers=max_wf,
                                  **inter_kw)
-                parts, gs_parts, metas = [], [], []
-                for wf, shape in grp:
+                parts, gs_parts, il_parts, metas = [], [], [], []
+                for wf, shape, hier, topo in grp:
                     _e, _ri, _ro, rep_pack, _m, _f2 = _candidates(wf)
                     parts.append(rep_pack)
-                    metas.append((wf, shape, len(rep_pack)))
+                    metas.append(((wf, shape, hier, topo), len(rep_pack)))
+                    il_parts.append(InterLane.for_config(
+                        len(rep_pack), wf, hier if wf > 1 else (), topo))
                     if fabric != "baseline":
                         gs_parts.append(np.full(len(rep_pack), shape[1],
                                                 dtype=np.int64))
                 fused = CandidateBatch.concat(parts)
                 gs_lane = np.concatenate(gs_parts) if gs_parts else None
-                brs = BatchEngine(sim).run_batch(fused, gs_lane=gs_lane)
+                il_lane = (InterLane.concat(il_parts) if max_wf > 1
+                           else None)
+                brs = BatchEngine(sim).run_batch(fused, gs_lane=gs_lane,
+                                                 inter_lane=il_lane)
                 off = 0
-                for wf, shape, nrep in metas:
-                    brs_by_config[(wf, shape)] = brs[off:off + nrep]
-                    sim_by_config[(wf, shape)] = sim
+                for key, nrep in metas:
+                    brs_by_config[key] = brs[off:off + nrep]
+                    sim_by_config[key] = sim
                     off += nrep
-            # emit in the same (wafer count, shape) order as the scalar
-            # engine so row order, Pareto and CSV are engine-independent
-            for wf, shape in configs:
+            # emit in the same configuration order as the scalar engine
+            # so row order, Pareto and CSV are engine-independent
+            for key in configs:
+                wf, shape, hier, topo = key
                 evals, _ri, rep_of, _rp, mem_arr, feas_arr = \
                     _candidates(wf)
-                _emit(fabric, wf, shape, sim_by_config[(wf, shape)],
-                      evals, rep_of, brs_by_config[(wf, shape)],
+                _emit(fabric, wf, shape, hier, topo, sim_by_config[key],
+                      evals, rep_of, brs_by_config[key],
                       mem_arr, feas_arr)
         else:
-            for wf, shape in configs:
+            for wf, shape, hier, topo in configs:
                 sim = _simulator(fabric, shape, n_npus, cache,
                                  compute_efficiency, n_wafers=wf,
-                                 **inter_kw)
+                                 hierarchy=hier if wf > 1 else None,
+                                 inter_topology=topo, **inter_kw)
                 evals, rep_idx, rep_of, _rp, mem_arr, feas_arr = \
                     _candidates(wf)
                 rep_brs = [sim.run(evals[i][1]) for i in rep_idx]
-                _emit(fabric, wf, shape, sim, evals, rep_of, rep_brs,
-                      mem_arr, feas_arr)
+                _emit(fabric, wf, shape, hier, topo, sim, evals, rep_of,
+                      rep_brs, mem_arr, feas_arr)
     for fabric in set(r.fabric for r in results):
         subset = [r for r in results if r.fabric == fabric]
         if memory is not None:
@@ -534,8 +633,9 @@ def pareto_front(results: Sequence[SweepResult],
 
 
 CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
-              "inter_wafer_bw,mp,dp,pp,minibatch,"
+              "inter_wafer_bw,hierarchy,inter_topology,mp,dp,pp,minibatch,"
               "compute_s,input_load_s,mp_s,dp_s,dp_intra_s,dp_inter_s,"
+              "dp_level_1_s,dp_level_2_s,"
               "pp_s,stream_s,total_s,"
               "time_per_sample_s,param_bytes_per_npu,"
               "memory_bytes_per_npu,feasible,routable,pareto")
@@ -544,17 +644,22 @@ CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
 def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
     """One row per sweep point; schema in benchmarks/README.md.  shape_a/b
     are rows/cols (baseline) or n_groups/group_size (FRED), per wafer;
-    n_npus = shape_a·shape_b·n_wafers."""
+    n_npus = shape_a·shape_b·n_wafers; hierarchy is the level stacking
+    ("4" = flat, "2x2" = rack×pod) and dp_level_1_s/dp_level_2_s the raw
+    per-inter-level DP time (0 where a level is absent)."""
     rows = []
     for r in results:
         br = r.breakdown
+        lv = br.dp_levels + (0.0, 0.0)
         rows.append(
             f"{br.workload},{r.fabric},{r.shape[0]},{r.shape[1]},"
             f"{r.n_wafers},{r.n_npus},{r.inter_wafer_bw:.9g},"
+            f"{'x'.join(map(str, r.hierarchy))},{r.inter_topology},"
             f"{r.strategy.mp},{r.strategy.dp},{r.strategy.pp},"
             f"{r.minibatch},"
             f"{br.compute:.9g},{br.input_load:.9g},{br.mp:.9g},"
             f"{br.dp:.9g},{br.dp_intra:.9g},{br.dp_inter:.9g},"
+            f"{lv[0]:.9g},{lv[1]:.9g},"
             f"{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
             f"{r.time_per_sample:.9g},{r.param_bytes_per_npu:.9g},"
             f"{r.memory_bytes_per_npu:.9g},"

@@ -80,6 +80,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             "chosen": {"mp": d.mp, "dp": d.dp, "pp": d.pp,
                        "wafers": d.wafers, "fabric": d.fabric,
                        "wafer_shape": list(d.wafer_shape),
+                       "inter_topology": d.inter_topology,
+                       "hierarchy": list(d.hierarchy),
                        "execution": d.execution},
             "time_per_sample_s": d.time_per_sample,
             "memory_bytes_per_npu": d.memory_bytes_per_npu,
@@ -226,8 +228,10 @@ def main(argv=None):
                              f"compile={rec['seconds']['compile']}s")
                     if "autostrategy" in rec:
                         c = rec["autostrategy"]["chosen"]
+                        topo = (f"+{c['inter_topology']}"
+                                if c.get("inter_topology") else "")
                         extra += (f" auto=MP{c['mp']}-DP{c['dp']}-"
-                                  f"PP{c['pp']}-W{c['wafers']}"
+                                  f"PP{c['pp']}-W{c['wafers']}{topo}"
                                   f"@{c['fabric']}/{c['execution']}")
                 print(f"[dryrun] {name}: {status}{extra}", flush=True)
     if failures:

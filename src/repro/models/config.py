@@ -196,10 +196,13 @@ class ParallelConfig:
     attn_k_chunk: int = 1024
     use_pallas: bool = False                      # TPU-only fused kernels
     # sweep-driven auto-strategy (core/autostrategy.py): the simulator-
-    # chosen (mp, dp, pp, wafers) for this cell; (0, 0, 0, 0) = hand-set
-    # defaults / sweep not run.  Informational for the runtime mesh (the
-    # launcher builds the mesh), executable for the wafer-side placement.
-    auto_strategy: Tuple[int, int, int, int] = (0, 0, 0, 0)
+    # chosen (mp, dp, pp, wafers, inter_topology) for this cell —
+    # inter_topology ∈ {ring, fully_connected, switch} is the chosen
+    # inter-wafer collective model ("" for single-wafer choices);
+    # (0, 0, 0, 0, "") = hand-set defaults / sweep not run.
+    # Informational for the runtime mesh (the launcher builds the mesh),
+    # executable for the wafer-side placement.
+    auto_strategy: Tuple[int, int, int, int, str] = (0, 0, 0, 0, "")
 
     def replace(self, **kw) -> "ParallelConfig":
         return dataclasses.replace(self, **kw)

@@ -12,9 +12,11 @@ Two modes:
   as recorded by the dry-runs (pinned in tests/test_autostrategy.py).
 * ``autostrategy=True`` — sweep-driven: the analytical FRED simulator
   (``core.sweep`` via ``core.autostrategy.choose_strategy``) picks the
-  memory-feasible Pareto-optimal (mp, dp, pp, wafers) for the cell under
-  the frozen defaults' OptimConfig/remat settings, and the decision lands
-  in ``ParallelConfig.auto_strategy`` (plus ``grad_sync="hierarchical"``
+  memory-feasible Pareto-optimal (mp, dp, pp, wafers) — and, for
+  cross-wafer DP, the inter-wafer topology (ring / fully_connected /
+  switch, ``core.cluster``) — for the cell under the frozen defaults'
+  OptimConfig/remat settings, and the decision lands in
+  ``ParallelConfig.auto_strategy`` (plus ``grad_sync="hierarchical"``
   for cross-wafer DP).  The JAX mesh itself is built by the launcher —
   the recorded strategy is what the dry-run logs and what wafer-side
   placement (``core.placement``) executes.
@@ -83,9 +85,12 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
             cfg, shape, master=ocfg.master, moments_dtype=ocfg.moments_dtype,
             remat=pcfg.remat, **(sweep_kw or {}))
     st = decision.strategy
-    pcfg = pcfg.replace(auto_strategy=(st.mp, st.dp, st.pp, st.wafers))
+    pcfg = pcfg.replace(auto_strategy=(st.mp, st.dp, st.pp, st.wafers,
+                                       decision.inter_topology))
     if st.wafers > 1:
-        # cross-wafer DP must use the FRED-style reduction tree: RS within
-        # the wafer, AR on the shard over the wafer↔wafer links, AG within
+        # cross-wafer DP must use the hierarchical reduction: RS within
+        # the wafer, the chosen inter-wafer collective (ring ring-AR /
+        # fully-connected direct exchange / in-switch reduction) on the
+        # shard, AG within
         pcfg = pcfg.replace(grad_sync="hierarchical")
     return pcfg, ocfg

@@ -21,8 +21,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, NamedTuple, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
+try:                                   # the JAX-free CI core lane imports
+    import jax                         # this module only for OptimConfig
+    import jax.numpy as jnp            # (via parallel.policy); every
+except ImportError:                    # array function below needs jax
+    jax = jnp = None
 
 
 @dataclasses.dataclass(frozen=True)

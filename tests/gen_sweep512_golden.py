@@ -3,21 +3,49 @@ front of the exhaustive 512-NPU single-wafer Transformer-17B sweep
 (batched engine).  Run after an *intentional* cost-model change:
 
     PYTHONPATH=src python -m tests.gen_sweep512_golden
+
+``--check`` regenerates in memory only and exits non-zero if the fresh
+front differs from the committed file — the nightly golden-drift gate
+(catches env-dependent float drift, e.g. a numpy or libm change on the
+CI image, before it surfaces as a confusing PR failure).
 """
 
+import argparse
 import json
-from pathlib import Path
+import sys
 
 
-def main() -> None:
+def main() -> int:
     from repro.core.sweep import transformer_17b_sweep
     from tests.test_batch_engine import GOLDEN, _front_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff the regenerated front against the "
+                         "committed golden instead of overwriting it; "
+                         "exit 1 on drift")
+    args = ap.parse_args()
     res = transformer_17b_sweep(512, engine="batched")
     rows = _front_rows(res)
+    if args.check:
+        want = json.loads(GOLDEN.read_text())
+        if rows != want:
+            changed = sum(1 for a, b in zip(rows, want) if a != b) + \
+                abs(len(rows) - len(want))
+            print(f"golden drift: regenerated 512-NPU Pareto front "
+                  f"differs from {GOLDEN} ({changed} row(s); "
+                  f"{len(rows)} fresh vs {len(want)} committed).\n"
+                  f"If a cost-model change is intended, regenerate with "
+                  f"`python -m tests.gen_sweep512_golden`; otherwise the "
+                  f"environment introduced float drift.", file=sys.stderr)
+            return 1
+        print(f"golden check OK: {len(rows)} Pareto points bit-identical "
+              f"to {GOLDEN}")
+        return 0
     GOLDEN.write_text(json.dumps(rows, indent=1) + "\n")
     print(f"wrote {GOLDEN} ({len(rows)} Pareto points over "
           f"{len(res)} sweep points)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

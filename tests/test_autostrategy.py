@@ -271,7 +271,7 @@ def test_cell_policy_defaults_frozen():
         assert ocfg.master is want["master"], arch
         assert ocfg.moments_dtype == want["moments_dtype"], arch
         assert pcfg.remat == want["remat"], (arch, shape_name)
-        assert pcfg.auto_strategy == (0, 0, 0, 0)
+        assert pcfg.auto_strategy == (0, 0, 0, 0, "")
     # long-context chunking default unchanged
     pcfg, _ = cell_policy(_cfg("llama3.2-1b"), _shape("prefill_32k"), None)
     assert (pcfg.attn_q_chunk, pcfg.attn_k_chunk) == (512, 1024)
@@ -282,10 +282,13 @@ def test_cell_policy_autostrategy_stamps_strategy():
     pcfg, ocfg = cell_policy(
         _cfg("llama3.2-1b"), _shape(), mesh=None, autostrategy=True,
         sweep_kw=dict(fabrics=("FRED-C",), max_wafers=2))
-    mp, dp, pp, wf = pcfg.auto_strategy
+    mp, dp, pp, wf, topo = pcfg.auto_strategy
     assert mp * dp * pp >= 1 and wf >= 1
     if wf > 1:
         assert pcfg.grad_sync == "hierarchical"
+        assert topo in ("ring", "fully_connected", "switch")
+    else:
+        assert topo == ""
     # the frozen optimizer mode is unchanged by strategy selection
     assert ocfg.master is True and ocfg.moments_dtype == "float32"
 
@@ -296,7 +299,8 @@ def test_cell_policy_accepts_precomputed_decision():
                         fabrics=("FRED-C",))
     pcfg, _ = cell_policy(_cfg("llama3.2-1b"), _shape(), None,
                           autostrategy=True, decision=d)
-    assert pcfg.auto_strategy == (d.mp, d.dp, d.pp, d.wafers)
+    assert pcfg.auto_strategy == (d.mp, d.dp, d.pp, d.wafers,
+                                  d.inter_topology)
 
 
 # --------------------------------------------------------------------------

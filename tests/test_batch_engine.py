@@ -45,12 +45,15 @@ ALL_FABRICS = ("baseline", "FRED-A", "FRED-B", "FRED-C", "FRED-D")
 # --------------------------------------------------------------------------
 
 def random_sim_case(rng: random.Random):
-    """(Simulator, Workload) with a random fabric, shape, wafer count and
-    strategy — every branch of the cost model reachable."""
+    """(Simulator, Workload) with a random fabric, shape, wafer count,
+    inter-wafer topology, hierarchy stacking and strategy — every branch
+    of the cost model reachable."""
+    from repro.core.cluster import INTER_TOPOLOGIES
+    from repro.core.sweep import hierarchy_specs
     fabric = rng.choice(ALL_FABRICS)
     a, b = rng.randint(1, 8), rng.randint(1, 8)
     npw = a * b
-    n_wafers = rng.randint(1, 3)
+    n_wafers = rng.choice((1, 2, 3, 4, 6))
     wafers = rng.randint(1, n_wafers)
     for _ in range(64):
         mp, pp, dpw = rng.randint(1, 4), rng.randint(1, 3), rng.randint(1, 4)
@@ -75,7 +78,9 @@ def random_sim_case(rng: random.Random):
     if n_wafers > 1:
         kw = dict(n_wafers=n_wafers,
                   inter_wafer_links=rng.randint(1, 64),
-                  inter_wafer_bw=rng.uniform(1e9, 1e12))
+                  inter_wafer_bw=rng.uniform(1e9, 1e12),
+                  inter_topology=rng.choice(INTER_TOPOLOGIES),
+                  hierarchy=rng.choice(hierarchy_specs(n_wafers, 2)))
     sim = Simulator(fabric, mesh_shape=(a, b), fred_shape=(a, b),
                     n_io=rng.randint(1, 32), **kw)
     return sim, w
@@ -91,14 +96,17 @@ def random_memory_model(rng: random.Random) -> MemoryModel:
 
 
 def assert_sweeps_bit_identical(a, b):
-    """Shared assertion: same points, bit-equal breakdowns/memory, same
-    Pareto membership."""
+    """Shared assertion: same points, bit-equal breakdowns/memory (incl.
+    the per-inter-level dp split), same Pareto membership."""
     assert len(a) == len(b)
     for ra, rb in zip(a, b):
-        assert (ra.fabric, ra.shape, ra.strategy, ra.n_wafers) == \
-            (rb.fabric, rb.shape, rb.strategy, rb.n_wafers)
+        assert (ra.fabric, ra.shape, ra.strategy, ra.n_wafers,
+                ra.hierarchy, ra.inter_topology) == \
+            (rb.fabric, rb.shape, rb.strategy, rb.n_wafers,
+             rb.hierarchy, rb.inter_topology)
         assert rb.breakdown.total == ra.breakdown.total
         assert rb.breakdown.as_dict() == ra.breakdown.as_dict()
+        assert rb.breakdown.dp_levels == ra.breakdown.dp_levels
         assert rb.memory_bytes_per_npu == ra.memory_bytes_per_npu
         assert rb.feasible == ra.feasible
         assert rb.pareto == ra.pareto           # front membership
@@ -112,9 +120,10 @@ def test_batched_breakdown_bit_identical_seeded():
     rng = random.Random(0)
     for _ in range(200):
         sim, w = random_sim_case(rng)
-        scalar = sim.run(w).as_dict()
-        batched = BatchEngine(sim).run_batch([w])[0].as_dict()
-        assert batched == scalar                # exact, not approx
+        scalar = sim.run(w)
+        batched = BatchEngine(sim).run_batch([w])[0]
+        assert batched.as_dict() == scalar.as_dict()   # exact, not approx
+        assert batched.dp_levels == scalar.dp_levels
 
 
 def test_memory_batch_bit_identical_seeded():

@@ -29,13 +29,16 @@ from tests.test_batch_engine import (ALL_FABRICS,
 
 @st.composite
 def sim_cases(draw):
-    """(Simulator, Workload) with a random fabric, shape, wafer count and
-    strategy — every branch of the cost model reachable."""
+    """(Simulator, Workload) with a random fabric, shape, wafer count,
+    inter-wafer topology, hierarchy stacking and strategy — every branch
+    of the cost model reachable."""
+    from repro.core.cluster import INTER_TOPOLOGIES
+    from repro.core.sweep import hierarchy_specs
     fabric = draw(st.sampled_from(ALL_FABRICS))
     a = draw(st.integers(min_value=1, max_value=8))
     b = draw(st.integers(min_value=1, max_value=8))
     npw = a * b
-    n_wafers = draw(st.integers(min_value=1, max_value=3))
+    n_wafers = draw(st.sampled_from((1, 2, 3, 4, 6)))
     wafers = draw(st.integers(min_value=1, max_value=n_wafers))
     mp = draw(st.integers(min_value=1, max_value=4))
     pp = draw(st.integers(min_value=1, max_value=3))
@@ -59,7 +62,10 @@ def sim_cases(draw):
     if n_wafers > 1:
         kw = dict(n_wafers=n_wafers,
                   inter_wafer_links=draw(st.integers(1, 64)),
-                  inter_wafer_bw=draw(st.floats(1e9, 1e12, **fin)))
+                  inter_wafer_bw=draw(st.floats(1e9, 1e12, **fin)),
+                  inter_topology=draw(st.sampled_from(INTER_TOPOLOGIES)),
+                  hierarchy=draw(st.sampled_from(
+                      hierarchy_specs(n_wafers, 2))))
     sim = Simulator(fabric, mesh_shape=(a, b), fred_shape=(a, b),
                     n_io=draw(st.integers(min_value=1, max_value=32)), **kw)
     return sim, w
@@ -80,9 +86,10 @@ def memory_models(draw):
 @given(case=sim_cases())
 def test_batched_breakdown_bit_identical_to_scalar(case):
     sim, w = case
-    scalar = sim.run(w).as_dict()
-    batched = BatchEngine(sim).run_batch([w])[0].as_dict()
-    assert batched == scalar                    # exact, not approx
+    scalar = sim.run(w)
+    batched = BatchEngine(sim).run_batch([w])[0]
+    assert batched.as_dict() == scalar.as_dict()   # exact, not approx
+    assert batched.dp_levels == scalar.dp_levels
 
 
 @settings(deadline=None)
@@ -97,8 +104,9 @@ def test_memory_batch_bit_identical_to_scalar(case, mem):
 
 @st.composite
 def sweep_cases(draw):
+    from repro.core.cluster import INTER_TOPOLOGIES
     n_npus = draw(st.sampled_from((8, 12, 16, 20)))
-    max_wafers = draw(st.integers(min_value=1, max_value=2))
+    max_wafers = draw(st.integers(min_value=1, max_value=4))
     fabrics = tuple(draw(st.sets(st.sampled_from(ALL_FABRICS),
                                  min_size=1, max_size=3)))
     n_layers = draw(st.sampled_from((12, 24, 78)))
@@ -106,13 +114,17 @@ def sweep_cases(draw):
     execution = draw(st.sampled_from(("stationary", "streaming")))
     mem = draw(st.one_of(st.none(), memory_models()))
     prune = draw(st.booleans())
+    topos = tuple(draw(st.sets(st.sampled_from(INTER_TOPOLOGIES),
+                               min_size=1, max_size=3)))
+    max_levels = draw(st.integers(min_value=1, max_value=2))
 
     def workload_fn(strat):
         return transformer("rand", n_layers, 1024, seq, strat, execution)
 
     return dict(workload_fn=workload_fn, n_npus=n_npus, fabrics=fabrics,
                 n_layers=n_layers, max_wafers=max_wafers, memory=mem,
-                prune_symmetric=prune)
+                prune_symmetric=prune, inter_topologies=topos,
+                max_levels=max_levels)
 
 
 @settings(deadline=None, max_examples=20)

@@ -1,0 +1,402 @@
+"""Hierarchical scale-out v2 (ISSUE 5): inter-wafer topology choice
+(ring / fully-connected / switch) + rack/pod levels.
+
+Covers: (a) HierarchyLevel/WaferCluster construction and geometry,
+(b) the inter-level topology models — fully-connected ≤ ring at equal
+aggregate bandwidth, in-switch reduction halving the inter traffic (the
+paper's ≈2× claim), hypothesis property versions of both, (c) 1-level /
+2-level degeneracy back to the PR-2 numbers bit-for-bit, (d) the new
+sweep axes (hierarchy specs, topology cross-product, CSV columns,
+batched-vs-scalar parity — the CI ``hiersweep`` gate at test scale),
+(e) the autostrategy inter-topology decision + policy stamping.
+"""
+
+import pytest
+
+from repro.core.cluster import (INTER_TOPOLOGIES, HierarchyLevel,
+                                WaferCluster, WaferLink, hierarchy_spans,
+                                inter_traffic_bytes, level_collective_time)
+from repro.core.fabric import CONFIGS, FredFabric
+from repro.core.meshnet import MeshFabric
+from repro.core.placement import Strategy, cluster_placement, placement_groups
+from repro.core.simulator import Simulator
+from repro.core.sweep import (CSV_HEADER, hierarchy_configs, hierarchy_specs,
+                              sweep, to_csv_rows, transformer_17b,
+                              transformer_17b_sweep)
+from repro.core.workloads import transformer
+
+
+def t17b(st):
+    return transformer("T17B", 78, 4256, 1024, st, "stationary")
+
+
+# --------------------------------------------------------------------------
+# (a) construction + geometry
+# --------------------------------------------------------------------------
+
+def test_hierarchy_level_validation():
+    with pytest.raises(ValueError):
+        HierarchyLevel("rack", 0)
+    with pytest.raises(ValueError):
+        HierarchyLevel("rack", 2, topology="torus")
+    for t in INTER_TOPOLOGIES:
+        assert HierarchyLevel("rack", 2, topology=t).topology == t
+
+
+def test_cluster_levels_construction():
+    fab = FredFabric(CONFIGS["FRED-C"])
+    levels = (HierarchyLevel("rack", 2, "ring"),
+              HierarchyLevel("pod", 3, "switch"))
+    cl = WaferCluster(fab, levels=levels)
+    assert cl.n_wafers == 6 and cl.hierarchy == (2, 3)
+    assert cl.n_npus == 6 * 20
+    # explicit but inconsistent wafer count is rejected
+    with pytest.raises(ValueError):
+        WaferCluster(fab, 4, levels=levels)
+    # legacy constructor → one level with the given topology
+    cl1 = WaferCluster(fab, 4, topology="fully_connected")
+    assert cl1.hierarchy == (4,)
+    assert cl1.levels[0].topology == "fully_connected"
+
+
+def test_level_spans_and_hierarchy_spans_agree():
+    fab = FredFabric(CONFIGS["FRED-C"])
+    cl = WaferCluster(fab, levels=(HierarchyLevel("rack", 2),
+                                   HierarchyLevel("pod", 4)))
+    for w in range(1, 9):
+        assert cl.spans_for(w) == hierarchy_spans(w, (2, 4)), w
+    # 4 consecutive wafers under racks of 2: 2 per rack, 2 racks
+    assert cl.spans_for(4) == [2, 2]
+    # 2 wafers stay inside one rack
+    assert cl.spans_for(2) == [2, 1]
+    # non-consecutive wafer sets: widest rack counts
+    assert cl.level_spans([0, 3]) == [1, 2]       # one wafer in each rack
+    assert cl.level_spans([0, 1, 2]) == [2, 2]
+
+
+def test_cluster_placement_dp_spans_deepest_levels():
+    """DP replicas fill the innermost level first, then spill to the
+    next — a 4-wafer DP split on a (2, 2) rack×pod stack spans both
+    racks of the pod."""
+    st = Strategy(2, 8, 1, wafers=4)
+    groups = placement_groups(st, cluster_placement(st, 4, 20))
+    cl = WaferCluster(FredFabric(CONFIGS["FRED-C"]),
+                      levels=(HierarchyLevel("rack", 2),
+                              HierarchyLevel("pod", 2)))
+    for g in groups["dp"]:
+        wafers = {cl.wafer_of(n) for n in g}
+        assert wafers == {0, 1, 2, 3}
+        assert cl.level_spans(wafers) == [2, 2]
+    for g in groups["mp"] + groups["pp"]:
+        assert len({cl.wafer_of(n) for n in g}) == 1
+
+
+# --------------------------------------------------------------------------
+# (b) topology models
+# --------------------------------------------------------------------------
+
+def test_fully_connected_at_most_ring_fixed():
+    for n in (2, 3, 4, 8, 16):
+        ring = level_collective_time("ring", "all_reduce", n, 1e9,
+                                     12.8e12, 5e-7)
+        fc = level_collective_time("fully_connected", "all_reduce", n, 1e9,
+                                   12.8e12, 5e-7)
+        assert fc <= ring, n
+        if n == 2:          # identical math at 2 units
+            assert fc == ring
+        else:               # fewer latency steps, same bandwidth term
+            assert fc < ring
+
+
+def test_switch_halves_inter_traffic_vs_ring():
+    """The paper's ≈2× claim: in-switch reduction injects D per unit
+    where the endpoint ring injects 2(n−1)/n·D."""
+    D = 1e9
+    for n in (2, 3, 4, 8, 64):
+        ring_tr = inter_traffic_bytes("ring", n, D)
+        sw_tr = inter_traffic_bytes("switch", n, D)
+        assert ring_tr == 2.0 * (n - 1) / n * D
+        assert sw_tr == D
+        assert ring_tr / sw_tr == 2.0 * (n - 1) / n
+    assert inter_traffic_bytes("ring", 64, D) / \
+        inter_traffic_bytes("switch", 64, D) == pytest.approx(2.0, rel=0.02)
+    # and the time model follows at zero latency
+    ring_t = level_collective_time("ring", "all_reduce", 64, D, 1e12, 0.0)
+    sw_t = level_collective_time("switch", "all_reduce", 64, D, 1e12, 0.0)
+    assert ring_t / sw_t == pytest.approx(2.0, rel=0.02)
+    with pytest.raises(ValueError):
+        inter_traffic_bytes("torus", 4, D)
+    with pytest.raises(ValueError):
+        level_collective_time("torus", "all_reduce", 4, D, 1e12, 0.0)
+
+
+def test_topology_properties_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as hst
+
+    # latency strictly positive: at n = 2 the three models are bitwise
+    # equal, above it the ring's 2(n−2) extra latency steps dominate any
+    # ULP noise between the (mathematically equal) bandwidth terms
+    @settings(deadline=None)
+    @given(n=hst.integers(2, 64),
+           nbytes=hst.floats(1.0, 1e12),
+           agg_bw=hst.floats(1e9, 1e14),
+           latency=hst.floats(1e-9, 1e-5),
+           conc=hst.integers(1, 64))
+    def check(n, nbytes, agg_bw, latency, conc):
+        args = (n, nbytes, agg_bw, latency, conc)
+        ring = level_collective_time("ring", "all_reduce", *args)
+        fc = level_collective_time("fully_connected", "all_reduce", *args)
+        sw = level_collective_time("switch", "all_reduce", *args)
+        # fully-connected ≤ ring at equal aggregate bandwidth (equal
+        # wire-byte budget, strictly fewer serial latency steps)
+        assert fc <= ring
+        # in-switch reduction ≤ ring (half the traffic, 2 steps)
+        assert sw <= ring
+        # traffic claim holds for every n
+        assert inter_traffic_bytes("switch", n, nbytes) <= \
+            inter_traffic_bytes("ring", n, nbytes)
+        # RS and AG are symmetric in every topology
+        for topo in INTER_TOPOLOGIES:
+            rs = level_collective_time(topo, "reduce_scatter", *args)
+            ag = level_collective_time(topo, "all_gather", *args)
+            assert rs == ag
+            assert 0.0 <= rs <= level_collective_time(topo, "all_reduce",
+                                                      *args)
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# (c) degeneracy back to PR-2, bit for bit
+# --------------------------------------------------------------------------
+
+def test_single_ring_level_bit_identical_to_pr2_cluster():
+    """The generalized level model reproduces the PR-2 inter-wafer ring
+    exactly: same inter_allreduce_time, same collective split."""
+    fab = FredFabric(CONFIGS["FRED-C"])
+    cl = WaferCluster(fab, 4)
+    D = 1e9
+    # closed-form PR-2 ring: steps · (traffic/steps / bw + latency)
+    for w in (2, 3, 4):
+        for conc in (1, 2, 5):
+            traffic = 2.0 * (w - 1) / w * D
+            steps = 2 * (w - 1)
+            bw = cl.levels[0].link.agg_bw / max(conc, 1)
+            want = steps * ((traffic / steps) / bw +
+                            cl.levels[0].link.latency)
+            assert cl.inter_allreduce_time(w, D, conc) == want
+    # explicit 1-level construction matches the legacy constructor
+    cl2 = WaferCluster(fab, levels=(HierarchyLevel("rack", 4, "ring",
+                                                   WaferLink()),))
+    group = [0, 1, 20, 21, 40, 41, 60, 61]
+    assert cl.collective_time_levels("all_reduce", group, D) == \
+        cl2.collective_time_levels("all_reduce", group, D)
+
+
+def test_two_level_degenerates_to_one_level_bitwise():
+    """A (w,) flat spec and a (w, 1)-padded spec are the same model, and
+    a (2, 2) stack crossed by only 2 wafers equals the flat 2-wafer
+    ring — per-level zeros aside, bit-for-bit."""
+    fab = FredFabric(CONFIGS["FRED-C"])
+    D = 7e8
+    flat = WaferCluster(fab, levels=(HierarchyLevel("rack", 2),))
+    padded = WaferCluster(fab, levels=(HierarchyLevel("rack", 2),
+                                       HierarchyLevel("pod", 1)))
+    racked = WaferCluster(fab, levels=(HierarchyLevel("rack", 2),
+                                       HierarchyLevel("pod", 2)))
+    group = [0, 1, 20, 21]                    # spans wafers 0-1 only
+    i_flat, l_flat = flat.collective_time_levels("all_reduce", group, D)
+    i_pad, l_pad = padded.collective_time_levels("all_reduce", group, D)
+    i_rack, l_rack = racked.collective_time_levels("all_reduce", group, D)
+    assert i_flat == i_pad == i_rack
+    assert l_flat == (l_pad[0],) == (l_rack[0],)
+    assert l_pad[1] == l_rack[1] == 0.0
+
+
+def test_simulator_hierarchy_param_ring_bit_identical():
+    """Simulator(hierarchy=(w,), inter_topology="ring") ≡ the PR-2
+    Simulator(n_wafers=w) on every breakdown field."""
+    st = Strategy(2, 8, 2, wafers=4)
+    w = t17b(st)
+    for fabric in ("baseline", "FRED-C", "FRED-D"):
+        a = Simulator(fabric, n_wafers=4).run(w)
+        b = Simulator(fabric, hierarchy=(4,), inter_topology="ring").run(w)
+        assert a.as_dict() == b.as_dict(), fabric
+        assert a.dp_levels == b.dp_levels == (a.dp_inter,)
+        # derived wafer count must match an explicit one
+        with pytest.raises(ValueError):
+            Simulator(fabric, n_wafers=3, hierarchy=(2, 2))
+
+
+def test_two_level_split_reported_and_sums_to_dp_inter():
+    st = Strategy(2, 8, 2, wafers=4)
+    br = Simulator("FRED-C", hierarchy=(2, 2),
+                   inter_topology="switch").run(t17b(st))
+    assert len(br.dp_levels) == 2
+    assert all(x > 0 for x in br.dp_levels)
+    assert br.dp_inter == br.dp_levels[0] + br.dp_levels[1]
+    # rack level pays RS+AG on the shard, pod level one AR — at equal
+    # link budgets the 2-level stack costs at least the flat ring's pod
+    flat = Simulator("FRED-C", hierarchy=(4,),
+                     inter_topology="switch").run(t17b(st))
+    assert flat.dp_levels == (flat.dp_inter,)
+
+
+def test_sweep_default_axes_bit_identical_to_pr2():
+    """inter_topologies=("ring",) + max_levels=1 (the defaults) leave the
+    PR-2 sweep untouched, row for row."""
+    res = transformer_17b_sweep(16, max_wafers=2)
+    assert {r.inter_topology for r in res} == {"", "ring"}
+    assert {r.hierarchy for r in res} == {(1,), (2,)}
+    for r in res:
+        assert (r.inter_topology == "ring") == (r.n_wafers > 1)
+
+
+# --------------------------------------------------------------------------
+# (d) the new sweep axes
+# --------------------------------------------------------------------------
+
+def test_hierarchy_specs_enumeration():
+    assert hierarchy_specs(1) == [(1,)]
+    assert hierarchy_specs(4, 1) == [(4,)]
+    assert hierarchy_specs(4, 2) == [(4,), (2, 2)]
+    assert hierarchy_specs(8, 2) == [(8,), (2, 4), (4, 2)]
+    assert hierarchy_specs(12, 2) == [(12,), (2, 6), (3, 4), (4, 3), (6, 2)]
+    for w in (2, 3, 4, 6, 8, 12):
+        for spec in hierarchy_specs(w, 2):
+            prod = 1
+            for c in spec:
+                prod *= c
+            assert prod == w and all(c >= 2 for c in spec)
+    with pytest.raises(ValueError):
+        hierarchy_specs(4, 0)
+
+
+def test_hierarchy_configs_cross_product():
+    cfgs = hierarchy_configs(16, 4, inter_topologies=("ring", "switch"),
+                             max_levels=2)
+    # single-wafer configs carry the degenerate axis values
+    assert all(h == (1,) and t == "" for w, _s, h, t in cfgs if w == 1)
+    four = {(h, t) for w, _s, h, t in cfgs if w == 4}
+    assert four == {((4,), "ring"), ((4,), "switch"),
+                    ((2, 2), "ring"), ((2, 2), "switch")}
+    with pytest.raises(ValueError):
+        hierarchy_configs(16, 2, inter_topologies=("torus",))
+
+
+def test_sweep_rejects_bad_axis_values():
+    with pytest.raises(ValueError):
+        transformer_17b_sweep(16, max_wafers=2,
+                              inter_topologies=("hypercube",))
+    with pytest.raises(ValueError):
+        transformer_17b_sweep(16, max_wafers=2, max_levels=3)
+
+
+def test_hiersweep_batched_bit_identical_to_scalar():
+    """The CI hiersweep gate at test scale: every (topology × hierarchy)
+    combination batched-vs-scalar bit-identical, incl. the per-level
+    split and Pareto membership."""
+    kw = dict(n_layers=78, max_wafers=4, fabrics=("baseline", "FRED-C"),
+              inter_topologies=INTER_TOPOLOGIES, max_levels=2)
+    a = sweep(transformer_17b, 16, engine="scalar", **kw)
+    b = sweep(transformer_17b, 16, engine="batched", **kw)
+    assert len(a) == len(b)
+    seen = set()
+    for ra, rb in zip(a, b):
+        assert (ra.fabric, ra.shape, ra.strategy, ra.n_wafers,
+                ra.hierarchy, ra.inter_topology) == \
+            (rb.fabric, rb.shape, rb.strategy, rb.n_wafers,
+             rb.hierarchy, rb.inter_topology)
+        assert ra.breakdown.as_dict() == rb.breakdown.as_dict()
+        assert ra.breakdown.dp_levels == rb.breakdown.dp_levels
+        assert ra.pareto == rb.pareto
+        seen.add((ra.hierarchy, ra.inter_topology))
+    assert ((2, 2), "switch") in seen and ((4,), "fully_connected") in seen
+
+
+def test_sweep_topology_ordering_on_matching_points():
+    """Across the sweep, fully-connected and switch never lose to the
+    ring on the same (fabric, shape, strategy, hierarchy) point — equal
+    aggregate link budget, cheaper collective models."""
+    res = sweep(transformer_17b, 16, n_layers=78, max_wafers=4,
+                fabrics=("FRED-C",), inter_topologies=INTER_TOPOLOGIES,
+                max_levels=2)
+    by = {}
+    for r in res:
+        key = (r.shape, r.strategy, r.hierarchy)
+        by.setdefault(key, {})[r.inter_topology] = r.breakdown.dp_inter
+    compared = 0
+    for d in by.values():
+        if "ring" in d and d["ring"] > 0:
+            assert d["fully_connected"] <= d["ring"]
+            assert d["switch"] <= d["ring"]
+            compared += 1
+    assert compared > 0
+
+
+def test_sweep_csv_has_hierarchy_columns():
+    res = sweep(transformer_17b, 16, n_layers=78, max_wafers=4,
+                fabrics=("FRED-C",), inter_topologies=("ring", "switch"),
+                max_levels=2)
+    header = CSV_HEADER.split(",")
+    for col in ("hierarchy", "inter_topology", "dp_level_1_s",
+                "dp_level_2_s"):
+        assert col in header
+    rows = to_csv_rows(res)
+    assert all(len(r.split(",")) == len(header) for r in rows)
+    ih = header.index("hierarchy")
+    it = header.index("inter_topology")
+    hier_vals = {row.split(",")[ih] for row in rows}
+    assert {"1", "2", "3", "4", "2x2"} <= hier_vals
+    assert {row.split(",")[it] for row in rows} == {"", "ring", "switch"}
+    # per-level columns sum to dp_inter_s on every row
+    i1, i2 = header.index("dp_level_1_s"), header.index("dp_level_2_s")
+    ii = header.index("dp_inter_s")
+    for r, row in zip(res, rows):
+        cells = row.split(",")
+        assert float(cells[i1]) + float(cells[i2]) == \
+            pytest.approx(float(cells[ii]))
+
+
+def test_switch_hw_accounting_exposed():
+    cl = WaferCluster(FredFabric(CONFIGS["FRED-C"]),
+                      levels=(HierarchyLevel("rack", 4, "switch"),
+                              HierarchyLevel("pod", 2, "ring")))
+    hw = cl.inter_switch_hw()
+    assert len(hw) == 1 and hw[0]["level"] == "rack"
+    assert hw[0]["ports"] == 4 and hw[0]["area_mm2"] > 0
+    assert WaferCluster(MeshFabric(), 4).inter_switch_hw() == []
+
+
+# --------------------------------------------------------------------------
+# (e) autostrategy + policy
+# --------------------------------------------------------------------------
+
+def test_autostrategy_stamps_inter_topology():
+    from repro.configs.registry import get_config
+    from repro.core.autostrategy import choose_strategy
+    from repro.models.config import SHAPES_BY_NAME
+    from repro.parallel.policy import cell_policy
+    cfg = get_config("llama3.2-1b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    d = choose_strategy(cfg, shape, fabrics=("FRED-C",), max_wafers=2)
+    assert d.inter_topology in ("",) + INTER_TOPOLOGIES
+    assert (d.inter_topology == "") == (d.wafers == 1)
+    assert d.golden()["inter_topology"] == d.inter_topology
+    pcfg, _ = cell_policy(cfg, shape, None, autostrategy=True, decision=d)
+    assert pcfg.auto_strategy == (d.mp, d.dp, d.pp, d.wafers,
+                                  d.inter_topology)
+
+
+def test_autostrategy_topology_tiebreak_prefers_ring():
+    """At 2 wafers all three topologies are time-equal (endpoint AR
+    traffic 2(n−1)/n·D equals the in-network D at n = 2), so the
+    deterministic tiebreak must pick the cheapest interconnect: ring."""
+    from repro.configs.registry import get_config
+    from repro.core.autostrategy import choose_strategy
+    from repro.models.config import SHAPES_BY_NAME
+    d = choose_strategy(get_config("llama3.2-1b"),
+                        SHAPES_BY_NAME["train_4k"], max_wafers=2)
+    if d.wafers == 2:
+        assert d.inter_topology == "ring"
