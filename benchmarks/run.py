@@ -366,6 +366,113 @@ def bench_hiersweep(budget: float = 0.0):
 
 
 # --------------------------------------------------------------------------
+# faultsweep — defect masks: degraded sweeps + yield studies gate
+# --------------------------------------------------------------------------
+
+# the yield-study grid: the paper's Transformer-17B on its 20-NPU wafer
+# plus one registry model under the policy's frozen defaults, each over
+# 32 sampled masks at the 2% dead-NPU rate.  CI diffs the defect-free
+# winner, survival tally, and every degraded fallback decision against
+# tests/goldens/faultsweep.json.
+FAULTSWEEP_N_MASKS = 32
+FAULTSWEEP_DEAD_RATE = 0.02
+
+
+def bench_faultsweep(budget: float = 0.0, goldens: str = ""):
+    """Times the batched degraded sweep, verifies it bit-identical to the
+    scalar oracle under a non-trivial defect mask, runs the yield studies,
+    and writes the per-mask outcome CSV to
+    ``artifacts/faultsweep_yield.csv``.  ``budget`` (seconds, 0 = off)
+    gates the combined wall time; ``goldens`` diffs the degraded
+    auto-strategy decisions, mirroring the autostrategy gate."""
+    from repro.core.defects import sample_mask
+    from repro.core.sweep import sweep, transformer_17b
+    from repro.core.yield_study import (YIELD_CSV_HEADER, model_yield_study,
+                                        yield_csv_rows, yield_study)
+
+    sweep(transformer_17b, 20, n_layers=78)      # warm imports/allocators
+    mask = sample_mask(20, dead_npu_rate=0.1, dead_link_rate=0.05, seed=1,
+                       mesh_shape=(5, 4))
+    assert not mask.is_empty, "faultsweep parity mask drew no defects"
+    kw = dict(n_layers=78, min_utilization=0.5, defects=mask)
+    best = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = sweep(transformer_17b, 20, engine="batched", **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    emit("faultsweep[batched]", best * 1e6,
+         f"points={len(res)};dead_npus={len(mask.dead_npus)};"
+         f"dead_links={len(mask.dead_links)}")
+    # batched-vs-scalar parity under the mask: compacted placements, mesh
+    # detours and uplink factors must reproduce the scalar walk bit-for-bit
+    t0 = time.perf_counter()
+    oracle = sweep(transformer_17b, 20, engine="scalar", **kw)
+    emit("faultsweep[scalar]", (time.perf_counter() - t0) * 1e6,
+         f"points={len(oracle)}")
+    mismatches = sum(
+        1 for ra, rb in zip(oracle, res)
+        if (ra.fabric, ra.shape, ra.strategy) !=
+           (rb.fabric, rb.shape, rb.strategy)
+        or ra.breakdown.as_dict() != rb.breakdown.as_dict()
+        or (ra.pareto, ra.degraded_time_s) != (rb.pareto, rb.degraded_time_s))
+    if len(oracle) != len(res) or mismatches:
+        print(f"faultsweep[PARITY],0.0,{mismatches} mismatching points "
+              f"(scalar {len(oracle)} vs batched {len(res)})",
+              file=sys.stderr)
+        sys.exit("faultsweep: batched engine diverged from the scalar "
+                 "oracle under a defect mask — a bit-parity regression "
+                 "in core/batch_engine.py")
+    emit("faultsweep[parity]", 0.0,
+         f"batched==scalar over {len(res)} masked points")
+    # yield studies: Transformer-17B + one registry model, 32 masks @ 2%
+    t0 = time.perf_counter()
+    ykw = dict(n_masks=FAULTSWEEP_N_MASKS, dead_npu_rate=FAULTSWEEP_DEAD_RATE)
+    studies = {
+        "transformer-17b": yield_study(transformer_17b, 20, n_layers=78,
+                                       **ykw),
+        "llama3.2-1b/train_4k": model_yield_study("llama3.2-1b", **ykw),
+    }
+    t_yield = time.perf_counter() - t0
+    rows = [YIELD_CSV_HEADER]
+    for name, rep in studies.items():
+        w = rep.winner
+        emit(f"faultsweep[{name}]", rep.study_seconds * 1e6,
+             f"winner={w.strategy}@{w.fabric};"
+             f"survival={rep.n_survived}/{rep.n_masks};"
+             f"fallbacks={rep.n_fallback};"
+             f"mean_slowdown={rep.mean_slowdown:.3f}x")
+        rows += yield_csv_rows(rep)
+    path = _artifacts() / "faultsweep_yield.csv"
+    path.write_text("\n".join(rows) + "\n")
+    emit("faultsweep[csv]", 0.0, f"{path} rows={len(rows)-1}")
+    if goldens:
+        want = json.loads(Path(goldens).read_text())
+        got = {name: rep.golden() for name, rep in studies.items()}
+        errors = [f"{k}: {got.get(k)} != golden {want.get(k)}"
+                  for k in sorted(set(want) | set(got))
+                  if got.get(k) != want.get(k)]
+        if errors:
+            for e in errors:
+                print(f"faultsweep[GOLDEN-DIFF],0.0,{e}", file=sys.stderr)
+            print(json.dumps(got, indent=1, sort_keys=True),
+                  file=sys.stderr)
+            sys.exit("faultsweep: degraded auto-strategy decisions "
+                     f"diverge from {goldens} — if the cost-model change "
+                     "is intended, regenerate the goldens from the JSON "
+                     "printed above")
+        emit("faultsweep[goldens]", 0.0, f"match {goldens}")
+    t_total = best + t_yield
+    if budget and t_total > budget:
+        print(f"faultsweep[BUDGET],0.0,{t_total:.3f}s > {budget}s",
+              file=sys.stderr)
+        sys.exit("faultsweep: masked sweep + yield studies blew the CI "
+                 "wall-time budget — a perf regression in the defect "
+                 "paths of core/batch_engine.py, core/sweep.py or "
+                 "core/yield_study.py")
+
+
+# --------------------------------------------------------------------------
 # autostrategy — sweep-driven (mp, dp, pp, wafers) decisions per model
 # --------------------------------------------------------------------------
 
@@ -526,6 +633,7 @@ BENCHES = {
     "sweep": bench_sweep,
     "sweepperf": bench_sweepperf,
     "hiersweep": bench_hiersweep,
+    "faultsweep": bench_faultsweep,
     "autostrategy": bench_autostrategy,
     "table3": bench_table3,
     "routing": bench_routing,
@@ -552,6 +660,14 @@ def main() -> None:
     ap.add_argument("--sweepperf-budget-512", type=float, default=0.0,
                     help="sweepperf only: fail if the 512-NPU batched "
                          "sweep exceeds this many seconds (CI gate)")
+    ap.add_argument("--faultsweep-budget", type=float, default=0.0,
+                    help="faultsweep only: fail if the masked batched "
+                         "sweep plus the 32-mask yield studies exceed "
+                         "this many seconds (CI gate; parity vs the "
+                         "scalar oracle under the mask is always "
+                         "checked; --goldens also diffs the degraded "
+                         "decisions against tests/goldens/"
+                         "faultsweep.json)")
     ap.add_argument("--hiersweep-budget", type=float, default=0.0,
                     help="hiersweep only: fail if the batched 64-NPU × "
                          "4-wafer × {ring,fully_connected,switch} × "
@@ -574,6 +690,9 @@ def main() -> None:
                             budget_512=args.sweepperf_budget_512)
         elif n == "hiersweep":
             bench_hiersweep(budget=args.hiersweep_budget)
+        elif n == "faultsweep":
+            bench_faultsweep(budget=args.faultsweep_budget,
+                             goldens=args.goldens)
         else:
             BENCHES[n]()
 

@@ -1,0 +1,63 @@
+"""Yield-study demo (core/yield_study.py).
+
+Wafer-scale parts ship with dead NPUs — does the strategy auto-chosen
+for the pristine wafer survive the wafer you actually get?  For each
+requested registry architecture: run the defect-free sweep, pick the
+winner with the auto-strategy tiebreak, draw N defect masks at the
+target dead-NPU rate, and report per mask whether the winner survives
+(with its degraded slowdown) or which fallback strategy the degraded
+re-sweep picks instead.
+
+    PYTHONPATH=src python examples/yield_study.py [--archs a,b,...]
+        [--shape train_4k] [--npus 20] [--masks 32] [--dead-rate 0.02]
+        [--dead-link-rate 0.0] [--seed0 0] [--csv]
+"""
+
+import argparse
+
+
+def main():
+    from repro.core.yield_study import (YIELD_CSV_HEADER, model_yield_study,
+                                        yield_csv_rows)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", type=str, default="llama3.2-1b,qwen3-32b")
+    ap.add_argument("--shape", type=str, default="train_4k")
+    ap.add_argument("--npus", type=int, default=20, help="NPUs per wafer")
+    ap.add_argument("--masks", type=int, default=32,
+                    help="independent defect draws per arch")
+    ap.add_argument("--dead-rate", type=float, default=0.02,
+                    help="target dead-NPU rate per draw")
+    ap.add_argument("--dead-link-rate", type=float, default=0.0,
+                    help="dead mesh-link rate (baseline winners only)")
+    ap.add_argument("--seed0", type=int, default=0)
+    ap.add_argument("--csv", action="store_true",
+                    help="emit the per-mask CSV instead of the summary")
+    args = ap.parse_args()
+
+    reports = [model_yield_study(
+        arch, args.shape, n_npus=args.npus, n_masks=args.masks,
+        dead_npu_rate=args.dead_rate, dead_link_rate=args.dead_link_rate,
+        seed0=args.seed0) for arch in args.archs.split(",")]
+
+    if args.csv:
+        print(YIELD_CSV_HEADER)
+        for rep in reports:
+            for row in yield_csv_rows(rep):
+                print(row)
+        return
+
+    for rep in reports:
+        print(rep.summary())
+        for o in rep.outcomes:
+            if not o.survived and o.fallback is not None:
+                f = o.fallback
+                print(f"  seed {o.seed}: {o.reason.split(':')[0]} -> "
+                      f"fallback {f.fabric} mp={f.strategy.mp} "
+                      f"dp={f.strategy.dp} pp={f.strategy.pp} "
+                      f"({f.total / rep.winner.total:.3f}x healthy time)")
+        print(f"  ({rep.study_seconds:.2f}s for {rep.n_masks} masks)\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,9 +80,12 @@ from .workloads import (ACT_REMAT_MULT, BYTES, MemoryModel, Workload,
 
 # module-level structural memos — keyed by the *topology* identity only
 # (mesh rows×cols / FRED group_size), so FRED-C and FRED-D of one shape,
-# and every wafer count of a cluster, share entries
-_RING_STRUCTS: Dict[Tuple[int, int, int, int], Tuple[int, float]] = {}
-_SPAN_STRUCTS: Dict[Tuple[int, int, int], Tuple[int, int]] = {}
+# and every wafer count of a cluster, share entries.  Under a DefectMask
+# the key additionally carries the (hashable, frozen) mask, since the
+# compacted groups' structure depends on where the holes are.
+_RING_STRUCTS: Dict[tuple, Tuple[int, float]] = {}
+_SPAN_STRUCTS: Dict[tuple, Tuple[int, int]] = {}
+_MASKED_SPAN_STRUCTS: Dict[tuple, Tuple[int, int, float]] = {}
 
 
 def _f(a) -> np.ndarray:
@@ -294,11 +297,42 @@ class BatchEngine:
                                                      # sizes in fused runs
 
     # ---- structural tables (one batched computation per missing pattern) ---
-    def _ring_structs(self, counts: np.ndarray, strides: np.ndarray
+    def _ring_structs(self, counts: np.ndarray, strides: np.ndarray,
+                      needed: Optional[np.ndarray] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         mesh = self.sim.mesh
         rows, cols = mesh.rows, mesh.cols
         uniq, inv = _unique_rows((counts, strides))
+        d = mesh.defects
+        if d is not None:
+            # masked structures come from the scalar defect-aware walk on
+            # the compacted group (detours and congestion depend on where
+            # the holes are, not just on the (count, stride) pattern).
+            # ``needed`` marks the lanes the scalar engine actually
+            # evaluates: a hole-disconnected ring must raise exactly when
+            # the scalar path would route it, and stay silent (neutral
+            # structure, result masked out downstream) when it would not.
+            healthy = d.healthy()
+            m = len(uniq)
+            if needed is None:
+                pat_needed = np.ones(m, dtype=bool)
+            else:
+                pat_needed = np.bincount(inv[np.asarray(needed, bool)],
+                                         minlength=m) > 0
+            cong = np.empty(m, dtype=np.int64)
+            hops = np.empty(m, dtype=np.float64)
+            for j, (c, s) in enumerate(uniq):
+                if c <= 1 or not pat_needed[j]:
+                    cong[j], hops[j] = 1, 1.0
+                    continue
+                key = (rows, cols, c, s, d)
+                st = _RING_STRUCTS.get(key)
+                if st is None:
+                    group = [healthy[i * s] for i in range(c)]
+                    st = mesh.ring_structure(group)
+                    _RING_STRUCTS[key] = st
+                cong[j], hops[j] = st
+            return cong[inv], hops[inv]
         missing = [(c, s) for c, s in uniq
                    if c > 1 and (rows, cols, c, s) not in _RING_STRUCTS]
         if missing:
@@ -316,15 +350,28 @@ class BatchEngine:
         return cong[inv], hops[inv]
 
     def _span_structs(self, counts: np.ndarray, strides: np.ndarray
-                      ) -> Tuple[np.ndarray, np.ndarray]:
+                      ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """(g, k, uplink-factor) lanes; the factor lane is ``None`` without
+        a defect mask so the zero-defect kernels never see it."""
         gsl = self._gs_lane
+        fred = self.sim.fred
         if gsl is None:
-            gs0 = self.sim.fred.group_size
+            gs0 = fred.group_size
             uniq, inv = _unique_rows((counts, strides))
             triples = [(gs0, c, s) for c, s in uniq]
         else:
             uniq, inv = _unique_rows((gsl, counts, strides))
             triples = [tuple(t) for t in uniq]
+        d = fred.defects
+        if d is not None:
+            m = len(triples)
+            g = np.empty(m, dtype=np.int64)
+            k = np.empty(m, dtype=np.int64)
+            fac = np.empty(m, dtype=np.float64)
+            for j, t in enumerate(triples):
+                g[j], k[j], fac[j] = (self._masked_span(t, d) if t[1] > 1
+                                      else (1, 1, 1.0))
+            return g[inv], k[inv], fac[inv]
         missing = [t for t in triples
                    if t[1] > 1 and t not in _SPAN_STRUCTS]
         if missing:
@@ -341,7 +388,32 @@ class BatchEngine:
         k = np.empty(m, dtype=np.int64)
         for j, t in enumerate(triples):
             g[j], k[j] = _SPAN_STRUCTS[t] if t[1] > 1 else (1, 1)
-        return g[inv], k[inv]
+        return g[inv], k[inv], None
+
+    def _masked_span(self, triple: Tuple[int, int, int], d
+                     ) -> Tuple[int, int, float]:
+        """(g, k, uplink factor) of one (group_size, count, stride) pattern
+        compacted onto the mask's healthy NPUs — the same quantities
+        :meth:`FredFabric.span_structure` / :meth:`FredFabric
+        .uplink_factor` derive for the compacted group, with the lane's
+        group size standing in for the bound fabric's (fused runs)."""
+        key = triple + (d,)
+        st = _MASKED_SPAN_STRUCTS.get(key)
+        if st is None:
+            gs, c, s = triple
+            healthy = d.healthy()
+            span: Dict[int, int] = {}
+            for i in range(c):
+                l1 = healthy[i * s] // gs
+                span[l1] = span.get(l1, 0) + 1
+            f = 1.0
+            if d.dead_uplinks:
+                up = self.sim.fred.uplinks_per_l1()
+                for l1 in span:
+                    f = min(f, max(1, up - d.dead_uplinks_of(l1)) / up)
+            st = (len(span), max(span.values()), f)
+            _MASKED_SPAN_STRUCTS[key] = st
+        return st
 
     # ---- vectorized fabric kernels (op-for-op the scalar formulas) ----------
     def _mesh_coll(self, kind: str, n: np.ndarray, cong: np.ndarray,
@@ -354,7 +426,10 @@ class BatchEngine:
             traffic = 2.0 * (nf - 1) / nf * nbytes
         else:
             traffic = (nf - 1) / nf * nbytes
-        wafer = n == mesh.n
+        # the hierarchical-2D algorithm needs the full defect-free
+        # rectangle — any hole degrades to the generic ring branch
+        wafer = (n == mesh.n if mesh.defects is None
+                 else np.zeros_like(n, dtype=bool))
         steps_w = 2 * ((mesh.cols - 1) + (mesh.rows - 1))
         if kind != "all_reduce":
             steps_w //= 2
@@ -369,10 +444,12 @@ class BatchEngine:
         return np.where((n <= 1) | (nbytes <= 0), 0.0, steps * per_step)
 
     def _fred_coll(self, kind: str, n: np.ndarray, g: np.ndarray,
-                   k: np.ndarray, conc: np.ndarray, nbytes: np.ndarray
-                   ) -> np.ndarray:
+                   k: np.ndarray, conc: np.ndarray, nbytes: np.ndarray,
+                   l2f: Optional[np.ndarray] = None) -> np.ndarray:
         """:meth:`FredFabric.collective_time` (incl. ``effective_npu_bw``)
-        over arrays."""
+        over arrays.  ``l2f`` is the per-lane uplink surviving-fraction
+        under a defect mask (None without one — the raw-constant spine
+        bandwidth path is kept byte-for-byte)."""
         cfg = self.sim.fred.config
         nf = _f(n)
         if cfg.in_network:
@@ -390,10 +467,15 @@ class BatchEngine:
             steps = np.maximum(steps, 2)
             if kind != "all_reduce":
                 steps = np.maximum(steps // 2, 1)
-        share = cfg.l1_l2_bw / np.maximum(k * conc, 1)
+        if l2f is None:
+            l2 = cfg.l1_l2_bw
+        else:                  # severed uplinks shrink the spine BW —
+            # same op order as the scalar branch (multiply, then divide)
+            l2 = np.where(l2f != 1.0, cfg.l1_l2_bw * l2f, cfg.l1_l2_bw)
+        share = l2 / np.maximum(k * conc, 1)
         if cfg.in_network:
             bw_multi = np.minimum(cfg.npu_l1_bw,
-                                  cfg.l1_l2_bw / np.maximum(conc, 1))
+                                  l2 / np.maximum(conc, 1))
         else:
             bw_multi = np.where(k > 1,
                                 np.minimum(cfg.npu_l1_bw, share * (1 + k)),
@@ -404,14 +486,15 @@ class BatchEngine:
         return np.where((n <= 1) | (nbytes <= 0), 0.0, steps * per_step)
 
     def _wafer_coll(self, kind: str, counts: np.ndarray, strides: np.ndarray,
-                    conc: np.ndarray, nbytes: np.ndarray) -> np.ndarray:
+                    conc: np.ndarray, nbytes: np.ndarray,
+                    needed: Optional[np.ndarray] = None) -> np.ndarray:
         """One intra-wafer collective over the (count, stride) pattern —
         mesh rings ignore concurrency exactly like the scalar path."""
         if self.sim.mesh is not None:
-            cong, hops = self._ring_structs(counts, strides)
+            cong, hops = self._ring_structs(counts, strides, needed=needed)
             return self._mesh_coll(kind, counts, cong, hops, nbytes)
-        g, k = self._span_structs(counts, strides)
-        return self._fred_coll(kind, counts, g, k, conc, nbytes)
+        g, k, fac = self._span_structs(counts, strides)
+        return self._fred_coll(kind, counts, g, k, conc, nbytes, l2f=fac)
 
     def _level_coll(self, kind: str, topo: np.ndarray, n: np.ndarray,
                     conc: np.ndarray, nbytes: np.ndarray, agg_bw: float,
@@ -468,12 +551,15 @@ class BatchEngine:
         sim = self.sim
         npw = (sim.cluster.npus_per_wafer if sim.cluster is not None
                else sim.n_npus)
-        bad = (b.mp * b.pp * (b.dp // np.maximum(b.wafers, 1)) > npw) | \
+        per_wafer_arr = b.mp * b.pp * (b.dp // np.maximum(b.wafers, 1))
+        bad = (per_wafer_arr > npw) | \
             (b.pp > b.n_layers) | (b.dp % np.maximum(b.wafers, 1) != 0)
         if sim.cluster is None:
             bad |= b.wafers > 1
         else:
             bad |= b.wafers > sim.n_wafers
+        if sim.defects is not None:
+            bad |= per_wafer_arr > sim.defects.n_healthy
         if not bad.any():
             return
         for w in b.workloads:            # re-derive the precise message
@@ -494,6 +580,10 @@ class BatchEngine:
             if per_wafer > npw:
                 raise ValueError(f"{st} needs {per_wafer} NPUs per wafer, "
                                  f"wafer has {npw}")
+            if sim.defects is not None and per_wafer > sim.defects.n_healthy:
+                raise ValueError(
+                    f"{st} needs {per_wafer} healthy NPUs per wafer, "
+                    f"defect mask leaves {sim.defects.n_healthy}")
             if st.pp > w.n_layers:
                 raise ValueError(
                     f"{st} has pp={st.pp} stages but {w.name} only "
@@ -551,7 +641,7 @@ class BatchEngine:
         mp_mask = (mp > 1) & (b.mp_ar > 0)
         mp_conc = np.maximum(1, (dp * pp) // wafers)
         per_layer = self._wafer_coll("all_reduce", mp, np.ones_like(mp),
-                                     mp_conc, act_bytes)
+                                     mp_conc, act_bytes, needed=mp_mask)
         mp_time = np.where(mp_mask,
                            per_layer * b.mp_ar * 2 * layers * bubble, 0.0)
 
@@ -579,17 +669,18 @@ class BatchEngine:
             # branch on all_reduce vs not), mirroring the scalar engine
             # computing both to the same value
             if sim.mesh is not None:
-                cong, hops = self._ring_structs(counts, stride)
+                cong, hops = self._ring_structs(counts, stride,
+                                                needed=dp_mask)
                 t_ar = self._mesh_coll("all_reduce", counts, cong, hops,
                                        grad)
                 t_rs = self._mesh_coll("reduce_scatter", counts, cong,
                                        hops, grad)
             else:
-                g, k = self._span_structs(counts, stride)
+                g, k, fac = self._span_structs(counts, stride)
                 t_ar = self._fred_coll("all_reduce", counts, g, k,
-                                       n_dp_groups, grad)
+                                       n_dp_groups, grad, l2f=fac)
                 t_rs = self._fred_coll("reduce_scatter", counts, g, k,
-                                       n_dp_groups, grad)
+                                       n_dp_groups, grad, l2f=fac)
             intra_multi = np.where(counts > 1, t_rs + t_rs, 0.0)
             ti = np.where(multi, intra_multi, t_ar)
             # per-level inter terms — level 1 runs RS+AG when a spanned
@@ -613,7 +704,7 @@ class BatchEngine:
                                             s2, mp, grad, agg2, lat2), 0.0)
         else:
             ti = self._wafer_coll("all_reduce", dp, stride, n_dp_groups,
-                                  grad)
+                                  grad, needed=dp_mask)
             te1 = np.zeros_like(ti)
             te2 = np.zeros_like(ti)
         dp_intra, lvl1, lvl2 = _iterated_layer_sum(ti, te1, te2, layers,

@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from .defects import DefectMask, normalize
 from .flows import endpoint_traffic_bytes, innetwork_traffic_bytes
 
 
@@ -54,15 +55,27 @@ class FredFabric:
     n_groups: int = 5                 # L1 switches
     group_size: int = 4               # NPUs per L1 switch
     n_io: int = 18                    # I/O controllers, spread across L1s
+    defects: Optional[DefectMask] = None
 
     def __post_init__(self):
         if self.n_groups < 1 or self.group_size < 1:
             raise ValueError(f"fabric needs positive shape, got "
                              f"{self.n_groups} groups of {self.group_size}")
+        self.defects = normalize(self.defects)
 
     @property
     def n_npus(self) -> int:
         return self.n_groups * self.group_size
+
+    @property
+    def n_healthy(self) -> int:
+        return (self.n_npus if self.defects is None
+                else self.defects.n_healthy)
+
+    def healthy_npus(self) -> List[int]:
+        if self.defects is None:
+            return list(range(self.n_npus))
+        return list(self.defects.healthy())
 
     @property
     def npus_per_l1(self) -> int:
@@ -133,11 +146,15 @@ class FredFabric:
         if len(span) <= 1:
             return cfg.npu_l1_bw
         k = max(span.values())                    # NPUs of this group per L1
+        l2_bw = cfg.l1_l2_bw
+        f = self.uplink_factor(group)
+        if f != 1.0:                   # severed uplinks shrink the spine BW;
+            l2_bw = cfg.l1_l2_bw * f   # defect-free path stays byte-for-byte
         # L1→L2 BW shared by concurrent flows crossing the spine
-        share = cfg.l1_l2_bw / max(k * concurrent_groups, 1)
+        share = l2_bw / max(k * concurrent_groups, 1)
         if cfg.in_network:
             return min(cfg.npu_l1_bw,
-                       cfg.l1_l2_bw / max(concurrent_groups, 1))
+                       l2_bw / max(concurrent_groups, 1))
         # hierarchical endpoint: the local phase at npu_l1_bw amplifies the
         # spine-limited phase by the local fan-in — the paper's Sec. VIII
         # '375 + 4·375 = 1875 GB/s' analysis, i.e. share·(1+k) when several
@@ -186,6 +203,24 @@ class FredFabric:
 
     def io_stream_rate(self, n_io: "int | None" = None) -> float:
         return (self.n_io if n_io is None else n_io) * self.config.io_bw
+
+    def uplink_factor(self, group: Sequence[int]) -> float:
+        """Fraction of L1→L2 bandwidth surviving the defect mask for this
+        group: min over spanned L1s of healthy/total uplinks.  1.0 with no
+        mask (or no severed uplinks); at least one uplink per L1 is assumed
+        alive (a fully severed L1 is an unplaceable dead group).  NPU→L1
+        links are identified with their NPU (core/defects.py), so they
+        never show up here."""
+        d = self.defects
+        if d is None or not d.dead_uplinks:
+            return 1.0
+        up = self.uplinks_per_l1()
+        f = 1.0
+        for l1 in self._group_l1_span(group):
+            if l1 < self.n_groups:
+                healthy = max(1, up - d.dead_uplinks_of(l1))
+                f = min(f, healthy / up)
+        return f
 
     # ---- Table III HW accounting (derived from the shape) ----------------------
     def uplinks_per_l1(self) -> int:

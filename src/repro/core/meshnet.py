@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .defects import DefectMask, normalize
+
 Link = Tuple[Tuple[int, int], Tuple[int, int]]   # ((r,c) -> (r,c))
 
 
@@ -34,11 +36,13 @@ class MeshFabric:
     step_overhead: float = 8e-7       # per ring-step SW/protocol latency
                                       # (ASTRA-SIM-style NPU processing delay)
     n_io: Optional[int] = None        # None → derived border placement
+    defects: Optional[DefectMask] = None
 
     def __post_init__(self):
         if self.rows < 1 or self.cols < 1:
             raise ValueError(f"mesh needs positive dims, got "
                              f"{self.rows}x{self.cols}")
+        self.defects = normalize(self.defects)
 
     @property
     def n(self) -> int:
@@ -83,6 +87,15 @@ class MeshFabric:
             total += 2 if corner else 1
         return total
 
+    @property
+    def n_healthy(self) -> int:
+        return self.n if self.defects is None else self.defects.n_healthy
+
+    def healthy_npus(self) -> List[int]:
+        if self.defects is None:
+            return list(range(self.n))
+        return list(self.defects.healthy())
+
     # ---- routing -------------------------------------------------------------
     def xy_links(self, src: int, dst: int) -> List[Link]:
         (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
@@ -99,6 +112,75 @@ class MeshFabric:
             r = nr
         return links
 
+    def _yx_links(self, src: int, dst: int) -> List[Link]:
+        """Y-then-X dimension order — the first detour tried under defects."""
+        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
+        links: List[Link] = []
+        r = r0
+        while r != r1:
+            nr = r + (1 if r1 > r else -1)
+            links.append(((r, c0), (nr, c0)))
+            r = nr
+        c = c0
+        while c != c1:
+            nc = c + (1 if c1 > c else -1)
+            links.append(((r1, c), (r1, nc)))
+            c = nc
+        return links
+
+    def _link_healthy(self, ln: Link) -> bool:
+        if self.defects is None:
+            return True
+        (r0, c0), (r1, c1) = ln
+        return not self.defects.link_dead(r0 * self.cols + c0,
+                                          r1 * self.cols + c1)
+
+    def route_links(self, src: int, dst: int) -> List[Link]:
+        """Links crossed src→dst, avoiding dead links/NPUs when a
+        :class:`DefectMask` is set: X-Y first (the healthy-path fast case),
+        then the Y-X detour, then a deterministic BFS over healthy links.
+        A dead NPU's router is dead too, so no path may cross it.
+        Raises ``ValueError`` when an endpoint is dead or the healthy
+        sub-mesh is disconnected."""
+        if self.defects is None:
+            return self.xy_links(src, dst)
+        for nid in (src, dst):
+            if self.defects.npu_dead(nid):
+                raise ValueError(f"route endpoint NPU {nid} is dead")
+        for path in (self.xy_links(src, dst), self._yx_links(src, dst)):
+            if all(self._link_healthy(ln) for ln in path):
+                return path
+        # BFS over the healthy sub-mesh (deterministic neighbour order)
+        parent: Dict[int, int] = {src: src}
+        frontier = [src]
+        while frontier and dst not in parent:
+            nxt: List[int] = []
+            for nid in frontier:
+                r, c = self.coord(nid)
+                for nb in ((nid + 1) if c + 1 < self.cols else -1,
+                           (nid - 1) if c > 0 else -1,
+                           (nid + self.cols) if r + 1 < self.rows else -1,
+                           (nid - self.cols) if r > 0 else -1):
+                    if nb < 0 or nb in parent:
+                        continue
+                    if self.defects.link_dead(nid, nb):
+                        continue
+                    parent[nb] = nid
+                    nxt.append(nb)
+            frontier = nxt
+        if dst not in parent:
+            raise ValueError(
+                f"no healthy mesh path {src}->{dst} under defect mask")
+        ids = [dst]
+        while ids[-1] != src:
+            ids.append(parent[ids[-1]])
+        ids.reverse()
+        return [(self.coord(a), self.coord(b)) for a, b in zip(ids, ids[1:])]
+
+    def _path_links(self, src: int, dst: int) -> List[Link]:
+        return (self.xy_links(src, dst) if self.defects is None
+                else self.route_links(src, dst))
+
     def ring_max_congestion(self, rings: Sequence[Sequence[int]]) -> int:
         """Max number of ring edges (over all rings) crossing any one link."""
         load: Dict[Link, int] = {}
@@ -108,7 +190,7 @@ class MeshFabric:
                 continue
             for i in range(n):
                 a, b = ring[i], ring[(i + 1) % n]
-                for ln in self.xy_links(a, b):
+                for ln in self._path_links(a, b):
                     load[ln] = load.get(ln, 0) + 1
         return max(load.values()) if load else 0
 
@@ -129,7 +211,7 @@ class MeshFabric:
         n = len(ring)
         if n < 2:
             return 1.0
-        tot = sum(len(self.xy_links(ring[i], ring[(i + 1) % n]))
+        tot = sum(len(self._path_links(ring[i], ring[(i + 1) % n]))
                   for i in range(n))
         return max(tot / n, 1.0)
 
@@ -152,6 +234,18 @@ class MeshFabric:
         n = len(ring)
         if n < 2:
             return 1, 1.0
+        if self.defects is not None:
+            # defect-aware (detoured) paths: generic directed-link walk —
+            # the same quantities ring_max_congestion + _ring_hops derive
+            load2: Dict[Link, int] = {}
+            tot2 = 0
+            for i in range(n):
+                path = self.route_links(ring[i], ring[(i + 1) % n])
+                tot2 += len(path)
+                for ln in path:
+                    load2[ln] = load2.get(ln, 0) + 1
+            cong2 = max(load2.values()) if load2 else 0
+            return max(cong2, 1), max(tot2 / n, 1.0)
         C = self.cols
         base_v = 2 * self.rows * C           # separate id space for Y links
         load: Dict[int, int] = {}
@@ -199,8 +293,10 @@ class MeshFabric:
         if n <= 1 or nbytes <= 0:
             return 0.0
         traffic = endpoint_traffic_bytes(kind, n, nbytes)
-        if n == self.n:
+        if n == self.n and self.defects is None:
             # hierarchical 2D: row rings then column rings, 2 chunks
+            # (requires the full defect-free rectangle — any hole or dead
+            # link degrades to the generic ring branch below)
             bw = self.wafer_wide_allreduce_bw()
             steps = 2 * ((self.cols - 1) + (self.rows - 1))
             if kind != "all_reduce":

@@ -13,7 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from .defects import DefectMask
 
 Worker = Tuple[int, int, int]          # (mp, dp, pp) coordinates
 
@@ -146,9 +148,39 @@ def placement_groups(strategy: Strategy, placement: Dict[Worker, int]
             "pp": as_ids(strategy.pp_groups())}
 
 
+def defect_placement(strategy: Strategy, mask: DefectMask,
+                     npus_per_wafer: "int | None" = None) -> Dict[Worker, int]:
+    """worker → physical NPU id, compacted around the mask's holes.
+
+    Logical slot ``i`` of the canonical :func:`fred_placement` order lands
+    on the ``i``-th *healthy* NPU (SpiNNaker2-style compaction): MP groups
+    stay on consecutive healthy NPUs, the strategy's relative order is
+    unchanged, and an all-healthy mask reproduces ``fred_placement``
+    exactly.  Raises when the strategy needs more workers than the wafer
+    has healthy NPUs."""
+    npw = npus_per_wafer if npus_per_wafer is not None else mask.n_npus
+    base = fred_placement(strategy, npw)
+    healthy = mask.healthy()
+    if strategy.n_workers > len(healthy):
+        raise ValueError(
+            f"{strategy} needs {strategy.n_workers} healthy NPUs, "
+            f"defect mask leaves {len(healthy)}")
+    return {w: healthy[nid] for w, nid in base.items()}
+
+
+def _masked_wafer_capacity(strategy: Strategy, n_wafers: int,
+                           mask: DefectMask) -> None:
+    per_wafer = strategy.mp * strategy.pp * strategy.dp_per_wafer
+    if per_wafer > mask.n_healthy:
+        raise ValueError(
+            f"{strategy} needs {per_wafer} healthy NPUs per wafer, "
+            f"defect mask leaves {mask.n_healthy}")
+
+
 @functools.lru_cache(maxsize=4096)
 def cached_placement_groups(strategy: Strategy, n_wafers: int,
-                            npus_per_wafer: int
+                            npus_per_wafer: int,
+                            defects: Optional[DefectMask] = None
                             ) -> Dict[str, List[List[int]]]:
     """Memoized :func:`placement_groups` for the canonical placements.
 
@@ -160,6 +192,11 @@ def cached_placement_groups(strategy: Strategy, n_wafers: int,
     many (fabric, shape) pairs; this turns the dominant per-``run`` cost
     (rebuilding O(n_workers) group lists) into a dict hit.
 
+    With a :class:`DefectMask` the canonical local ids are compacted onto
+    each wafer's healthy NPUs (the same mask is applied to every wafer —
+    the cost model's worst-wafer simplification), keeping MP groups on
+    consecutive *healthy* NPUs.
+
     Callers must treat the returned lists as immutable (they are shared).
     Capacity violations raise ``ValueError`` exactly like the uncached
     placements (exceptions are not cached by ``lru_cache``).
@@ -168,7 +205,19 @@ def cached_placement_groups(strategy: Strategy, n_wafers: int,
         ids = cluster_placement(strategy, n_wafers, npus_per_wafer)
     else:
         ids = fred_placement(strategy, npus_per_wafer)
-    return placement_groups(strategy, ids)
+    groups = placement_groups(strategy, ids)
+    if defects is None:
+        return groups
+    _masked_wafer_capacity(strategy, n_wafers, defects)
+    healthy = defects.healthy()
+    npw = npus_per_wafer
+
+    def remap(gid: int) -> int:
+        wafer, local = divmod(gid, npw)
+        return wafer * npw + healthy[local]
+
+    return {k: [[remap(i) for i in g] for g in gs]
+            for k, gs in groups.items()}
 
 
 def strided_group(count: int, stride: int) -> List[int]:

@@ -174,7 +174,8 @@ def routable(switch: FredSwitch, flows: Sequence[Flow]) -> bool:
 
 
 def strategy_routable(strategy, shape, m: int = 3,
-                      uplinks: Optional[int] = None) -> bool:
+                      uplinks: Optional[int] = None,
+                      defects=None) -> bool:
     """True iff every parallelism phase of ``strategy`` routes conflict-free
     under the MP-consecutive placement.
 
@@ -188,20 +189,34 @@ def strategy_routable(strategy, shape, m: int = 3,
     almost-fat-tree upper bound) on a FRED_m(group_size+uplinks) switch,
     and the L2 spine routes the group-spanning flows over every L1's
     uplink ports.  Flows of ONE parallelism type run at a time (they occur
-    in different phases of the training step — Sec. III Metric 4)."""
-    from .flows import all_reduce
-    from .placement import fred_placement, placement_groups
+    in different phases of the training step — Sec. III Metric 4).
 
+    ``defects`` (a :class:`~repro.core.defects.DefectMask`) re-runs the
+    whole check under the mask's compacted placement: flows take the
+    *healthy* NPU ports (never a dead one), and spanning flows only get a
+    surviving uplink's port per L1 — a strategy that needs more workers
+    than healthy NPUs (or more spanning flows than surviving uplinks can
+    take conflict-free) is simply not routable."""
+    from .defects import normalize
+    from .flows import all_reduce
+    from .placement import (defect_placement, fred_placement,
+                            placement_groups)
+
+    defects = normalize(defects)
     if isinstance(shape, tuple):
         return _shape_routable(strategy, shape[0], shape[1], m,
-                               uplinks=uplinks)
+                               uplinks=uplinks, defects=defects)
     n_ports = shape
     if strategy.n_workers > n_ports:
+        return False
+    if defects is not None and strategy.n_workers > defects.n_healthy:
         return False
     if strategy.n_workers < 2:
         return True
     sw = FredSwitch.build(max(n_ports, 2), m)
-    groups = placement_groups(strategy, fred_placement(strategy, n_ports))
+    pl = (fred_placement(strategy, n_ports) if defects is None
+          else defect_placement(strategy, defects, n_ports))
+    groups = placement_groups(strategy, pl)
     for kind in ("mp", "dp", "pp"):
         flows = [all_reduce(g)[0][0] for g in groups[kind] if len(g) > 1]
         if flows and not routable(sw, flows):
@@ -210,22 +225,33 @@ def strategy_routable(strategy, shape, m: int = 3,
 
 
 def _shape_routable(strategy, n_groups: int, group_size: int,
-                    m: int = 3, uplinks: Optional[int] = None) -> bool:
+                    m: int = 3, uplinks: Optional[int] = None,
+                    defects=None) -> bool:
     """Hierarchical routability on an (n_groups, group_size) FRED fabric:
     per-L1 routing of local flow segments, then L2-spine routing of the
     spanning flows.  Each L1 exposes ``uplinks`` physical uplink ports;
     spanning flows are assigned uplinks round-robin per L1 (the compile-
-    time router is free to pick, round-robin is its canonical choice)."""
-    from .placement import fred_placement, placement_groups
+    time router is free to pick, round-robin is its canonical choice).
+    A defect mask compacts the placement onto healthy NPUs and removes
+    each L1's dead uplink ports from the round-robin pool."""
+    from .placement import defect_placement, fred_placement, placement_groups
 
     n = n_groups * group_size
     if strategy.n_workers > n:
+        return False
+    if defects is not None and strategy.n_workers > defects.n_healthy:
         return False
     if strategy.n_workers < 2:
         return True
     up = uplinks if uplinks is not None else group_size
     up = max(1, up)
-    groups = placement_groups(strategy, fred_placement(strategy, n))
+    live_up = [up] * n_groups
+    if defects is not None:
+        live_up = [max(1, up - defects.dead_uplinks_of(l1))
+                   for l1 in range(n_groups)]
+    pl = (fred_placement(strategy, n) if defects is None
+          else defect_placement(strategy, defects, n))
+    groups = placement_groups(strategy, pl)
     l1_switch = FredSwitch.build(max(group_size + up, 2), m)
     spine = FredSwitch.build(max(n_groups * up, 2), m)
     for kind in ("mp", "dp", "pp"):
@@ -241,7 +267,7 @@ def _shape_routable(strategy, n_groups: int, group_size: int,
             if len(l1s) < 2:
                 continue
             for l1 in l1s:
-                upidx[(l1, ci)] = counters[l1] % up
+                upidx[(l1, ci)] = counters[l1] % live_up[l1]
                 counters[l1] += 1
         for l1 in range(n_groups):
             local_flows = []

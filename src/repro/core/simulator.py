@@ -36,11 +36,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
+from .defects import DefectMask
 from .fabric import FredFabric
 from .meshnet import MeshFabric
 from .placement import Strategy, cached_placement_groups
+from .specs import ClusterSpec, FabricSpec
 from .workloads import Workload, BYTES
 
 NPU_PEAK_FLOPS = 1000e12      # FP16 (Table II)
@@ -112,31 +115,77 @@ class Breakdown:
                 "dp_inter": self.dp_inter, "total": self.total}
 
 
+_LEGACY_FABRIC_KW = ("mesh_shape", "fred_shape", "n_io")
+_LEGACY_CLUSTER_KW = ("n_wafers", "inter_wafer_links", "inter_wafer_bw",
+                      "inter_wafer_latency", "inter_topology", "hierarchy")
+
+
 @dataclasses.dataclass
 class Simulator:
     fabric_name: str                       # "baseline" | "FRED-A".."FRED-D"
     compute_efficiency: float = 0.45
     overlap_dp: bool = True
+    # ---- consolidated construction specs (core/specs.py) ----------------
+    spec: Optional[FabricSpec] = None              # wafer shape/io/defects
+    cluster_spec: Optional[ClusterSpec] = None     # inter-wafer scale-out
+    collective_cache: Optional[dict] = None        # shared memo for sweeps
+    # ---- DEPRECATED kwarg shims: each one, when passed, overrides the
+    # matching spec field (with a DeprecationWarning).  After construction
+    # the attributes hold the *resolved* values either way, so existing
+    # readers keep working.
     mesh_shape: Optional[Tuple[int, int]] = None   # (rows, cols); None → 5×4
     fred_shape: Optional[Tuple[int, int]] = None   # (n_groups, group_size)
     n_io: Optional[int] = None                     # None → derived / paper 18
-    collective_cache: Optional[dict] = None        # shared memo for sweeps
-    # ---- inter-wafer levels (core/cluster.py); n_wafers=1 ≡ single wafer
-    n_wafers: int = 1
-    inter_wafer_links: int = 32                    # links per unit per level
-    inter_wafer_bw: float = 400e9                  # B/s per link per dir
-    inter_wafer_latency: float = 5e-7              # per inter-level step
-    inter_topology: str = "ring"                   # ring | fully_connected
+    n_wafers: Optional[int] = None                 # 1 ≡ single wafer
+    inter_wafer_links: Optional[int] = None        # links per unit per level
+    inter_wafer_bw: Optional[float] = None         # B/s per link per dir
+    inter_wafer_latency: Optional[float] = None    # per inter-level step
+    inter_topology: Optional[str] = None           # ring | fully_connected
                                                    # | switch (every level)
     hierarchy: Optional[Tuple[int, ...]] = None    # level counts, innermost
                                                    # first; None → (n_wafers,)
 
+    def _resolve_specs(self):
+        """Merge the deprecated kwargs into FabricSpec/ClusterSpec and
+        write the resolved values back onto the legacy attributes."""
+        legacy = {k: getattr(self, k)
+                  for k in _LEGACY_FABRIC_KW + _LEGACY_CLUSTER_KW
+                  if getattr(self, k) is not None}
+        if legacy:
+            warnings.warn(
+                f"Simulator({', '.join(sorted(legacy))}=...) kwargs are "
+                f"deprecated; pass spec=FabricSpec(...) / "
+                f"cluster_spec=ClusterSpec(...) instead",
+                DeprecationWarning, stacklevel=4)
+        spec = self.spec if self.spec is not None else FabricSpec()
+        fkw = {k: legacy[k] for k in _LEGACY_FABRIC_KW if k in legacy}
+        if fkw:
+            spec = dataclasses.replace(spec, **fkw)
+        cs = (self.cluster_spec if self.cluster_spec is not None
+              else ClusterSpec())
+        ckw = {k: legacy[k] for k in _LEGACY_CLUSTER_KW if k in legacy}
+        if ckw:
+            cs = dataclasses.replace(cs, **ckw)
+        self.spec, self.cluster_spec = spec, cs
+        self.mesh_shape, self.fred_shape = spec.mesh_shape, spec.fred_shape
+        self.n_io = spec.n_io
+        self.defects: Optional[DefectMask] = spec.defects
+        self.n_wafers = cs.n_wafers
+        self.inter_wafer_links = cs.inter_wafer_links
+        self.inter_wafer_bw = cs.inter_wafer_bw
+        self.inter_wafer_latency = cs.inter_wafer_latency
+        self.inter_topology = cs.inter_topology
+        self.hierarchy = cs.hierarchy
+
     def __post_init__(self):
+        self._resolve_specs()
         if self.fabric_name == "baseline":
             kw = {} if self.mesh_shape is None else \
                 dict(rows=self.mesh_shape[0], cols=self.mesh_shape[1])
             if self.n_io is not None:
                 kw["n_io"] = self.n_io
+            if self.defects is not None:
+                kw["defects"] = self.defects
             self.mesh: Optional[MeshFabric] = MeshFabric(**kw)
             self.fred: Optional[FredFabric] = None
         else:
@@ -150,6 +199,8 @@ class Simulator:
                      group_size=self.fred_shape[1])
             if self.n_io is not None:
                 kw["n_io"] = self.n_io
+            if self.defects is not None:
+                kw["defects"] = self.defects
             self.mesh = None
             self.fred = FredFabric(CONFIGS[self.fabric_name], **kw)
         self.cluster = None
@@ -185,6 +236,14 @@ class Simulator:
             return self.cluster.n_npus
         return self.mesh.n if self.mesh is not None else self.fred.n_npus
 
+    @property
+    def n_healthy_npus(self) -> int:
+        """Usable NPUs after the defect mask (mask applies per wafer)."""
+        if self.defects is None:
+            return self.n_npus
+        per_wafer = self.defects.n_healthy
+        return per_wafer * (self.n_wafers if self.cluster is not None else 1)
+
     # ---- fabric dispatch -------------------------------------------------------
     def _groups(self, strategy: Strategy):
         """NPU-id groups for ``strategy`` on this fabric — memoized per
@@ -193,12 +252,14 @@ class Simulator:
         cached groups serve every fabric type (treat them as read-only)."""
         if self.cluster is not None:
             return cached_placement_groups(strategy, self.n_wafers,
-                                           self.cluster.npus_per_wafer)
+                                           self.cluster.npus_per_wafer,
+                                           self.defects)
         if strategy.wafers > 1:
             raise ValueError(
                 f"{strategy} spans {strategy.wafers} wafers but this "
                 f"simulator models a single wafer (n_wafers=1)")
-        return cached_placement_groups(strategy, 1, self.n_npus)
+        return cached_placement_groups(strategy, 1, self.n_npus,
+                                       self.defects)
 
     def _fabric_tag(self):
         """Physical identity of the fabric, so one collective_cache dict
@@ -210,6 +271,8 @@ class Simulator:
             c, f = self.fred.config, self.fred
             tag = (c.name, f.n_groups, f.group_size, c.npu_l1_bw, c.l1_l2_bw,
                    c.in_network, c.switch_latency, c.step_overhead)
+        if self.defects is not None:
+            tag = tag + (self.defects,)
         if self.cluster is not None:
             return self.cluster.tag() + tag
         return tag

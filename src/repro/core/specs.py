@@ -1,0 +1,58 @@
+"""Consolidated fabric / cluster construction specs for the Simulator.
+
+``Simulator`` historically grew one kwarg per axis (mesh_shape, fred_shape,
+n_io, n_wafers, inter_wafer_*, inter_topology, hierarchy — ten in total).
+These two frozen dataclasses are the consolidated front door:
+
+    Simulator("FRED-D", spec=FabricSpec(fred_shape=(8, 8)),
+              cluster_spec=ClusterSpec(n_wafers=4, inter_topology="switch"))
+
+``FabricSpec`` describes one wafer (shape, I/O, and its defect draw);
+``ClusterSpec`` describes how wafers stack into racks/pods.  The legacy
+kwargs survive as thin deprecation shims that build a spec (see
+``Simulator.__post_init__``) and produce bit-identical Breakdowns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .defects import DefectMask, normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """One wafer: fabric shape, I/O controllers, and the defect draw.
+
+    ``mesh_shape`` applies to the baseline 2D mesh, ``fred_shape``
+    (n_groups, group_size) to the FRED fabrics; leave either None for the
+    fabric's paper default.  ``defects`` is interpreted by whichever fabric
+    is built (see core/defects.py for the id-space overlay rules).
+    """
+    mesh_shape: Optional[Tuple[int, int]] = None
+    fred_shape: Optional[Tuple[int, int]] = None
+    n_io: Optional[int] = None
+    defects: Optional[DefectMask] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "defects", normalize(self.defects))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Inter-wafer scale-out: wafer count / stacking and the link model."""
+    n_wafers: int = 1
+    hierarchy: Optional[Tuple[int, ...]] = None
+    inter_topology: str = "ring"
+    inter_wafer_links: int = 32
+    inter_wafer_bw: float = 400e9
+    inter_wafer_latency: float = 5e-7
+
+    def __post_init__(self):
+        if self.hierarchy is not None:
+            object.__setattr__(self, "hierarchy", tuple(self.hierarchy))
+
+
+DEFAULT_FABRIC_SPEC = FabricSpec()
+DEFAULT_CLUSTER_SPEC = ClusterSpec()

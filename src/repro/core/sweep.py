@@ -42,8 +42,10 @@ import operator
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .cluster import INTER_TOPOLOGIES
+from .defects import DefectMask, normalize
 from .placement import Strategy
 from .simulator import Breakdown, LRUCache, Simulator
+from .specs import ClusterSpec, FabricSpec
 from .workloads import (MemoryModel, Workload, is_feasible,
                         memory_bytes_per_npu, transformer)
 
@@ -259,6 +261,12 @@ class SweepResult:
                                        # wafers, (2, 2) = rack×pod)
     inter_topology: str = ""           # ring | fully_connected | switch;
                                        # "" on a single wafer
+    defect_rate: float = 0.0           # dead-NPU fraction of the sweep's
+                                       # DefectMask (0.0 = defect-free)
+    defect_seed: int = -1              # mask sampler seed; -1 = no mask
+                                       # (or a hand-built one)
+    degraded_time_s: float = 0.0       # breakdown.total under the mask;
+                                       # 0.0 on a defect-free sweep
 
     @property
     def total(self) -> float:
@@ -286,22 +294,28 @@ def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
                n_wafers: int = 1,
                hierarchy: Optional[Tuple[int, ...]] = None,
                inter_topology: str = "",
+               defects: Optional[DefectMask] = None,
                **inter_kw) -> Simulator:
     """``n_npus`` is per wafer; ``inter_kw`` forwards the inter-wafer link
     parameters (inter_wafer_links/bw/latency) when n_wafers > 1, and
     ``hierarchy``/``inter_topology`` shape the inter levels (single ring
-    level when unset — the PR-2 model)."""
-    kw = dict(compute_efficiency=compute_efficiency,
-              n_io=scaled_n_io(n_npus), collective_cache=cache)
+    level when unset — the PR-2 model).  Construction goes through the
+    consolidated FabricSpec/ClusterSpec API (core/specs.py)."""
+    spec = FabricSpec(
+        mesh_shape=shape if fabric == "baseline" else None,
+        fred_shape=None if fabric == "baseline" else shape,
+        n_io=scaled_n_io(n_npus), defects=defects)
+    cluster_spec = None
     if n_wafers > 1:
-        kw.update(n_wafers=n_wafers, **inter_kw)
+        ckw = dict(n_wafers=n_wafers, **inter_kw)
         if hierarchy is not None:
-            kw["hierarchy"] = hierarchy
+            ckw["hierarchy"] = hierarchy
         if inter_topology:
-            kw["inter_topology"] = inter_topology
-    if fabric == "baseline":
-        return Simulator(fabric, mesh_shape=shape, **kw)
-    return Simulator(fabric, fred_shape=shape, **kw)
+            ckw["inter_topology"] = inter_topology
+        cluster_spec = ClusterSpec(**ckw)
+    return Simulator(fabric, compute_efficiency=compute_efficiency,
+                     spec=spec, cluster_spec=cluster_spec,
+                     collective_cache=cache)
 
 
 def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
@@ -319,7 +333,8 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           max_levels: int = 1,
           memory: Optional[MemoryModel] = None,
           prune_symmetric: bool = False,
-          engine: str = "batched") -> List[SweepResult]:
+          engine: str = "batched",
+          defects: Optional[DefectMask] = None) -> List[SweepResult]:
     """Run the full (fabric × wafer shape × wafer count × strategy)
     cross-product.
 
@@ -372,9 +387,23 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     oracle.  Both produce bit-identical Breakdowns and Pareto fronts
     (enforced by hypothesis property tests in tests/test_batch_engine.py);
     batched is ≥10× faster on multi-wafer sweeps and is what makes
-    exhaustive 500+-NPU sweeps fit the CI budget (BENCH_sweep.json)."""
+    exhaustive 500+-NPU sweeps fit the CI budget (BENCH_sweep.json).
+
+    ``defects`` (a :class:`~repro.core.defects.DefectMask`, applied to
+    every wafer) evaluates the whole sweep under the mask: placement
+    compacts onto healthy NPUs, mesh rings detour dead links, FRED spine
+    bandwidth shrinks with severed uplinks, and candidates needing more
+    healthy NPUs per wafer than the mask leaves are skipped.  Results
+    carry ``defect_rate``/``defect_seed``/``degraded_time_s``; a None (or
+    empty) mask is bit-identical to the defect-free sweep."""
     if n_npus < 1:
         raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
+    defects = normalize(defects)
+    if defects is not None and defects.n_npus != n_npus:
+        raise ValueError(
+            f"defect mask covers {defects.n_npus} NPUs but the sweep's "
+            f"wafer has {n_npus}")
+    n_healthy = n_npus if defects is None else defects.n_healthy
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
                          f"{ENGINES}")
@@ -391,8 +420,12 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     space: Dict[int, Sequence[Strategy]] = {}
     if strategies is None:
         for wf in range(1, max_wafers + 1):
+            # under a defect mask the wafer only offers its healthy NPUs —
+            # the utilization floor (and the enumeration ceiling) anchor
+            # to the degraded capacity, so a 2%-dead wafer still sweeps
+            # near-full strategies instead of returning nothing
             space[wf] = [st for st in
-                         strategy_space(wf * n_npus, n_layers=n_layers,
+                         strategy_space(wf * n_healthy, n_layers=n_layers,
                                         min_utilization=min_utilization,
                                         n_wafers=wf)
                          if st.wafers == wf]
@@ -422,7 +455,7 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
         for st in cands:
             if st.n_workers > wf * n_npus or \
                     st.dp % st.wafers != 0 or \
-                    st.mp * st.pp * (st.dp // st.wafers) > n_npus:
+                    st.mp * st.pp * (st.dp // st.wafers) > n_healthy:
                 continue
             w = workload_fn(st)
             if st.pp > w.n_layers:        # stages must hold whole layers
@@ -472,6 +505,8 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
         500+-NPU sweep."""
         check_route = check_routing and fabric != "baseline"
         inter_bw = agg_inter_bw if wf > 1 else 0.0
+        defect_rate = 0.0 if defects is None else defects.dead_npu_rate
+        defect_seed = -1 if defects is None else defects.seed
         new = SweepResult.__new__
         for i, (st, w) in enumerate(evals):
             mem_bytes = 0.0
@@ -494,25 +529,37 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                     sub = st if st.wafers == 1 else \
                         Strategy(st.mp, st.dp // st.wafers, st.pp)
                     route_memo[key] = strategy_routable(sub, shape,
-                                                        uplinks=up)
+                                                        uplinks=up,
+                                                        defects=defects)
                 routable = route_memo[key]
+            br = rep_brs[rep_of[i]]
             r = new(SweepResult)
             r.__dict__ = {
                 "fabric": fabric, "shape": shape, "strategy": st,
-                "breakdown": rep_brs[rep_of[i]],
+                "breakdown": br,
                 "minibatch": w.minibatch,
                 "param_bytes_per_npu": w.param_bytes_total /
                 (st.mp * st.pp),
                 "routable": routable, "pareto": False, "n_wafers": wf,
                 "inter_wafer_bw": inter_bw,
                 "memory_bytes_per_npu": mem_bytes, "feasible": feas,
-                "hierarchy": hier, "inter_topology": topo}
+                "hierarchy": hier, "inter_topology": topo,
+                "defect_rate": defect_rate, "defect_seed": defect_seed,
+                "degraded_time_s": (0.0 if defects is None
+                                    else br.total)}
             results.append(r)
 
     for fabric in fabrics:
         shape_fn = mesh_shapes if fabric == "baseline" else fred_shapes
         configs = hierarchy_configs(n_npus, max_wafers, shape_fn,
                                     inter_topologies, max_levels)
+        if defects is not None and fabric == "baseline":
+            # a mesh shape whose healthy sub-mesh the mask disconnects
+            # cannot host collectives at all — drop it (FRED trees stay
+            # connected through the spine for any placeable mask)
+            from .defects import mesh_connected
+            configs = [c for c in configs
+                       if mesh_connected(defects, c[1][0], c[1][1])]
         if engine == "batched":
             import numpy as np
             from .batch_engine import BatchEngine, CandidateBatch, InterLane
@@ -539,7 +586,7 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 # InterLane carries each configuration's topology/spans
                 sim = _simulator(fabric, grp[0][1], n_npus, cache,
                                  compute_efficiency, n_wafers=max_wf,
-                                 **inter_kw)
+                                 defects=defects, **inter_kw)
                 parts, gs_parts, il_parts, metas = [], [], [], []
                 for wf, shape, hier, topo in grp:
                     _e, _ri, _ro, rep_pack, _m, _f2 = _candidates(wf)
@@ -575,7 +622,8 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 sim = _simulator(fabric, shape, n_npus, cache,
                                  compute_efficiency, n_wafers=wf,
                                  hierarchy=hier if wf > 1 else None,
-                                 inter_topology=topo, **inter_kw)
+                                 inter_topology=topo, defects=defects,
+                                 **inter_kw)
                 evals, rep_idx, rep_of, _rp, mem_arr, feas_arr = \
                     _candidates(wf)
                 rep_brs = [sim.run(evals[i][1]) for i in rep_idx]
@@ -638,7 +686,8 @@ CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
               "dp_level_1_s,dp_level_2_s,"
               "pp_s,stream_s,total_s,"
               "time_per_sample_s,param_bytes_per_npu,"
-              "memory_bytes_per_npu,feasible,routable,pareto")
+              "memory_bytes_per_npu,feasible,routable,pareto,"
+              "defect_rate,defect_seed,degraded_time_s")
 
 
 def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
@@ -665,7 +714,9 @@ def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
             f"{r.memory_bytes_per_npu:.9g},"
             f"{'' if r.feasible is None else int(r.feasible)},"
             f"{'' if r.routable is None else int(r.routable)},"
-            f"{int(r.pareto)}")
+            f"{int(r.pareto)},"
+            f"{r.defect_rate:.9g},{r.defect_seed},"
+            f"{r.degraded_time_s:.9g}")
     return rows
 
 

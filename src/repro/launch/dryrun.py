@@ -48,8 +48,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     ``autostrategy=True`` lets the FRED simulator sweep pick the cell's
     (mp, dp, pp, wafers) — the chosen strategy and the *why* (candidate /
     infeasible / dominated counts) are recorded under ``"autostrategy"``
-    and the strategy is stamped on the recorded pcfg.  ``pcfg_overrides``
-    still win afterwards (§Perf hillclimbs)."""
+    and the strategy is stamped on the recorded pcfg as a
+    :class:`~repro.models.config.StrategyDecision` (the artifact's
+    ``pcfg.auto_strategy`` is its named-field dict, not the legacy
+    positional 5-list).  ``pcfg_overrides`` still win afterwards
+    (§Perf hillclimbs)."""
     import jax
     from repro.configs.registry import get_config, shape_applicability
     from repro.models.config import SHAPES_BY_NAME

@@ -161,6 +161,67 @@ SHAPES_BY_NAME = {s.name: s for s in SHAPES}
 
 
 @dataclass(frozen=True)
+class StrategyDecision:
+    """The sweep-chosen parallelization for a cell (core/autostrategy.py).
+
+    Replaces the legacy positional 5-tuple ``(mp, dp, pp, wafers,
+    inter_topology)`` with named fields, while staying *tuple-compatible*:
+    iteration, ``len``, indexing, unpacking, and equality against a plain
+    tuple all see exactly those five legacy fields.  New axes ride along
+    without widening the tuple protocol: ``ep``/``sp`` reserve the
+    expert- and sequence-parallel degrees, and ``defect_seed`` records
+    the :func:`repro.core.defects.sample_mask` seed when the decision was
+    made under a defect mask (None = pristine wafer).
+    """
+
+    mp: int = 0
+    dp: int = 0
+    pp: int = 0
+    wafers: int = 0
+    inter_topology: str = ""      # ring | fully_connected | switch; ""
+                                  # for single-wafer decisions
+    ep: int = 1                   # expert-parallel degree (reserved)
+    sp: int = 1                   # sequence-parallel degree (reserved)
+    defect_seed: Optional[int] = None
+
+    @property
+    def is_set(self) -> bool:
+        """False for the all-zero sentinel (sweep not run)."""
+        return self._legacy() != (0, 0, 0, 0, "")
+
+    def _legacy(self) -> tuple:
+        return (self.mp, self.dp, self.pp, self.wafers,
+                self.inter_topology)
+
+    # -- legacy tuple protocol ----------------------------------------------
+    def __iter__(self):
+        return iter(self._legacy())
+
+    def __len__(self) -> int:
+        return 5
+
+    def __getitem__(self, i):
+        return self._legacy()[i]
+
+    def __eq__(self, other):
+        if isinstance(other, StrategyDecision):
+            return dataclasses.astuple(self) == dataclasses.astuple(other)
+        if isinstance(other, tuple):
+            return self._legacy() == other
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(self._legacy())
+
+    @classmethod
+    def coerce(cls, value) -> "StrategyDecision":
+        """Adapt a legacy positional tuple (or pass a decision through)."""
+        if isinstance(value, cls):
+            return value
+        return cls(*value)
+
+
+@dataclass(frozen=True)
 class ParallelConfig:
     """Distribution policy for a given mesh.
 
@@ -196,13 +257,13 @@ class ParallelConfig:
     attn_k_chunk: int = 1024
     use_pallas: bool = False                      # TPU-only fused kernels
     # sweep-driven auto-strategy (core/autostrategy.py): the simulator-
-    # chosen (mp, dp, pp, wafers, inter_topology) for this cell —
-    # inter_topology ∈ {ring, fully_connected, switch} is the chosen
-    # inter-wafer collective model ("" for single-wafer choices);
-    # (0, 0, 0, 0, "") = hand-set defaults / sweep not run.
+    # chosen StrategyDecision for this cell.  The default (all-zero)
+    # decision means hand-set defaults / sweep not run.  Tuple-compatible
+    # with the legacy (mp, dp, pp, wafers, inter_topology) 5-tuple —
+    # a plain tuple assigned here still unpacks and compares the same.
     # Informational for the runtime mesh (the launcher builds the mesh),
     # executable for the wafer-side placement.
-    auto_strategy: Tuple[int, int, int, int, str] = (0, 0, 0, 0, "")
+    auto_strategy: StrategyDecision = StrategyDecision()
 
     def replace(self, **kw) -> "ParallelConfig":
         return dataclasses.replace(self, **kw)

@@ -28,7 +28,8 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-from repro.models.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.config import (ModelConfig, ParallelConfig, ShapeConfig,
+                                 StrategyDecision)
 from repro.train.optim import OptimConfig
 
 
@@ -85,8 +86,10 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
             cfg, shape, master=ocfg.master, moments_dtype=ocfg.moments_dtype,
             remat=pcfg.remat, **(sweep_kw or {}))
     st = decision.strategy
-    pcfg = pcfg.replace(auto_strategy=(st.mp, st.dp, st.pp, st.wafers,
-                                       decision.inter_topology))
+    pcfg = pcfg.replace(auto_strategy=StrategyDecision(
+        mp=st.mp, dp=st.dp, pp=st.pp, wafers=st.wafers,
+        inter_topology=decision.inter_topology,
+        defect_seed=getattr(decision, "defect_seed", None)))
     if st.wafers > 1:
         # cross-wafer DP must use the hierarchical reduction: RS within
         # the wafer, the chosen inter-wafer collective (ring ring-AR /

@@ -82,6 +82,22 @@ def save(path: str | Path, tree: Any, *, step: int,
     return final
 
 
+def cleanup_incomplete(path: str | Path) -> int:
+    """Remove ``step_X.tmp`` debris left by a writer that died mid-save
+    (the crash the elastic-restart path recovers from).  Committed
+    checkpoints are never touched.  Returns the number swept."""
+    root = Path(path)
+    if not root.exists():
+        return 0
+    n = 0
+    for d in root.iterdir():
+        if d.is_dir() and d.name.startswith("step_") \
+                and d.name.endswith(".tmp"):
+            shutil.rmtree(d, ignore_errors=True)
+            n += 1
+    return n
+
+
 def latest_step(path: str | Path) -> Optional[int]:
     root = Path(path)
     if not root.exists():

@@ -7,13 +7,18 @@ new layout.  Batch-divisibility is re-validated and the data pipeline's
 shard count updated; everything else (optimizer state, step counter) is
 mesh-independent by construction.
 
-This is the recovery path for node failures at scale: drop to a smaller
-healthy mesh, restore, continue; grow back later the same way.
+This is the recovery path for node failures at scale — the JAX-runtime
+analogue of the cost model's defect masks (``core/defects.py``): a wafer
+(or host) dies mid-run, the surviving devices are rebuilt into the
+largest still-valid mesh (:func:`shrink_mesh` — the model axis is kept,
+the data-parallel degree drops), and :func:`resume_after_failure`
+restores the last committed checkpoint onto it and continues.  Growing
+back later is the same code path with more devices.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Iterable, Optional, Tuple
 
 import jax
 
@@ -24,13 +29,58 @@ from repro.train.optim import OptimConfig
 
 
 def validate_shape_for_mesh(shape: ShapeConfig, mesh) -> None:
-    total = 1
-    for n in mesh.shape.values():
-        total *= n
-    if shape.global_batch % mesh.shape.get("data", 1):
+    """Reject (shape, mesh) pairs the step builders cannot tile.
+
+    The global batch must split evenly over *every* batch-sharded mesh
+    axis — ``data``, plus ``pod`` on multi-pod meshes where the gradient
+    sync spans both (``parallel.collectives.build_sync``).  A mesh with
+    more batch shards than samples fails the same test (the remainder is
+    the whole batch)."""
+    shards = 1
+    for axis in ("pod", "data"):
+        shards *= mesh.shape.get(axis, 1)
+    if shape.global_batch % shards:
         raise ValueError(
-            f"global batch {shape.global_batch} not divisible by data axis "
-            f"{mesh.shape.get('data')} on the new mesh")
+            f"global batch {shape.global_batch} not divisible by the "
+            f"{shards} batch shards of the new mesh "
+            f"(axes {dict(mesh.shape)})")
+
+
+def plan_shrink(n_alive: int, tp: int, global_batch: int) -> Tuple[int, int]:
+    """Largest ``(data, model)`` logical shape on ``n_alive`` devices.
+
+    The model axis is kept at ``tp`` — tensor-parallel layouts are tied
+    to head/FFN divisibility, so elasticity flexes the *data* axis only
+    (exactly the cost model's story: a defect draw shrinks the DP degree,
+    never the MP group).  The DP degree is the largest value that both
+    fits the survivors and divides the global batch."""
+    if tp < 1 or n_alive < tp:
+        raise ValueError(
+            f"{n_alive} surviving devices cannot host a model axis of "
+            f"{tp} — not enough healthy hardware for even one replica")
+    dp = n_alive // tp
+    while dp > 1 and global_batch % dp:
+        dp -= 1
+    if global_batch % dp:
+        raise ValueError(
+            f"global batch {global_batch} has no DP degree ≤ "
+            f"{n_alive // tp} dividing it")
+    return dp, tp
+
+
+def shrink_mesh(mesh, failed: Iterable, shape: ShapeConfig):
+    """The largest valid ``(data, model)`` mesh on the devices surviving
+    ``failed`` (device objects or device ids).
+
+    The surviving devices keep their original mesh order, so DP replica 0
+    stays on the same hardware whenever it survived — re-sharding moves
+    the minimum number of bytes."""
+    from repro.launch.mesh import make_mesh
+    failed_ids = {getattr(d, "id", d) for d in failed}
+    alive = [d for d in mesh.devices.flat if d.id not in failed_ids]
+    tp = mesh.shape.get("model", 1)
+    dp, tp = plan_shrink(len(alive), tp, shape.global_batch)
+    return make_mesh((dp, tp), ("data", "model"), devices=alive[:dp * tp])
 
 
 def resume_on_mesh(checkpoint_dir: str, cfg: ModelConfig, shape: ShapeConfig,
@@ -39,10 +89,32 @@ def resume_on_mesh(checkpoint_dir: str, cfg: ModelConfig, shape: ShapeConfig,
                    step: Optional[int] = None) -> Tuple[CellSetup, Any, int]:
     """Build the setup for ``new_mesh`` and restore state onto it.
 
-    Returns (setup, train_state, resumed_step)."""
+    Returns (setup, train_state, resumed_step).  Stale ``.tmp`` debris
+    from a save interrupted by the failure is swept first — only
+    committed checkpoints are ever restored."""
     validate_shape_for_mesh(shape, new_mesh)
+    ckpt.cleanup_incomplete(checkpoint_dir)
     setup = make_train_setup(cfg, shape, new_mesh, pcfg, ocfg)
     state, extras = ckpt.restore(checkpoint_dir, setup.state_shapes,
                                  step=step,
                                  shardings=setup.state_shardings)
     return setup, state, int(extras.get("step", 0))
+
+
+def resume_after_failure(checkpoint_dir: str, cfg: ModelConfig,
+                         shape: ShapeConfig, mesh, failed: Iterable,
+                         pcfg: Optional[ParallelConfig] = None,
+                         ocfg: Optional[OptimConfig] = None,
+                         step: Optional[int] = None
+                         ) -> Tuple[CellSetup, Any, int, Any]:
+    """One-call failure recovery: shrink, re-shard, resume.
+
+    ``failed`` lists the dead devices (objects or ids) of ``mesh``; the
+    survivors become the largest still-valid ``(data, model)`` mesh and
+    the last committed checkpoint is restored onto it.  Returns
+    (setup, train_state, resumed_step, new_mesh) — the caller re-enters
+    its train loop under ``new_mesh`` with the DP degree dropped."""
+    new_mesh = shrink_mesh(mesh, failed, shape)
+    setup, state, at = resume_on_mesh(checkpoint_dir, cfg, shape, new_mesh,
+                                      pcfg, ocfg, step=step)
+    return setup, state, at, new_mesh

@@ -30,6 +30,7 @@ from repro.core.placement import (Strategy, cached_placement_groups,
                                   cluster_placement, fred_placement,
                                   placement_groups, strided_group)
 from repro.core.simulator import LRUCache, Simulator
+from repro.core.specs import ClusterSpec, FabricSpec
 from repro.core.sweep import sweep, transformer_17b_sweep
 from repro.core.workloads import (MemoryModel, Workload,
                                   memory_bytes_per_npu, paper_workloads,
@@ -74,15 +75,17 @@ def random_sim_case(rng: random.Random):
         seq=rng.randint(1, 64),
         kv_bytes_per_sample_layer=rng.uniform(0.0, 1e5),
     )
-    kw = {}
+    cspec = None
     if n_wafers > 1:
-        kw = dict(n_wafers=n_wafers,
-                  inter_wafer_links=rng.randint(1, 64),
-                  inter_wafer_bw=rng.uniform(1e9, 1e12),
-                  inter_topology=rng.choice(INTER_TOPOLOGIES),
-                  hierarchy=rng.choice(hierarchy_specs(n_wafers, 2)))
-    sim = Simulator(fabric, mesh_shape=(a, b), fred_shape=(a, b),
-                    n_io=rng.randint(1, 32), **kw)
+        cspec = ClusterSpec(n_wafers=n_wafers,
+                            inter_wafer_links=rng.randint(1, 64),
+                            inter_wafer_bw=rng.uniform(1e9, 1e12),
+                            inter_topology=rng.choice(INTER_TOPOLOGIES),
+                            hierarchy=rng.choice(hierarchy_specs(n_wafers, 2)))
+    sim = Simulator(fabric,
+                    spec=FabricSpec(mesh_shape=(a, b), fred_shape=(a, b),
+                                    n_io=rng.randint(1, 32)),
+                    cluster_spec=cspec)
     return sim, w
 
 
@@ -163,7 +166,7 @@ def test_unknown_engine_rejected():
 
 
 def test_run_batch_validates_like_scalar():
-    sim = Simulator("FRED-C", fred_shape=(4, 4))
+    sim = Simulator("FRED-C", spec=FabricSpec(fred_shape=(4, 4)))
     w = transformer("t", 12, 256, 64, Strategy(5, 5, 1), "stationary")
     with pytest.raises(ValueError):
         BatchEngine(sim).run_batch([w])

@@ -20,6 +20,7 @@ from repro.core.fabric import CONFIGS, FredFabric
 from repro.core.meshnet import MeshFabric
 from repro.core.placement import Strategy, strided_group
 from repro.core.simulator import Simulator
+from repro.core.specs import ClusterSpec, FabricSpec
 from repro.core.sweep import sweep
 from repro.core.workloads import (MemoryModel, Workload,
                                   memory_bytes_per_npu, transformer)
@@ -58,16 +59,20 @@ def sim_cases(draw):
         seq=draw(st.integers(min_value=1, max_value=64)),
         kv_bytes_per_sample_layer=draw(st.floats(0.0, 1e5, **fin)),
     )
-    kw = {}
+    cspec = None
     if n_wafers > 1:
-        kw = dict(n_wafers=n_wafers,
-                  inter_wafer_links=draw(st.integers(1, 64)),
-                  inter_wafer_bw=draw(st.floats(1e9, 1e12, **fin)),
-                  inter_topology=draw(st.sampled_from(INTER_TOPOLOGIES)),
-                  hierarchy=draw(st.sampled_from(
-                      hierarchy_specs(n_wafers, 2))))
-    sim = Simulator(fabric, mesh_shape=(a, b), fred_shape=(a, b),
-                    n_io=draw(st.integers(min_value=1, max_value=32)), **kw)
+        cspec = ClusterSpec(n_wafers=n_wafers,
+                            inter_wafer_links=draw(st.integers(1, 64)),
+                            inter_wafer_bw=draw(st.floats(1e9, 1e12, **fin)),
+                            inter_topology=draw(
+                                st.sampled_from(INTER_TOPOLOGIES)),
+                            hierarchy=draw(st.sampled_from(
+                                hierarchy_specs(n_wafers, 2))))
+    sim = Simulator(fabric,
+                    spec=FabricSpec(
+                        mesh_shape=(a, b), fred_shape=(a, b),
+                        n_io=draw(st.integers(min_value=1, max_value=32))),
+                    cluster_spec=cspec)
     return sim, w
 
 

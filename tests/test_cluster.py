@@ -18,6 +18,7 @@ from repro.core.meshnet import MeshFabric
 from repro.core.placement import (Strategy, cluster_placement,
                                   fred_placement, placement_groups)
 from repro.core.simulator import Simulator
+from repro.core.specs import ClusterSpec
 from repro.core.sweep import (CSV_HEADER, cluster_shapes, fred_shapes,
                               mesh_shapes, pareto_front, strategy_space,
                               sweep, to_csv_rows, transformer_17b,
@@ -109,7 +110,8 @@ def test_single_wafer_cluster_params_are_bit_identical():
     for w in paper_workloads():
         for fab in ("baseline", "FRED-A", "FRED-C", "FRED-D"):
             a = Simulator(fab).run(w).as_dict()
-            b = Simulator(fab, n_wafers=1).run(w).as_dict()
+            b = Simulator(fab,
+                          cluster_spec=ClusterSpec(n_wafers=1)).run(w).as_dict()
             assert a == b, (fab, w.name)
 
 
@@ -131,7 +133,7 @@ def test_two_wafer_dp_beats_single_wafer_throughput():
     st2 = Strategy(2, 10, 2, wafers=2)
     t1 = Simulator("FRED-C").run(
         transformer("T17B", 78, 4256, 1024, st1, "stationary"))
-    t2 = Simulator("FRED-C", n_wafers=2).run(
+    t2 = Simulator("FRED-C", cluster_spec=ClusterSpec(n_wafers=2)).run(
         transformer("T17B", 78, 4256, 1024, st2, "stationary"))
     assert t2.dp_inter > 0 and t2.dp_intra > 0
     assert t2.total / (10 * 16) < t1.total / (5 * 16)
@@ -139,11 +141,11 @@ def test_two_wafer_dp_beats_single_wafer_throughput():
 
 def test_simulator_rejects_bad_wafer_counts():
     with pytest.raises(ValueError):
-        Simulator("FRED-C", n_wafers=0)
+        Simulator("FRED-C", cluster_spec=ClusterSpec(n_wafers=0))
     w = transformer("T17B", 78, 4256, 1024, Strategy(2, 4, 2, wafers=4),
                     "stationary")
     with pytest.raises(ValueError):           # strategy spans 4, cluster has 2
-        Simulator("FRED-C", n_wafers=2).run(w)
+        Simulator("FRED-C", cluster_spec=ClusterSpec(n_wafers=2)).run(w)
     w2 = transformer("T17B", 78, 4256, 1024, Strategy(2, 4, 2, wafers=2),
                      "stationary")
     with pytest.raises(ValueError):           # wafer split on a single wafer

@@ -1,0 +1,307 @@
+"""Defect-mask tests (PR 6): mask semantics, defect routing, the
+zero-defect bit pin, degraded sweeps, and the yield-study API.
+
+JAX-free — runs in the core CI lane.  Hypothesis deepens the routing
+property when available; the seeded-random versions keep the coverage
+without it.
+"""
+
+import json
+import random
+
+import pytest
+
+from repro.core.defects import (DefectMask, mesh_connected, mesh_links,
+                                normalize, sample_mask)
+from repro.core.meshnet import MeshFabric
+from repro.core.placement import Strategy
+from repro.core.simulator import Simulator
+from repro.core.specs import FabricSpec
+from repro.core.sweep import sweep, to_csv_rows, transformer_17b, CSV_HEADER
+from repro.core.yield_study import (pick_winner, yield_csv_rows,
+                                    yield_study, YIELD_CSV_HEADER)
+
+# --------------------------------------------------------------------------
+# DefectMask semantics
+# --------------------------------------------------------------------------
+
+
+def test_mask_json_round_trip():
+    m = DefectMask(n_npus=20, dead_npus=(3, 7), dead_links=((0, 1), (5, 9)),
+                   dead_uplinks=((2, 1),), seed=42)
+    back = DefectMask.from_json(m.to_json())
+    assert back == m
+    assert back.seed == 42 and back.n_healthy == 18
+    # canonicalization survives the trip: unordered input, flipped links
+    m2 = DefectMask(n_npus=20, dead_npus=(7, 3, 3), dead_links=((9, 5),
+                                                                (1, 0)))
+    assert m2.dead_npus == (3, 7)
+    assert m2.dead_links == ((0, 1), (5, 9))
+    assert DefectMask.from_json(m2.to_json()) == m2
+
+
+def test_mask_validation_and_queries():
+    with pytest.raises(ValueError):
+        DefectMask(n_npus=4, dead_npus=(0, 1, 2, 3))
+    with pytest.raises(ValueError):
+        DefectMask(n_npus=4, dead_npus=(4,))
+    m = DefectMask(n_npus=6, dead_npus=(2,), dead_links=((0, 1),))
+    assert m.healthy() == (0, 1, 3, 4, 5)
+    assert m.npu_dead(2) and not m.npu_dead(3)
+    assert m.link_dead(0, 1) and m.link_dead(1, 0)
+    assert m.link_dead(2, 3)            # dead NPU kills its links
+    assert not m.link_dead(3, 4)
+    assert m.dead_npu_rate == pytest.approx(1 / 6)
+
+
+def test_normalize_empty_mask():
+    assert normalize(None) is None
+    assert normalize(DefectMask(n_npus=8)) is None
+    m = DefectMask(n_npus=8, dead_npus=(1,))
+    assert normalize(m) is m
+
+
+def test_sample_mask_deterministic_and_connected():
+    kw = dict(dead_npu_rate=0.15, dead_link_rate=0.1, mesh_shape=(5, 4))
+    a = sample_mask(20, seed=7, **kw)
+    b = sample_mask(20, seed=7, **kw)
+    assert a == b and a.seed == 7
+    for seed in range(40):
+        m = sample_mask(20, seed=seed, **kw)
+        assert m.n_healthy >= 1
+        assert mesh_connected(m, 5, 4)
+
+
+def test_sample_mask_uplinks_leave_one_alive():
+    m = sample_mask(20, dead_uplink_rate=0.9, seed=3, n_groups=5,
+                    uplinks_per_l1=3)
+    for l1, n_dead in m.dead_uplinks:
+        assert 1 <= n_dead <= 2          # ≥1 of 3 uplinks survives
+
+
+def test_mesh_connected_is_shape_dependent():
+    # dead NPU 1 cuts a 1×4 line in two, but a 2×2 square stays connected
+    m = DefectMask(n_npus=4, dead_npus=(1,))
+    assert not mesh_connected(m, 1, 4)
+    assert mesh_connected(m, 2, 2)
+
+
+# --------------------------------------------------------------------------
+# defect routing: never cross a dead link / dead NPU
+# --------------------------------------------------------------------------
+
+
+def _assert_routes_avoid_defects(rows, cols, mask):
+    mesh = MeshFabric(rows=rows, cols=cols, defects=mask)
+    healthy = mask.healthy() if mask else tuple(range(rows * cols))
+    rng = random.Random(rows * 1000 + cols)
+    pairs = [(rng.choice(healthy), rng.choice(healthy)) for _ in range(30)]
+    for src, dst in pairs:
+        if src == dst:
+            continue
+        path = mesh.route_links(src, dst)    # [((r, c), (r', c')), ...]
+        nodes = [src] + [r * cols + c for _a, (r, c) in path]
+        assert nodes[-1] == dst
+        for nid in nodes:
+            assert not mask.npu_dead(nid), (src, dst, path)
+        for a, b in zip(nodes, nodes[1:]):
+            assert not mask.link_dead(a, b), (src, dst, path)
+
+
+def test_routing_avoids_defects_seeded():
+    for seed in range(25):
+        rows, cols = random.Random(seed).choice(
+            [(5, 4), (4, 4), (6, 3), (2, 10), (3, 3)])
+        mask = sample_mask(rows * cols, dead_npu_rate=0.15,
+                           dead_link_rate=0.12, seed=seed,
+                           mesh_shape=(rows, cols))
+        mask = normalize(mask)
+        if mask is None:
+            continue
+        _assert_routes_avoid_defects(rows, cols, mask)
+
+
+def test_route_raises_on_dead_endpoint():
+    mask = DefectMask(n_npus=20, dead_npus=(7,))
+    mesh = MeshFabric(rows=5, cols=4, defects=mask)
+    with pytest.raises(ValueError, match="dead"):
+        mesh.route_links(0, 7)
+
+
+def test_ring_structure_detours_and_stays_finite():
+    # kill the straight-line link of a row ring: congestion/hops must
+    # reflect the detour, not the dead edge
+    mask = DefectMask(n_npus=20, dead_links=((1, 2),))
+    healthy = MeshFabric(rows=5, cols=4)
+    broken = MeshFabric(rows=5, cols=4, defects=mask)
+    group = [0, 1, 2, 3]
+    cong_h, hops_h = healthy.ring_structure(group)
+    cong_b, hops_b = broken.ring_structure(group)
+    assert hops_b > hops_h               # the detour is longer
+    assert cong_b >= cong_h >= 1
+
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           shape=st.sampled_from([(5, 4), (4, 4), (6, 3), (3, 3), (2, 8)]))
+    @settings(deadline=None)
+    def test_routing_avoids_defects_property(seed, shape):
+        rows, cols = shape
+        mask = normalize(sample_mask(
+            rows * cols, dead_npu_rate=0.2, dead_link_rate=0.15,
+            seed=seed, mesh_shape=shape))
+        if mask is None:
+            return
+        _assert_routes_avoid_defects(rows, cols, mask)
+except ImportError:                       # pragma: no cover
+    pass
+
+
+# --------------------------------------------------------------------------
+# the zero-defect bit pin: all-healthy mask ≡ no mask
+# --------------------------------------------------------------------------
+
+
+def _breakdown_bits(br):
+    import dataclasses
+    return dataclasses.astuple(br)
+
+
+def test_all_healthy_mask_is_bit_identical():
+    empty = DefectMask(n_npus=20)
+    for fabric, shape in (("baseline", (5, 4)), ("FRED-D", (5, 4))):
+        kw = dict(mesh_shape=shape) if fabric == "baseline" \
+            else dict(fred_shape=shape)
+        sim_none = Simulator(fabric, spec=FabricSpec(n_io=18, **kw))
+        sim_mask = Simulator(fabric, spec=FabricSpec(n_io=18, defects=empty,
+                                                     **kw))
+        assert sim_mask.defects is None   # normalized away at the boundary
+        w = transformer_17b(Strategy(mp=4, dp=5, pp=1))
+        assert _breakdown_bits(sim_none.run(w)) == \
+            _breakdown_bits(sim_mask.run(w))
+
+
+def test_sweep_with_empty_mask_bit_identical():
+    plain = sweep(transformer_17b, 20, n_layers=78)
+    masked = sweep(transformer_17b, 20, n_layers=78,
+                   defects=DefectMask(n_npus=20))
+    assert to_csv_rows(plain) == to_csv_rows(masked)
+    for r in plain:
+        assert (r.defect_rate, r.defect_seed, r.degraded_time_s) == \
+            (0.0, -1, 0.0)
+
+
+# --------------------------------------------------------------------------
+# degraded sweeps
+# --------------------------------------------------------------------------
+
+
+def test_masked_sweep_respects_capacity_and_tags_rows():
+    mask = sample_mask(20, dead_npu_rate=0.1, seed=1, mesh_shape=(5, 4))
+    assert not mask.is_empty
+    res = sweep(transformer_17b, 20, n_layers=78, min_utilization=0.5,
+                defects=mask)
+    assert res, "masked sweep found no candidates"
+    for r in res:
+        st_ = r.strategy
+        per_wafer = st_.mp * st_.pp * (st_.dp // max(st_.wafers, 1))
+        assert per_wafer <= mask.n_healthy
+        assert r.defect_rate == pytest.approx(mask.dead_npu_rate)
+        assert r.defect_seed == mask.seed
+        assert r.degraded_time_s == r.breakdown.total > 0.0
+        if r.fabric == "baseline":
+            assert mesh_connected(mask, *r.shape)
+
+
+def test_masked_sweep_batched_matches_scalar():
+    mask = sample_mask(20, dead_npu_rate=0.1, dead_link_rate=0.05,
+                       seed=5, mesh_shape=(5, 4))
+    assert not mask.is_empty
+    kw = dict(n_layers=78, min_utilization=0.5, defects=mask)
+    batched = sweep(transformer_17b, 20, engine="batched", **kw)
+    scalar = sweep(transformer_17b, 20, engine="scalar", **kw)
+    assert to_csv_rows(batched) == to_csv_rows(scalar)
+
+
+def test_mask_wrong_wafer_size_rejected():
+    with pytest.raises(ValueError, match="covers"):
+        sweep(transformer_17b, 20, n_layers=78,
+              defects=DefectMask(n_npus=16, dead_npus=(0,)))
+
+
+def test_dead_uplinks_slow_spanning_collectives():
+    # severing half the uplinks of two L1s halves the spine share of the
+    # DP groups spanning them (mp=4, dp=5: each DP group strides across
+    # all five L1 groups) — the degraded time must reflect it on both the
+    # endpoint (FRED-C) and in-network (FRED-D) configs
+    mask = DefectMask(n_npus=20, dead_uplinks=((0, 2), (1, 2)))
+    w = transformer_17b(Strategy(mp=4, dp=5, pp=1))
+    spec_kw = dict(fred_shape=(5, 4), n_io=18)
+    for fabric in ("FRED-C", "FRED-D"):
+        sim_ok = Simulator(fabric, spec=FabricSpec(**spec_kw))
+        sim_cut = Simulator(fabric, spec=FabricSpec(defects=mask, **spec_kw))
+        assert sim_cut.run(w).total > sim_ok.run(w).total, fabric
+
+
+def test_csv_header_has_defect_columns():
+    cols = CSV_HEADER.split(",")
+    assert cols[-3:] == ["defect_rate", "defect_seed", "degraded_time_s"]
+    rows = to_csv_rows(sweep(transformer_17b, 20, n_layers=78)[:3])
+    assert all(len(r.split(",")) == len(cols) for r in rows)
+
+
+# --------------------------------------------------------------------------
+# yield study
+# --------------------------------------------------------------------------
+
+
+def test_yield_study_transformer_17b():
+    rep = yield_study(transformer_17b, 20, n_layers=78, n_masks=16,
+                      dead_npu_rate=0.02, seed0=0)
+    assert rep.n_masks == 16
+    assert 0.0 <= rep.survival_rate <= 1.0
+    # the 17B winner packs the full wafer, so any dead NPU kills it and
+    # the study must produce a fallback decision for every killing draw
+    dead = [o for o in rep.outcomes if not o.survived]
+    assert dead, "expected at least one killing draw at 2% over 16 masks"
+    for o in dead:
+        assert o.reason
+        assert o.fallback is not None
+        st_ = o.fallback.strategy
+        per_wafer = st_.mp * st_.pp * (st_.dp // max(st_.wafers, 1))
+        assert per_wafer <= 20 - o.n_dead
+    for o in rep.outcomes:
+        if o.survived:
+            assert o.degraded_time_s > 0 and o.slowdown >= 1.0
+    g = rep.golden()
+    assert set(g) == {"winner", "survived", "fallbacks"}
+    assert g["winner"]["mp"] == rep.winner.strategy.mp
+    json.dumps(g)                        # golden must be JSON-serializable
+    rows = yield_csv_rows(rep)
+    n_cols = len(YIELD_CSV_HEADER.split(","))
+    assert len(rows) == 16
+    assert all(len(r.split(",")) == n_cols for r in rows)
+
+
+def test_yield_study_deterministic():
+    kw = dict(n_layers=78, n_masks=6, dead_npu_rate=0.05, seed0=11)
+    a = yield_study(transformer_17b, 20, **kw)
+    b = yield_study(transformer_17b, 20, **kw)
+    assert a.golden() == b.golden()
+    assert yield_csv_rows(a) == yield_csv_rows(b)
+
+
+def test_yield_study_explicit_masks_and_pick_winner():
+    res = sweep(transformer_17b, 20, n_layers=78)
+    w = pick_winner(res)
+    assert w.pareto
+    masks = [DefectMask(n_npus=20),                      # healthy draw
+             DefectMask(n_npus=20, dead_npus=(0,), seed=99)]
+    rep = yield_study(transformer_17b, 20, n_layers=78, masks=masks)
+    assert rep.n_masks == 2
+    assert rep.outcomes[0].survived
+    assert rep.outcomes[0].slowdown == 1.0
+    assert rep.outcomes[1].seed == 99

@@ -20,6 +20,7 @@ from repro.core.fabric import CONFIGS, FredFabric
 from repro.core.meshnet import MeshFabric
 from repro.core.placement import Strategy, cluster_placement, placement_groups
 from repro.core.simulator import Simulator
+from repro.core.specs import ClusterSpec
 from repro.core.sweep import (CSV_HEADER, hierarchy_configs, hierarchy_specs,
                               sweep, to_csv_rows, transformer_17b,
                               transformer_17b_sweep)
@@ -220,26 +221,28 @@ def test_simulator_hierarchy_param_ring_bit_identical():
     st = Strategy(2, 8, 2, wafers=4)
     w = t17b(st)
     for fabric in ("baseline", "FRED-C", "FRED-D"):
-        a = Simulator(fabric, n_wafers=4).run(w)
-        b = Simulator(fabric, hierarchy=(4,), inter_topology="ring").run(w)
+        a = Simulator(fabric, cluster_spec=ClusterSpec(n_wafers=4)).run(w)
+        b = Simulator(fabric, cluster_spec=ClusterSpec(
+            hierarchy=(4,), inter_topology="ring")).run(w)
         assert a.as_dict() == b.as_dict(), fabric
         assert a.dp_levels == b.dp_levels == (a.dp_inter,)
         # derived wafer count must match an explicit one
         with pytest.raises(ValueError):
-            Simulator(fabric, n_wafers=3, hierarchy=(2, 2))
+            Simulator(fabric, cluster_spec=ClusterSpec(
+                n_wafers=3, hierarchy=(2, 2)))
 
 
 def test_two_level_split_reported_and_sums_to_dp_inter():
     st = Strategy(2, 8, 2, wafers=4)
-    br = Simulator("FRED-C", hierarchy=(2, 2),
-                   inter_topology="switch").run(t17b(st))
+    br = Simulator("FRED-C", cluster_spec=ClusterSpec(
+        hierarchy=(2, 2), inter_topology="switch")).run(t17b(st))
     assert len(br.dp_levels) == 2
     assert all(x > 0 for x in br.dp_levels)
     assert br.dp_inter == br.dp_levels[0] + br.dp_levels[1]
     # rack level pays RS+AG on the shard, pod level one AR — at equal
     # link budgets the 2-level stack costs at least the flat ring's pod
-    flat = Simulator("FRED-C", hierarchy=(4,),
-                     inter_topology="switch").run(t17b(st))
+    flat = Simulator("FRED-C", cluster_spec=ClusterSpec(
+        hierarchy=(4,), inter_topology="switch")).run(t17b(st))
     assert flat.dp_levels == (flat.dp_inter,)
 
 

@@ -163,6 +163,71 @@ def test_elastic_restart_8_to_4_devices():
 
 
 @pytest.mark.slow
+def test_simulated_failure_shrinks_dp_and_resumes():
+    """A 'wafer' (2 of 8 devices) dies mid-run: the async checkpointer's
+    interrupted save leaves .tmp debris, resume_after_failure sweeps it,
+    shrinks (data=4, model=2) to the largest batch-divisible survivor
+    mesh (data=2, model=2 — DP degree drops 4→2), re-shards the last
+    committed checkpoint onto it, and the loss trajectory continues."""
+    run_with_devices("""
+        import pathlib, tempfile, jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_config
+        from repro.models.config import ShapeConfig, ParallelConfig
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.steps import make_train_setup
+        from repro.train import checkpoint as ckpt
+        from repro.train.elastic import (plan_shrink, resume_after_failure,
+                                         shrink_mesh)
+        from repro.train.optim import OptimConfig, init_adam
+        from repro.models import transformer as tfm
+        from repro.models.modules import split
+
+        cfg = get_config("llama3.2-1b").reduced()
+        shape = ShapeConfig("t", "train", 32, 8)
+        pcfg = ParallelConfig(remat="none")
+        ocfg = OptimConfig(warmup_steps=0)
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        setup8 = make_train_setup(cfg, shape, mesh8, pcfg, ocfg)
+        with mesh8:
+            state = jax.jit(
+                lambda k: __import__("repro.parallel.steps",
+                                     fromlist=["TrainState"]).TrainState(
+                    params=split(tfm.init(k, cfg))[0],
+                    opt=init_adam(split(tfm.init(k, cfg))[0], ocfg)),
+                out_shardings=setup8.state_shardings)(jax.random.PRNGKey(0))
+            batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+                     "labels": jnp.zeros((8, 32), jnp.int32)}
+            state, m = setup8.step_fn(state, batch)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, state, step=1, extras={"step": 1})
+            # the failure interrupts the NEXT save: committed step 1 plus
+            # half-written step-2 debris is what recovery actually sees
+            debris = pathlib.Path(d) / "step_00000002.tmp"
+            debris.mkdir()
+            (debris / "leaf_00000.npy").write_bytes(b"torn write")
+
+            # kill the last two devices — one dead "wafer" of the cluster
+            failed = list(mesh8.devices.flat)[-2:]
+            assert plan_shrink(6, 2, shape.global_batch) == (2, 2)
+            setup4, state4, step, mesh4 = resume_after_failure(
+                d, cfg, shape, mesh8, failed, pcfg, ocfg)
+            assert step == 1
+            assert dict(mesh4.shape) == {"data": 2, "model": 2}
+            alive_ids = {dev.id for dev in mesh4.devices.flat}
+            assert not alive_ids & {dev.id for dev in failed}
+            assert not debris.exists()          # swept before restore
+            with mesh4:
+                state4, m4 = setup4.step_fn(state4, batch)
+            # the degraded mesh continues the same logical trajectory
+            with mesh8:
+                state8, m8 = setup8.step_fn(state, batch)
+        np.testing.assert_allclose(float(m4["loss"]), float(m8["loss"]),
+                                   rtol=2e-2)
+        print("FAILOVER_OK")
+    """)
+
+
+@pytest.mark.slow
 def test_mini_dryrun_on_8_devices():
     """End-to-end dry-run plumbing (lower+compile+roofline record) on a
     small mesh with reduced-size shapes, for one arch per family."""

@@ -1,0 +1,125 @@
+"""Consolidated-construction API tests (PR 6 satellite): FabricSpec /
+ClusterSpec on the Simulator, the deprecated-kwarg shims, and the
+StrategyDecision tuple-compatibility contract.  JAX-free."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core.defects import DefectMask
+from repro.core.placement import Strategy
+from repro.core.simulator import Simulator
+from repro.core.specs import ClusterSpec, FabricSpec
+from repro.core.sweep import transformer_17b
+from repro.models.config import ParallelConfig, StrategyDecision
+
+
+def _bits(br):
+    return dataclasses.astuple(br)
+
+
+# --------------------------------------------------------------------------
+# FabricSpec / ClusterSpec
+# --------------------------------------------------------------------------
+
+
+def test_fabric_spec_normalizes_empty_mask():
+    spec = FabricSpec(mesh_shape=(5, 4), defects=DefectMask(n_npus=20))
+    assert spec.defects is None
+    spec = FabricSpec(mesh_shape=(5, 4),
+                      defects=DefectMask(n_npus=20, dead_npus=(3,)))
+    assert spec.defects is not None
+
+
+def test_spec_construction_matches_legacy_kwargs():
+    w = transformer_17b(Strategy(mp=4, dp=5, pp=1))
+    for fabric, kw in (("baseline", dict(mesh_shape=(5, 4), n_io=18)),
+                       ("FRED-D", dict(fred_shape=(5, 4), n_io=18))):
+        new = Simulator(fabric, spec=FabricSpec(**kw))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = Simulator(fabric, **kw)
+        assert _bits(new.run(w)) == _bits(old.run(w))
+
+
+def test_legacy_kwargs_warn_once_and_resolve():
+    with pytest.warns(DeprecationWarning, match="FabricSpec"):
+        sim = Simulator("baseline", mesh_shape=(4, 5), n_io=10)
+    assert sim.mesh_shape == (4, 5) and sim.n_io == 10
+    assert sim.spec.mesh_shape == (4, 5)
+    # spec-only construction stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Simulator("baseline", spec=FabricSpec(mesh_shape=(4, 5), n_io=10))
+
+
+def test_cluster_spec_matches_legacy_cluster_kwargs():
+    w = transformer_17b(Strategy(mp=2, dp=20, pp=1, wafers=2))
+    cspec = ClusterSpec(n_wafers=2, inter_topology="ring",
+                        inter_wafer_links=16, inter_wafer_bw=200e9)
+    new = Simulator("FRED-D", spec=FabricSpec(fred_shape=(5, 4), n_io=18),
+                    cluster_spec=cspec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = Simulator("FRED-D", fred_shape=(5, 4), n_io=18, n_wafers=2,
+                        inter_topology="ring", inter_wafer_links=16,
+                        inter_wafer_bw=200e9)
+    assert _bits(new.run(w)) == _bits(old.run(w))
+    assert new.n_wafers == old.n_wafers == 2
+
+
+def test_specs_are_frozen_and_hashable():
+    spec = FabricSpec(mesh_shape=(5, 4))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.n_io = 3
+    assert hash(spec) == hash(FabricSpec(mesh_shape=(5, 4)))
+    assert hash(ClusterSpec(n_wafers=2)) == hash(ClusterSpec(n_wafers=2))
+
+
+# --------------------------------------------------------------------------
+# StrategyDecision
+# --------------------------------------------------------------------------
+
+
+def test_strategy_decision_tuple_protocol():
+    d = StrategyDecision(2, 10, 1, 1, "ring")
+    mp, dp, pp, wf, topo = d
+    assert (mp, dp, pp, wf, topo) == (2, 10, 1, 1, "ring")
+    assert len(d) == 5 and d[0] == 2 and d[4] == "ring"
+    assert tuple(d) == (2, 10, 1, 1, "ring")
+    assert d == (2, 10, 1, 1, "ring")
+    assert (2, 10, 1, 1, "ring") == d            # reflected comparison
+    assert d != (2, 10, 1, 1, "switch")
+    assert hash(d) == hash(StrategyDecision(2, 10, 1, 1, "ring"))
+
+
+def test_strategy_decision_new_axes_compare():
+    base = StrategyDecision(2, 10, 1, 1, "ring")
+    seeded = StrategyDecision(2, 10, 1, 1, "ring", defect_seed=7)
+    assert base != seeded                        # named fields distinguish
+    assert seeded == (2, 10, 1, 1, "ring")       # the tuple view does not
+    assert seeded.ep == 1 and seeded.sp == 1 and seeded.defect_seed == 7
+
+
+def test_strategy_decision_default_sentinel_and_coerce():
+    p = ParallelConfig()
+    assert p.auto_strategy == (0, 0, 0, 0, "")
+    assert not p.auto_strategy.is_set
+    assert StrategyDecision(1, 1, 1, 1, "").is_set
+    legacy = (4, 2, 1, 1, "switch")
+    d = StrategyDecision.coerce(legacy)
+    assert isinstance(d, StrategyDecision) and d == legacy
+    assert StrategyDecision.coerce(d) is d
+    # a legacy tuple assigned straight onto the config still unpacks
+    p2 = p.replace(auto_strategy=legacy)
+    mp, dp, pp, wf, topo = p2.auto_strategy
+    assert (mp, dp, pp, wf, topo) == legacy
+
+
+def test_strategy_decision_json_friendly():
+    d = StrategyDecision(2, 10, 1, 1, "ring", defect_seed=3)
+    rec = dataclasses.asdict(d)
+    assert rec == {"mp": 2, "dp": 10, "pp": 1, "wafers": 1,
+                   "inter_topology": "ring", "ep": 1, "sp": 1,
+                   "defect_seed": 3}

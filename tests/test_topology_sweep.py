@@ -13,6 +13,7 @@ from repro.core.fabric import CONFIGS, FredFabric
 from repro.core.meshnet import MeshFabric
 from repro.core.placement import Strategy, fred_placement, mesh_placement
 from repro.core.simulator import Simulator, speedup_table
+from repro.core.specs import FabricSpec
 from repro.core.sweep import (CSV_HEADER, factor_pairs, fred_shapes,
                               mesh_shapes, pareto_front, strategy_space,
                               sweep, to_csv_rows, transformer_17b,
@@ -48,8 +49,9 @@ def test_explicit_paper_shape_matches_default_exactly():
     for w in paper_workloads():
         for fab in ALL_FABRICS:
             a = Simulator(fab).run(w).as_dict()
-            b = Simulator(fab, mesh_shape=(5, 4), fred_shape=(5, 4),
-                          n_io=18).run(w).as_dict()
+            b = Simulator(fab, spec=FabricSpec(
+                mesh_shape=(5, 4), fred_shape=(5, 4),
+                n_io=18)).run(w).as_dict()
             for k, v in a.items():
                 assert b[k] == pytest.approx(v, abs=1e-9)
 
@@ -74,11 +76,13 @@ def test_collective_cache_shared_across_fabrics_is_safe():
     totals = {}
     for fab, shape in (("FRED-A", (5, 4)), ("FRED-C", (5, 4)),
                        ("FRED-C", (4, 5)), ("baseline", (5, 4))):
-        sim = Simulator(fab, fred_shape=shape, mesh_shape=shape,
+        sim = Simulator(fab, spec=FabricSpec(fred_shape=shape,
+                                             mesh_shape=shape),
                         collective_cache=shared)
         totals[(fab, shape)] = sim.run(w).total
     for (fab, shape), t in totals.items():
-        fresh = Simulator(fab, fred_shape=shape, mesh_shape=shape).run(w)
+        fresh = Simulator(fab, spec=FabricSpec(
+            fred_shape=shape, mesh_shape=shape)).run(w)
         assert t == pytest.approx(fresh.total, abs=1e-12), (fab, shape)
     assert totals[("FRED-A", (5, 4))] != totals[("FRED-C", (5, 4))]
 
@@ -163,7 +167,8 @@ def test_placement_rejects_oversubscription():
     with pytest.raises(ValueError):
         mesh_placement(Strategy(5, 5, 1), 5, 4)
     with pytest.raises(ValueError):
-        Simulator("baseline", mesh_shape=(4, 4)).run(paper_workloads()[3])
+        Simulator("baseline",
+                  spec=FabricSpec(mesh_shape=(4, 4))).run(paper_workloads()[3])
 
 
 def test_invalid_shapes_rejected():
