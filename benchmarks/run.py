@@ -498,7 +498,7 @@ def bench_autostrategy(goldens: str = ""):
              f"shape={d.wafer_shape[0]}x{d.wafer_shape[1]};"
              f"execution={d.execution};"
              f"mem_GiB={d.memory_bytes_per_npu/2**30:.2f};"
-             f"t_per_sample_us={d.time_per_sample*1e6:.3f};"
+             f"t_per_sample_us={d.time_per_sample_s*1e6:.3f};"
              f"candidates={d.n_candidates};infeasible={d.n_infeasible};"
              f"dominated={d.n_dominated}")
     path = _artifacts() / "autostrategy_decisions.csv"
@@ -625,6 +625,36 @@ def bench_roofline():
              f"useful={rf['useful_flops_ratio']:.3f}")
 
 
+# --------------------------------------------------------------------------
+# staticcheck — the repro.analysis invariant gate (ISSUE 7)
+# --------------------------------------------------------------------------
+
+def bench_staticcheck():
+    """Run the five static invariant checkers (layering / parity / units /
+    determinism / deprecation) as a benchmark-harness gate.
+
+    An alias for ``python -m repro.analysis --check`` so the suite rides
+    the existing gate plumbing (``--only staticcheck``); writes the JSON
+    findings report to ``artifacts/analysis_report.json`` and exits
+    non-zero on any non-baselined finding, like the golden gates do.
+    """
+    from repro.analysis.__main__ import DEFAULT_BASELINE
+    from repro.analysis.__main__ import main as analysis_main
+    report = _artifacts() / "analysis_report.json"
+    t0 = time.perf_counter()
+    rc = analysis_main(["--check", "--baseline", DEFAULT_BASELINE,
+                        "--json", str(report)])
+    us = (time.perf_counter() - t0) * 1e6
+    counts = json.loads(report.read_text())["counts_by_rule"]
+    emit("staticcheck", us,
+         ";".join(f"{r}={n}" for r, n in sorted(counts.items())))
+    emit("staticcheck[report]", 0.0, str(report))
+    if rc:
+        sys.exit("staticcheck: new invariant findings (see above) — fix "
+                 "them, suppress with `# repro: ignore[RULE]`, or (last "
+                 "resort) regen tests/goldens/analysis_baseline.json")
+
+
 BENCHES = {
     "fig2": bench_fig2,
     "fig4": bench_fig4,
@@ -639,6 +669,7 @@ BENCHES = {
     "routing": bench_routing,
     "collectives": bench_collectives,
     "roofline": bench_roofline,
+    "staticcheck": bench_staticcheck,
 }
 
 

@@ -50,7 +50,7 @@ def main():
               f"{d.wafer_shape[0]}x{d.wafer_shape[1]:<5d} "
               f"{inter:16s} {d.execution:10s} "
               f"{d.memory_bytes_per_npu / 2**30:6.2f}Gi "
-              f"{d.time_per_sample * 1e6:8.3f}us "
+              f"{d.time_per_sample_s * 1e6:8.3f}us "
               f"{d.n_candidates:5d} {d.n_infeasible:6d} {d.n_dominated:5d}")
     print(f"\n(memory budget {args.hbm_gib:.0f} GiB/NPU; 'infeas' = "
           f"candidates failing it, 'dom' = feasible but Pareto-dominated)")

@@ -1,0 +1,45 @@
+"""Static invariant checkers for the cost-model core (ISSUE 7).
+
+The cost model's trustworthiness rests on contracts that used to be
+enforced only by convention or by expensive dynamic gates:
+
+* ``LAYERING``    — ``repro.core``/``repro.configs`` stay importable on the
+                    JAX-free CI core lane (requirements-core.txt only),
+                    directly or transitively; runtime packages never
+                    import ``repro.analysis`` back.
+* ``PARITY``      — every scalar ``Simulator`` axis (``Strategy`` /
+                    ``Workload`` / ``Breakdown`` / ``FabricSpec`` /
+                    ``ClusterSpec`` field) has a batched counterpart in
+                    ``batch_engine.CandidateBatch`` / ``run_batch``, so a
+                    new axis (e.g. the ROADMAP's ``ep``/``sp``) cannot
+                    silently fall out of the bit-parity sweeps.
+* ``UNITS``       — float dataclass fields and CSV header tokens carrying
+                    physical quantities bear unit suffixes (``_s``,
+                    ``_bytes``, ``_bw``, ...) or an explicit
+                    ``# repro: unit[...]`` declaration; ``+``/``-`` over
+                    operands with different known units is flagged.
+* ``DETERMINISM`` — no unseeded RNG, no wall-clock reads inside ``core/``,
+                    no iteration over hash-ordered ``set``s (goldens and
+                    CSVs must be byte-stable across processes).
+* ``DEPRECATION`` — no internal use of the ten legacy ``Simulator``
+                    kwargs or bare strategy tuples now that
+                    ``FabricSpec``/``ClusterSpec``/``StrategyDecision``
+                    exist.
+
+Pure stdlib (``ast`` + ``re``): this package must itself import cleanly
+on the core lane, so it depends on nothing outside the standard library
+— not even numpy.
+
+Suppress a finding inline with ``# repro: ignore[RULE]`` (comma-list or
+``*`` allowed) on the flagged line; declare a unit on a field whose name
+is API-frozen with ``# repro: unit[s]``.  Grandfathered findings live in
+``tests/goldens/analysis_baseline.json`` (regen with
+``python -m repro.analysis --check --regen-baseline``); the committed
+baseline is empty and should stay that way.
+"""
+
+from .engine import (ALL_RULES, Finding, Repo, load_baseline, run_checks,
+                     write_baseline)
+
+__all__ = ["ALL_RULES", "Finding", "Repo", "load_baseline", "run_checks",
+           "write_baseline"]

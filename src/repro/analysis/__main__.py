@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis --check``.
+
+Exits non-zero on any finding not grandfathered by the baseline.  Runs
+on the CI core lane (pure stdlib — no numpy/jax needed).
+
+Examples::
+
+    python -m repro.analysis --check
+    python -m repro.analysis --check --rules LAYERING,PARITY
+    python -m repro.analysis --check --regen-baseline
+    python -m repro.analysis --check --json artifacts/analysis_report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import (ALL_RULES, json_report, load_baseline, run_checks,
+                     split_baselined, write_baseline)
+
+DEFAULT_BASELINE = "tests/goldens/analysis_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checkers for the cost-model core")
+    ap.add_argument("--check", action="store_true",
+                    help="run the checkers (the only mode; kept explicit "
+                         "so CI invocations read as intent)")
+    ap.add_argument("--root", default=".",
+                    help="repository root to analyse (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"grandfathered-findings file "
+                         f"(default: {DEFAULT_BASELINE} under --root, "
+                         f"if present)")
+    ap.add_argument("--regen-baseline", action="store_true",
+                    help="rewrite the baseline from current findings and "
+                         "exit 0")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the full JSON report here")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma list of rules to run "
+                         f"(default: all of {', '.join(ALL_RULES)})")
+    args = ap.parse_args(argv)
+    if not args.check and not args.regen_baseline:
+        ap.error("nothing to do: pass --check")
+
+    root = Path(args.root).resolve()
+    rules = tuple(r.strip().upper() for r in args.rules.split(",")
+                  if r.strip()) if args.rules else ALL_RULES
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+
+    findings, suppressed = run_checks(root, rules)
+
+    if args.regen_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"baseline written: {baseline_path} "
+              f"({len(findings)} grandfathered finding(s))")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, grandfathered, stale = split_baselined(findings, baseline)
+
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(
+            json_report(new, grandfathered, suppressed, stale, rules),
+            indent=2, sort_keys=True) + "\n", encoding="utf-8")
+
+    for f in new:
+        print(f.render())
+    if stale:
+        print(f"note: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} no longer fire(s) — "
+              f"rerun with --regen-baseline to shrink the baseline",
+              file=sys.stderr)
+    counts = ", ".join(
+        f"{r}={sum(1 for f in new if f.rule == r)}" for r in rules)
+    print(f"repro.analysis: {len(new)} new finding(s) "
+          f"[{counts}], {len(grandfathered)} grandfathered, "
+          f"{len(suppressed)} suppressed", file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""DEPRECATION — the consolidated spec API (PR 6) is the only internal
+construction surface.
+
+``FabricSpec`` / ``ClusterSpec`` / ``StrategyDecision`` replaced ten
+legacy ``Simulator`` kwargs and the bare positional strategy tuple; the
+shims still work (with a ``DeprecationWarning``) so downstream users get
+a deprecation window, but *internal* code — ``src/repro``, ``examples``,
+``benchmarks`` — must not keep minting new call sites:
+
+X1  ``Simulator(mesh_shape=..., n_wafers=..., ...)`` with any legacy
+    kwarg.  The authoritative kwarg list is read from the
+    ``_LEGACY_FABRIC_KW`` / ``_LEGACY_CLUSTER_KW`` tuples in
+    ``core/simulator.py`` (falling back to the frozen PR-6 list when
+    checking a tree that lacks the file), so retiring a shim there
+    automatically retires the rule.
+
+X2  Bare strategy tuples: a tuple literal passed as ``auto_strategy=``
+    or assigned to an ``auto_strategy`` attribute — that slot takes a
+    ``StrategyDecision`` (named fields, ``as_strategy()``), the 5-tuple
+    is the legacy encoding.
+
+``core/simulator.py`` and ``core/specs.py`` (the shim implementation and
+its spec twin) are exempt; tests are outside the walk roots entirely —
+test shims exercising the deprecated surface on purpose is exactly why
+the engine skips ``tests/``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from .engine import Finding, Repo, string_tuple_assign
+
+RULE = "DEPRECATION"
+
+SIMULATOR = "src/repro/core/simulator.py"
+EXEMPT = (SIMULATOR, "src/repro/core/specs.py")
+
+# frozen PR-6 shim list — used only when the checked tree has no
+# core/simulator.py to read the live tuples from (fixture trees in tests)
+FALLBACK_LEGACY_KW: Tuple[str, ...] = (
+    "mesh_shape", "fred_shape", "n_io", "n_wafers", "inter_wafer_links",
+    "inter_wafer_bw", "inter_wafer_latency", "inter_topology", "hierarchy")
+
+
+def legacy_kwargs(repo: Repo) -> Tuple[str, ...]:
+    sf = repo.file(SIMULATOR)
+    if sf is not None and sf.tree is not None:
+        fab = string_tuple_assign(sf.tree, "_LEGACY_FABRIC_KW") or ()
+        clu = string_tuple_assign(sf.tree, "_LEGACY_CLUSTER_KW") or ()
+        if fab or clu:
+            return fab + clu
+    return FALLBACK_LEGACY_KW
+
+
+def _is_simulator_call(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Name) and f.id == "Simulator") or \
+        (isinstance(f, ast.Attribute) and f.attr == "Simulator")
+
+
+def check(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    legacy = set(legacy_kwargs(repo))
+    for sf in repo.files():
+        if sf.tree is None or sf.path in EXEMPT:
+            continue
+        for node in ast.walk(sf.tree):
+            # ---- X1: legacy Simulator kwargs -------------------------
+            if isinstance(node, ast.Call) and _is_simulator_call(node):
+                for kw in node.keywords:
+                    if kw.arg in legacy:
+                        findings.append(Finding(
+                            RULE, sf.path, node.lineno,
+                            f"Simulator({kw.arg}=...) is a deprecated shim "
+                            f"— pass spec=FabricSpec(...) / "
+                            f"cluster_spec=ClusterSpec(...) instead"))
+            # ---- X2: bare strategy tuples ----------------------------
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "auto_strategy" and isinstance(
+                            kw.value, (ast.Tuple, ast.List)):
+                        findings.append(Finding(
+                            RULE, sf.path, node.lineno,
+                            "bare tuple passed as auto_strategy — use "
+                            "StrategyDecision(mp=..., dp=..., pp=..., "
+                            "wafers=..., ...)"))
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, (ast.Tuple, ast.List)):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) \
+                            and tgt.attr == "auto_strategy":
+                        findings.append(Finding(
+                            RULE, sf.path, node.lineno,
+                            "bare tuple assigned to .auto_strategy — use "
+                            "StrategyDecision"))
+    return findings

@@ -1,0 +1,146 @@
+"""DETERMINISM — goldens and CSVs must be byte-stable across processes.
+
+The CI gates diff sweep CSVs, Pareto fronts and autostrategy decisions
+bit-for-bit against committed goldens (PRs 3–6); three classes of
+nondeterminism can break that without any cost-model change:
+
+D1  Unseeded RNG: module-level ``random.*`` draws, no-arg
+    ``random.Random()`` / ``np.random.default_rng()``, any legacy
+    ``np.random.<fn>`` (global-state API), and ``np.random.seed`` (mutates
+    shared state out from under other callers).  Checked across
+    ``src/repro`` + ``examples`` + ``benchmarks``.
+
+D2  Wall-clock reads inside ``src/repro/core``: ``time.time()`` /
+    ``perf_counter()`` / ``monotonic()`` / ``datetime.now()``.  The core
+    cost model is a pure function of its inputs; timing instrumentation
+    that genuinely never feeds a golden (e.g. ``sweep_seconds``) carries
+    an explicit ``# repro: ignore[DETERMINISM]``.
+
+D3  Iterating a ``set`` (literal, ``set(...)``/``frozenset(...)`` call or
+    set comprehension) in a ``for`` statement or comprehension: with
+    ``PYTHONHASHSEED`` randomization, string-set iteration order differs
+    *per process*, so any derived row order is golden-hostile.  Dict
+    iteration is insertion-ordered and therefore fine — ``dict.fromkeys``
+    is the sanctioned order-preserving dedup.  Order-insensitive
+    reductions (``sorted(set(...))``, ``max(set(...))``) are fine too:
+    the rule only fires when the set is the loop iterable itself.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .engine import Finding, Repo
+
+RULE = "DETERMINISM"
+
+CORE_PREFIX = "src/repro/core"
+
+# global-state draws on the stdlib `random` module
+_RANDOM_FNS = {
+    "random", "randint", "randrange", "uniform", "gauss", "normalvariate",
+    "choice", "choices", "sample", "shuffle", "betavariate", "expovariate",
+    "seed", "getrandbits", "triangular",
+}
+_CLOCK_FNS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "process_time"), ("time", "time_ns"),
+    ("time", "perf_counter_ns"), ("time", "monotonic_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"), ("datetime", "today"),
+    ("date", "today"),
+}
+
+
+def _dotted(node: ast.AST) -> Optional[List[str]]:
+    """['np', 'random', 'rand'] for np.random.rand — None if not a plain
+    dotted name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def _check_calls(sf, in_core: bool, findings: List[Finding]) -> None:
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        parts = _dotted(node.func)
+        if not parts:
+            continue
+        # ---- D1: RNG ------------------------------------------------
+        if parts[0] == "random" and len(parts) == 2:
+            if parts[1] in _RANDOM_FNS:
+                findings.append(Finding(
+                    RULE, sf.path, node.lineno,
+                    f"random.{parts[1]}() draws from the unseeded global "
+                    f"RNG — use random.Random(seed)"))
+            elif parts[1] in ("Random", "SystemRandom") and not (
+                    node.args or node.keywords):
+                findings.append(Finding(
+                    RULE, sf.path, node.lineno,
+                    f"random.{parts[1]}() without a seed is "
+                    f"OS-entropy-seeded — pass an explicit seed"))
+        if len(parts) >= 2 and parts[0] in ("np", "numpy") \
+                and parts[1] == "random" and len(parts) == 3:
+            fn = parts[2]
+            if fn == "default_rng":
+                if not (node.args or node.keywords):
+                    findings.append(Finding(
+                        RULE, sf.path, node.lineno,
+                        "np.random.default_rng() without a seed is "
+                        "OS-entropy-seeded — pass an explicit seed"))
+            else:
+                findings.append(Finding(
+                    RULE, sf.path, node.lineno,
+                    f"np.random.{fn} uses numpy's global RNG state — use "
+                    f"np.random.default_rng(seed)"))
+        # ---- D2: wall clock in core ---------------------------------
+        if in_core and len(parts) >= 2 and (
+                parts[-2], parts[-1]) in _CLOCK_FNS:
+            findings.append(Finding(
+                RULE, sf.path, node.lineno,
+                f"wall-clock read {'.'.join(parts)}() inside core/ — the "
+                f"cost model must be a pure function of its inputs"))
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    return False
+
+
+def _check_set_iteration(sf, findings: List[Finding]) -> None:
+    def flag(it: ast.AST) -> None:
+        findings.append(Finding(
+            RULE, sf.path, it.lineno,
+            "iterating a set: hash order differs per process "
+            "(PYTHONHASHSEED), so any derived row/golden order is "
+            "unstable — sort it, or dedup with dict.fromkeys"))
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)) \
+                and _is_set_expr(node.iter):
+            flag(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                               ast.DictComp)):
+            for gen in node.generators:
+                if _is_set_expr(gen.iter):
+                    flag(gen.iter)
+
+
+def check(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in repo.files():
+        if sf.tree is None:
+            continue
+        in_core = sf.path.startswith(CORE_PREFIX)
+        _check_calls(sf, in_core, findings)
+        _check_set_iteration(sf, findings)
+    return findings

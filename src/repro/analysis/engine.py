@@ -1,0 +1,310 @@
+"""Shared static-analysis engine: file walker, findings, suppressions,
+baseline, reporters.
+
+Checkers are functions ``check(repo: Repo) -> List[Finding]`` registered
+in :data:`CHECKERS`.  The engine owns everything rule-independent:
+
+* walking the repo (``src/repro`` + ``examples`` + ``benchmarks``) with a
+  per-file parse cache,
+* inline ``# repro: ignore[RULE]`` suppressions (matched on the finding's
+  line; ``RULE`` may be a comma list or ``*``),
+* the committed baseline of grandfathered findings, keyed on
+  ``(rule, path, message)`` — deliberately *not* on line numbers, so an
+  unrelated edit shifting a grandfathered finding by a few lines does not
+  break the build,
+* text (``path:line: RULE message``) and JSON reports.
+
+Pure stdlib — no numpy, no jax (this runs on the CI core lane *before*
+anything heavier is installed).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# rule names double as the tokens accepted by `# repro: ignore[...]`
+ALL_RULES = ("LAYERING", "PARITY", "UNITS", "DETERMINISM", "DEPRECATION")
+
+# directories walked relative to the repo root; tests are deliberately
+# excluded (test shims may exercise deprecated surfaces on purpose) —
+# individual checkers may still read specific test files as data.
+DEFAULT_ROOTS = ("src/repro", "examples", "benchmarks")
+
+_IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Za-z_*,\s]+)\]")
+_UNIT_RE = re.compile(r"#\s*repro:\s*unit\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at ``path:line``.
+
+    Baseline identity is ``(rule, path, message)`` — see :func:`baseline_key`.
+    """
+    rule: str
+    path: str           # repo-root-relative, posix separators
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def baseline_key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+
+class SourceFile:
+    """A parsed source file: text, lines, AST (or None on syntax error),
+    per-line suppressions and unit declarations."""
+
+    def __init__(self, relpath: str, text: str):
+        self.path = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(text)
+            self.parse_error: Optional[str] = None
+        except SyntaxError as e:          # surfaced as an engine finding
+            self.tree = None
+            self.parse_error = f"syntax error: {e.msg} (line {e.lineno})"
+        # line number -> set of rule names (or "*") suppressed there
+        self.suppressions: Dict[int, Set[str]] = {}
+        # line number -> declared unit string from `# repro: unit[...]`
+        self.unit_decls: Dict[int, str] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _IGNORE_RE.search(line)
+            if m:
+                rules = {tok.strip().upper()
+                         for tok in m.group(1).split(",") if tok.strip()}
+                self.suppressions[i] = rules
+            m = _UNIT_RE.search(line)
+            if m:
+                self.unit_decls[i] = m.group(1).strip()
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        rules = self.suppressions.get(line)
+        return bool(rules) and (rule in rules or "*" in rules)
+
+    def declared_unit(self, line: int) -> Optional[str]:
+        return self.unit_decls.get(line)
+
+
+class Repo:
+    """Walk context over one repository root with a parse cache."""
+
+    def __init__(self, root: Path, roots: Sequence[str] = DEFAULT_ROOTS):
+        self.root = Path(root).resolve()
+        self.roots = tuple(roots)
+        self._cache: Dict[str, Optional[SourceFile]] = {}
+
+    def file(self, relpath: str) -> Optional[SourceFile]:
+        """Parse one file by repo-relative path (cached); None if absent."""
+        relpath = str(relpath).replace("\\", "/")
+        if relpath not in self._cache:
+            p = self.root / relpath
+            if p.is_file():
+                self._cache[relpath] = SourceFile(
+                    relpath, p.read_text(encoding="utf-8"))
+            else:
+                self._cache[relpath] = None
+        return self._cache[relpath]
+
+    def files(self, *prefixes: str) -> List[SourceFile]:
+        """All ``.py`` files under the walk roots (sorted by path).  With
+        ``prefixes``, only files whose relative path starts with one."""
+        out: List[SourceFile] = []
+        for rel in self._walk():
+            if prefixes and not any(rel.startswith(p) for p in prefixes):
+                continue
+            sf = self.file(rel)
+            if sf is not None:
+                out.append(sf)
+        return out
+
+    def _walk(self) -> List[str]:
+        rels: List[str] = []
+        for r in self.roots:
+            base = self.root / r
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                if "__pycache__" in p.parts:
+                    continue
+                rels.append(p.relative_to(self.root).as_posix())
+        return rels
+
+
+# --------------------------------------------------------------------------
+# AST helpers shared by checkers
+# --------------------------------------------------------------------------
+
+def is_dataclass_def(node: ast.ClassDef) -> bool:
+    """True if the class carries a @dataclass / @dataclasses.dataclass(...)
+    decorator (bare or called)."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Name) and target.id == "dataclass":
+            return True
+        if isinstance(target, ast.Attribute) and target.attr == "dataclass":
+            return True
+    return False
+
+
+def dataclass_fields(node: ast.ClassDef) -> List[ast.AnnAssign]:
+    """Class-level annotated assignments (the dataclass fields), in
+    declaration order."""
+    return [stmt for stmt in node.body
+            if isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)]
+
+
+def annotation_text(node: ast.AnnAssign) -> str:
+    return ast.unparse(node.annotation)
+
+
+def find_class(tree: ast.AST, name: str) -> Optional[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def find_function(scope: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(scope):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def string_tuple_assign(tree: ast.AST, target_name: str
+                        ) -> Optional[Tuple[str, ...]]:
+    """Value of ``TARGET = ("a", "b", ...)`` (module- or class-level
+    constant tuple of strings), or None."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == target_name:
+                    if isinstance(node.value, ast.Tuple) and all(
+                            isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)
+                            for e in node.value.elts):
+                        return tuple(e.value for e in node.value.elts)
+    return None
+
+
+# --------------------------------------------------------------------------
+# running checks
+# --------------------------------------------------------------------------
+
+def run_checks(root: Path, rules: Optional[Iterable[str]] = None,
+               ) -> Tuple[List[Finding], List[Finding]]:
+    """Run the selected checkers over ``root``.
+
+    Returns ``(findings, suppressed)``: findings that survive inline
+    suppression, and the ones an ``# repro: ignore[...]`` comment ate
+    (reported in the JSON output so suppressions stay auditable).
+    """
+    # local imports: each checker module imports the engine, so importing
+    # them at module scope here would be circular.
+    from . import deprecation, determinism, layering, parity, units
+    checkers = {
+        "LAYERING": layering.check,
+        "PARITY": parity.check,
+        "UNITS": units.check,
+        "DETERMINISM": determinism.check,
+        "DEPRECATION": deprecation.check,
+    }
+    selected = tuple(rules) if rules else ALL_RULES
+    unknown = [r for r in selected if r not in checkers]
+    if unknown:
+        raise ValueError(f"unknown rule(s) {unknown}; valid: {ALL_RULES}")
+
+    repo = Repo(Path(root))
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for rule in selected:
+        for f in checkers[rule](repo):
+            sf = repo.file(f.path)
+            if sf is not None and sf.is_suppressed(f.rule, f.line):
+                suppressed.append(f)
+            else:
+                kept.append(f)
+    # parse failures anywhere in the walk are findings too — a checker
+    # silently skipping an unparseable file would be a hole in every rule.
+    for sf in repo.files():
+        if sf.parse_error:
+            kept.append(Finding("LAYERING", sf.path, 1, sf.parse_error))
+    return sorted(kept), sorted(suppressed)
+
+
+# --------------------------------------------------------------------------
+# baseline + reports
+# --------------------------------------------------------------------------
+
+BASELINE_SCHEMA = 1
+
+
+def load_baseline(path: Path) -> Set[Tuple[str, str, str]]:
+    """Grandfathered finding keys from a baseline JSON (empty if the file
+    does not exist — absence of a baseline means nothing is grandfathered)."""
+    p = Path(path)
+    if not p.is_file():
+        return set()
+    data = json.loads(p.read_text(encoding="utf-8"))
+    return {(e["rule"], e["path"], e["message"])
+            for e in data.get("findings", [])}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "schema": BASELINE_SCHEMA,
+        "comment": ("Grandfathered repro.analysis findings, keyed on "
+                    "(rule, path, message) — line numbers intentionally "
+                    "excluded.  Regen: python -m repro.analysis --check "
+                    "--regen-baseline.  Keep this empty: fix or "
+                    "`# repro: ignore[...]` new findings instead."),
+        "findings": [{"rule": f.rule, "path": f.path, "message": f.message}
+                     for f in sorted(findings)],
+    }
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n",
+                 encoding="utf-8")
+
+
+def split_baselined(findings: Sequence[Finding],
+                    baseline: Set[Tuple[str, str, str]]
+                    ) -> Tuple[List[Finding], List[Finding], List[Tuple]]:
+    """(new, grandfathered, stale_baseline_keys).  Stale keys — baseline
+    entries that no longer fire — are reported so the baseline shrinks
+    over time instead of accreting."""
+    new = [f for f in findings if f.baseline_key() not in baseline]
+    old = [f for f in findings if f.baseline_key() in baseline]
+    live = {f.baseline_key() for f in findings}
+    stale = sorted(k for k in baseline if k not in live)
+    return new, old, stale
+
+
+def json_report(new: Sequence[Finding], grandfathered: Sequence[Finding],
+                suppressed: Sequence[Finding], stale: Sequence[Tuple],
+                rules: Sequence[str]) -> Dict:
+    def rows(fs: Sequence[Finding]) -> List[Dict]:
+        return [{"rule": f.rule, "path": f.path, "line": f.line,
+                 "message": f.message} for f in fs]
+    counts: Dict[str, int] = {r: 0 for r in rules}
+    for f in new:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "schema": BASELINE_SCHEMA,
+        "rules": list(rules),
+        "counts_by_rule": counts,
+        "new_findings": rows(new),
+        "grandfathered": rows(grandfathered),
+        "suppressed": rows(suppressed),
+        "stale_baseline_entries": [list(k) for k in stale],
+        "ok": not new,
+    }

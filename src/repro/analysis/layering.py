@@ -1,0 +1,292 @@
+"""LAYERING — the core cost model must stay importable on the JAX-free
+CI core lane, and runtime packages must not depend back on the checkers.
+
+Rule 1 (core lane): every module *transitively reachable* from
+``repro.core`` / ``repro.configs`` (or ``repro.analysis`` itself) via
+import edges may only import, at module level and unguarded, (a) the
+stdlib, (b) packages named in ``requirements-core.txt``, or (c) other
+``repro`` modules.  Two escape hatches are sanctioned because they are
+exactly how the repo gates jax today: *function-level* imports (gated by
+the call site — e.g. ``parallel/policy.py`` lazily importing
+``core.autostrategy`` and vice versa) and module-level imports inside a
+``try`` whose handler catches ``ImportError``/``ModuleNotFoundError``
+(e.g. ``train/optim.py``'s jax import).  ``if TYPE_CHECKING:`` blocks
+never execute and are skipped.
+
+Rule 2 (no back-edges): ``repro.kernels`` / ``repro.parallel`` /
+``repro.train`` / ``repro.serve`` must never import ``repro.analysis``
+in any form — the checkers observe the runtime, not the other way round.
+
+The allowed third-party set is **derived from requirements-core.txt**,
+not hardcoded (ISSUE 7 satellite): if that file is missing or names no
+packages, that is itself a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, Repo, SourceFile
+
+RULE = "LAYERING"
+
+CORE_ROOT_PREFIXES = ("repro.core", "repro.configs", "repro.analysis")
+NO_ANALYSIS_PREFIXES = ("repro.kernels", "repro.parallel", "repro.train",
+                        "repro.serve")
+REQUIREMENTS_CORE = "requirements-core.txt"
+
+# requirement-name -> importable top package, for the names that differ
+_DIST_TO_MODULE = {"pyyaml": "yaml", "pillow": "PIL", "msgpack": "msgpack"}
+
+_REQ_NAME_RE = re.compile(r"^\s*([A-Za-z0-9_.\-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportEdge:
+    line: int
+    target: str            # dotted module the import resolves to
+    lazy: bool             # inside a function body
+    guarded: bool          # inside try/except ImportError
+    typing_only: bool      # inside `if TYPE_CHECKING:`
+
+
+def parse_requirements(text: str) -> Set[str]:
+    """Top-level importable package names from a requirements file."""
+    out: Set[str] = set()
+    for line in text.splitlines():
+        line = line.split("#", 1)[0].strip()
+        if not line or line.startswith("-"):
+            continue
+        m = _REQ_NAME_RE.match(line)
+        if m:
+            name = m.group(1).lower().replace("-", "_")
+            out.add(_DIST_TO_MODULE.get(name, name))
+    return out
+
+
+def module_name(relpath: str) -> Optional[str]:
+    """Dotted module name for a file under ``src/`` (None otherwise)."""
+    if not relpath.startswith("src/"):
+        return None
+    parts = relpath[len("src/"):].removesuffix(".py").split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class _ImportCollector(ast.NodeVisitor):
+    """Collects import edges with lazy/guarded/typing context."""
+
+    def __init__(self, module: str, is_package: bool = False):
+        self.module = module
+        self.is_package = is_package
+        self.edges: List[ImportEdge] = []
+        self._depth = 0          # function nesting
+        self._guard = 0          # try-with-ImportError-handler nesting
+        self._typing = 0         # `if TYPE_CHECKING:` nesting
+
+    # -- context tracking ---------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Try(self, node: ast.Try) -> None:
+        catches_import_error = False
+        for h in node.handlers:
+            names: List[str] = []
+            t = h.type
+            for sub in ([t] if not isinstance(t, ast.Tuple)
+                        else list(t.elts)) if t is not None else []:
+                if isinstance(sub, ast.Name):
+                    names.append(sub.id)
+                elif isinstance(sub, ast.Attribute):
+                    names.append(sub.attr)
+            if t is None or any(n in ("ImportError", "ModuleNotFoundError",
+                                      "Exception", "BaseException")
+                                for n in names):
+                catches_import_error = True
+        if catches_import_error:
+            self._guard += 1
+            for stmt in node.body:
+                self.visit(stmt)
+            self._guard -= 1
+        else:
+            for stmt in node.body:
+                self.visit(stmt)
+        for part in (node.handlers, node.orelse, node.finalbody):
+            for stmt in part:
+                self.visit(stmt)
+
+    def visit_If(self, node: ast.If) -> None:
+        t = node.test
+        is_typing = (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") \
+            or (isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING")
+        if is_typing:
+            self._typing += 1
+            for stmt in node.body:
+                self.visit(stmt)
+            self._typing -= 1
+            for stmt in node.orelse:
+                self.visit(stmt)
+        else:
+            self.generic_visit(node)
+
+    # -- imports ------------------------------------------------------
+    def _add(self, line: int, target: str) -> None:
+        self.edges.append(ImportEdge(
+            line=line, target=target, lazy=self._depth > 0,
+            guarded=self._guard > 0, typing_only=self._typing > 0))
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self._add(node.lineno, alias.name)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level:                     # relative: resolve against self
+            base = self.module.split(".")
+            # level 1 in module repro.core.sweep strips the leaf, giving
+            # package repro.core; in a package __init__ it is the package
+            # itself, so one fewer component is stripped
+            drop = node.level - 1 if self.is_package else node.level
+            base = base[:len(base) - drop] if drop else base
+            prefix = ".".join(base)
+            stem = f"{prefix}.{node.module}" if node.module else prefix
+        else:
+            stem = node.module or ""
+        if not stem:
+            return
+        # `from pkg import name` may bind a submodule: record both the
+        # package edge and candidate submodule edges (resolved later
+        # against the module index — non-modules simply don't resolve).
+        self._add(node.lineno, stem)
+        for alias in node.names:
+            if alias.name != "*":
+                self._add(node.lineno, f"{stem}.{alias.name}")
+
+
+def collect_imports(sf: SourceFile, module: str) -> List[ImportEdge]:
+    if sf.tree is None:
+        return []
+    c = _ImportCollector(module, is_package=sf.path.endswith("__init__.py"))
+    c.visit(sf.tree)
+    return c.edges
+
+
+def _stdlib_names() -> Set[str]:
+    names = set(getattr(sys, "stdlib_module_names", ()))
+    names.update(("typing_extensions",))   # vendored-or-absent; harmless
+    return names
+
+
+def check(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # -- allowed third-party set from requirements-core.txt -----------
+    req = repo.file(REQUIREMENTS_CORE)
+    if req is None:
+        findings.append(Finding(
+            RULE, REQUIREMENTS_CORE, 1,
+            "requirements-core.txt is missing — the layering checker "
+            "derives the allowed core-lane import set from it"))
+        allowed_external: Set[str] = set()
+    else:
+        allowed_external = parse_requirements(req.text)
+        if not allowed_external:
+            findings.append(Finding(
+                RULE, REQUIREMENTS_CORE, 1,
+                "requirements-core.txt names no packages — the core-lane "
+                "allowed import set would be empty"))
+    allowed = _stdlib_names() | allowed_external
+
+    # -- module index + import edges over src/repro --------------------
+    modules: Dict[str, SourceFile] = {}
+    for sf in repo.files("src/repro"):
+        name = module_name(sf.path)
+        if name:
+            modules[name] = sf
+    edges: Dict[str, List[ImportEdge]] = {
+        name: collect_imports(sf, name) for name, sf in modules.items()}
+
+    def resolve(target: str) -> Optional[str]:
+        """Map an import target onto a repo module (longest prefix wins:
+        `from repro.core.sweep import sweep` hits repro.core.sweep, the
+        trailing function name just fails to resolve)."""
+        parts = target.split(".")
+        for i in range(len(parts), 0, -1):
+            cand = ".".join(parts[:i])
+            if cand in modules:
+                return cand
+        return None
+
+    # -- rule 1: BFS reachability from the core roots ------------------
+    roots = sorted(m for m in modules
+                   if any(m == p or m.startswith(p + ".")
+                          for p in CORE_ROOT_PREFIXES))
+    # provenance: module -> (parent, via-line) for readable chains
+    parent: Dict[str, Optional[str]] = {m: None for m in roots}
+    queue = list(roots)
+    while queue:
+        mod = queue.pop(0)
+        for e in edges.get(mod, []):
+            if e.typing_only or e.lazy or e.guarded:
+                # lazy/guarded edges are the sanctioned gating pattern:
+                # they may *reach* jax at runtime but cannot break the
+                # core-lane import, which is what this rule protects.
+                continue
+            tgt = resolve(e.target)
+            if tgt is not None and tgt not in parent:
+                parent[tgt] = mod
+                queue.append(tgt)
+
+    def chain(mod: str) -> str:
+        hops = [mod]
+        while parent.get(hops[-1]) is not None:
+            hops.append(parent[hops[-1]])  # type: ignore[arg-type]
+        return " <- ".join(hops)
+
+    for mod in sorted(parent):
+        sf = modules[mod]
+        for e in edges.get(mod, []):
+            if e.typing_only or e.lazy or e.guarded:
+                continue
+            top = e.target.split(".", 1)[0]
+            if top == "repro" or top in allowed:
+                continue
+            # `from pkg import sub` records both pkg and pkg.sub edges;
+            # only report the bare package once per line
+            if "." in e.target and any(
+                    o.line == e.line and o.target == top
+                    for o in edges.get(mod, [])):
+                continue
+            findings.append(Finding(
+                RULE, sf.path, e.line,
+                f"module-level import of '{top}' outside the core-lane "
+                f"allowed set (requirements-core.txt + stdlib) in a module "
+                f"reachable from the core roots via {chain(mod)}"))
+
+    # -- rule 2: runtime packages must not import repro.analysis -------
+    for mod in sorted(modules):
+        if not any(mod == p or mod.startswith(p + ".")
+                   for p in NO_ANALYSIS_PREFIXES):
+            continue
+        seen_lines: Set[int] = set()
+        for e in edges.get(mod, []):
+            tgt = e.target
+            if tgt == "repro.analysis" or tgt.startswith("repro.analysis."):
+                # `from repro.analysis import X` records both the package
+                # and candidate-submodule edges — one finding per line
+                if e.line in seen_lines:
+                    continue
+                seen_lines.add(e.line)
+                findings.append(Finding(
+                    RULE, modules[mod].path, e.line,
+                    f"'{mod}' imports '{tgt}' — runtime packages must not "
+                    f"depend on the static checkers"))
+    return findings

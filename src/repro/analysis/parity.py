@@ -1,0 +1,314 @@
+"""PARITY — the batched engine must cover every scalar Simulator axis.
+
+PRs 4–6 hold ``batch_engine.run_batch`` bit-identical to
+``Simulator.run`` and CI gates re-prove it dynamically (sweepperf /
+hiersweep / faultsweep goldens) — but only over the axes the sweeps
+*exercise*.  A new ``Strategy`` or ``Workload`` axis (the ROADMAP's
+``ep``/``sp``) that ``CandidateBatch`` does not pack would sail through
+those gates and silently diverge at sweep time.  This checker pins the
+coupling statically via :data:`PACK_CONTRACT`, the explicit map from each
+``CandidateBatch`` packed array to the scalar-side field it mirrors.
+
+When an axis is added on either side, this map (and the parity tests the
+ISSUE-4/5 gates run) must be extended in the same PR — that is the
+point: the build breaks until the batched engine and the contract agree.
+
+Checks (all AST/text, nothing imported):
+
+* P1  ``CandidateBatch._ARRAYS`` == PACK_CONTRACT keys, both directions.
+* P2  ``Strategy`` fields == the contract's Strategy-owned targets.
+* P3  every contract target exists on its owner (field *or* property).
+* P4  every ``w.<attr>`` the scalar paths read (``Simulator.run`` and
+      ``workloads.memory_bytes_per_npu``) is a contract target.
+* P5  every ``Breakdown`` field is packed by ``run_batch``'s
+      ``br.__dict__`` literal.
+* P6  every float ``Breakdown`` field appears in ``as_dict()`` — the
+      dict the dynamic parity gates actually diff.
+* P7  every ``FabricSpec``/``ClusterSpec``/non-legacy ``Simulator`` field
+      is referenced somewhere in ``batch_engine.py`` or ``sweep.py``.
+* P8  every ``MemoryModel`` field is referenced in ``batch_engine.py``
+      (``memory_bytes_batch``/``feasible_batch`` mirror the scalar
+      memory model).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import (Finding, Repo, SourceFile, annotation_text,
+                     dataclass_fields, find_class, find_function,
+                     string_tuple_assign)
+
+RULE = "PARITY"
+
+PLACEMENT = "src/repro/core/placement.py"
+SIMULATOR = "src/repro/core/simulator.py"
+BATCH_ENGINE = "src/repro/core/batch_engine.py"
+WORKLOADS = "src/repro/core/workloads.py"
+SPECS = "src/repro/core/specs.py"
+SWEEP = "src/repro/core/sweep.py"
+
+# CandidateBatch packed array -> (owner class, scalar-side field/property).
+# EXTEND THIS (plus the batched implementation and the parity goldens)
+# whenever Strategy or Workload grows an axis — P1/P2 fail until you do.
+PACK_CONTRACT: Dict[str, Tuple[str, str]] = {
+    "mp": ("Strategy", "mp"),
+    "dp": ("Strategy", "dp"),
+    "pp": ("Strategy", "pp"),
+    "wafers": ("Strategy", "wafers"),
+    "n_layers": ("Workload", "n_layers"),
+    "mp_ar": ("Workload", "mp_allreduce_per_layer"),
+    "samples": ("Workload", "samples_per_dp"),
+    "minibatch": ("Workload", "minibatch"),
+    "seq": ("Workload", "seq"),
+    "params_layer": ("Workload", "params_per_layer"),
+    "flops": ("Workload", "flops_fwd_per_sample_layer"),
+    "abps": ("Workload", "act_bytes_per_sample"),
+    "pbt": ("Workload", "param_bytes_total"),
+    "kv_layer": ("Workload", "kv_bytes_per_sample_layer"),
+    "streaming": ("Workload", "execution"),
+}
+
+# Workload attributes the scalar paths may read without a packed twin:
+# identity/labelling only, never arithmetic.
+NON_NUMERIC_READS = {"name", "strategy"}
+
+
+def _class_field_names(sf: SourceFile, cls: str) -> Optional[List[str]]:
+    node = find_class(sf.tree, cls) if sf.tree else None
+    if node is None:
+        return None
+    return [f.target.id for f in dataclass_fields(node)]  # type: ignore
+
+
+def _class_property_names(sf: SourceFile, cls: str) -> Set[str]:
+    node = find_class(sf.tree, cls) if sf.tree else None
+    if node is None:
+        return set()
+    out: Set[str] = set()
+    for stmt in node.body:
+        if isinstance(stmt, ast.FunctionDef) and any(
+                (isinstance(d, ast.Name) and d.id == "property") or
+                (isinstance(d, ast.Attribute) and d.attr == "property")
+                for d in stmt.decorator_list):
+            out.add(stmt.name)
+    return out
+
+
+def _attr_reads(fn: ast.FunctionDef, varname: str) -> Dict[str, int]:
+    """attribute name -> first line read on ``varname.<attr>``."""
+    reads: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == varname):
+            reads.setdefault(node.attr, node.lineno)
+    return reads
+
+
+def _dunder_dict_keys(tree: ast.AST) -> Optional[Tuple[Set[str], int]]:
+    """Keys of the ``br.__dict__ = {...}`` literal in run_batch."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Attribute)
+                and node.targets[0].attr == "__dict__"
+                and isinstance(node.value, ast.Dict)):
+            keys = {k.value for k in node.value.keys
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+            return keys, node.lineno
+    return None
+
+
+def _as_dict_keys(cls: ast.ClassDef) -> Set[str]:
+    fn = find_function(cls, "as_dict")
+    if fn is None:
+        return set()
+    keys: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            keys |= {k.value for k in node.keys
+                     if isinstance(k, ast.Constant)
+                     and isinstance(k.value, str)}
+    return keys
+
+
+def _referenced(name: str, *texts: str) -> bool:
+    pat = re.compile(rf"\b{re.escape(name)}\b")
+    return any(pat.search(t) for t in texts)
+
+
+def check(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    files: Dict[str, Optional[SourceFile]] = {
+        p: repo.file(p)
+        for p in (PLACEMENT, SIMULATOR, BATCH_ENGINE, WORKLOADS, SPECS, SWEEP)}
+    missing = [p for p, sf in files.items() if sf is None or sf.tree is None]
+    if missing:
+        for p in missing:
+            findings.append(Finding(
+                RULE, p, 1, "expected core module missing or unparseable — "
+                "the engine-parity contract cannot be checked"))
+        return findings
+    placement, simulator, batch, workloads, specs, sweep = (
+        files[PLACEMENT], files[SIMULATOR], files[BATCH_ENGINE],
+        files[WORKLOADS], files[SPECS], files[SWEEP])
+
+    # ---- P1: packed arrays <-> contract ------------------------------
+    arrays = string_tuple_assign(batch.tree, "_ARRAYS")
+    if arrays is None:
+        findings.append(Finding(
+            RULE, BATCH_ENGINE, 1,
+            "CandidateBatch._ARRAYS tuple not found — cannot verify the "
+            "packed-axis contract"))
+        arrays = ()
+    for name in arrays:
+        if name not in PACK_CONTRACT:
+            findings.append(Finding(
+                RULE, BATCH_ENGINE, 1,
+                f"CandidateBatch packs '{name}' but PACK_CONTRACT has no "
+                f"entry mapping it to a scalar-side field — extend "
+                f"analysis/parity.py in the same change"))
+    for name, (owner, field) in sorted(PACK_CONTRACT.items()):
+        if arrays and name not in arrays:
+            findings.append(Finding(
+                RULE, BATCH_ENGINE, 1,
+                f"contract axis '{name}' ({owner}.{field}) is no longer "
+                f"packed by CandidateBatch._ARRAYS — the batched engine "
+                f"lost a scalar axis"))
+
+    # ---- P2: Strategy fields <-> contract ----------------------------
+    strategy_fields = _class_field_names(placement, "Strategy")
+    if strategy_fields is None:
+        findings.append(Finding(RULE, PLACEMENT, 1,
+                                "class Strategy not found"))
+        strategy_fields = []
+    contract_strategy = {f for (o, f) in PACK_CONTRACT.values()
+                         if o == "Strategy"}
+    for f in strategy_fields:
+        if f not in contract_strategy:
+            findings.append(Finding(
+                RULE, PLACEMENT, 1,
+                f"Strategy.{f} has no packed counterpart in CandidateBatch "
+                f"— a sweep over it would silently fall back to scalar-only "
+                f"(add it to _ARRAYS, run_batch and PACK_CONTRACT)"))
+    for f in sorted(contract_strategy):
+        if f not in strategy_fields:
+            findings.append(Finding(
+                RULE, PLACEMENT, 1,
+                f"PACK_CONTRACT maps a packed array to Strategy.{f}, which "
+                f"no longer exists"))
+
+    # ---- P3: contract targets exist on their owners ------------------
+    workload_fields = _class_field_names(workloads, "Workload") or []
+    workload_props = _class_property_names(workloads, "Workload")
+    workload_surface = set(workload_fields) | workload_props
+    for name, (owner, field) in sorted(PACK_CONTRACT.items()):
+        if owner == "Workload" and field not in workload_surface:
+            findings.append(Finding(
+                RULE, WORKLOADS, 1,
+                f"PACK_CONTRACT maps packed '{name}' to Workload.{field}, "
+                f"which is neither a field nor a property"))
+
+    # ---- P4: scalar-side w.<attr> reads are all packed ---------------
+    contract_workload = {f for (o, f) in PACK_CONTRACT.values()
+                         if o == "Workload"}
+    for sf, fn_name, var in ((simulator, "run", "w"),
+                             (workloads, "memory_bytes_per_npu", "w")):
+        fn = find_function(sf.tree, fn_name)
+        if fn is None:
+            findings.append(Finding(RULE, sf.path, 1,
+                                    f"function {fn_name} not found"))
+            continue
+        for attr, line in sorted(_attr_reads(fn, var).items()):
+            if attr in NON_NUMERIC_READS or attr in contract_workload:
+                continue
+            findings.append(Finding(
+                RULE, sf.path, line,
+                f"{fn_name} reads w.{attr}, which has no packed "
+                f"counterpart in CandidateBatch (PACK_CONTRACT)"))
+
+    # ---- P5/P6: Breakdown fields packed and diffable -----------------
+    bd = find_class(simulator.tree, "Breakdown")
+    if bd is None:
+        findings.append(Finding(RULE, SIMULATOR, 1,
+                                "class Breakdown not found"))
+    else:
+        fields = dataclass_fields(bd)
+        packed = _dunder_dict_keys(batch.tree)
+        if packed is None:
+            findings.append(Finding(
+                RULE, BATCH_ENGINE, 1,
+                "run_batch's `br.__dict__ = {...}` literal not found — "
+                "cannot verify Breakdown coverage"))
+        else:
+            keys, line = packed
+            for f in fields:
+                name = f.target.id  # type: ignore[union-attr]
+                if name not in keys:
+                    findings.append(Finding(
+                        RULE, BATCH_ENGINE, line,
+                        f"Breakdown.{name} is not packed by run_batch's "
+                        f"br.__dict__ literal — batched results would lack "
+                        f"the field"))
+        as_dict = _as_dict_keys(bd)
+        for f in fields:
+            name = f.target.id  # type: ignore[union-attr]
+            if annotation_text(f).strip() == "float" and name not in as_dict:
+                findings.append(Finding(
+                    RULE, SIMULATOR, f.lineno,
+                    f"float field Breakdown.{name} missing from as_dict() — "
+                    f"the dynamic parity gates diff as_dict, so drift in it "
+                    f"would go unchecked"))
+
+    # ---- P7: spec/Simulator surfaces referenced by the batched side --
+    legacy = (string_tuple_assign(simulator.tree, "_LEGACY_FABRIC_KW") or ()) \
+        + (string_tuple_assign(simulator.tree, "_LEGACY_CLUSTER_KW") or ())
+    if not legacy:
+        findings.append(Finding(
+            RULE, SIMULATOR, 1,
+            "_LEGACY_FABRIC_KW/_LEGACY_CLUSTER_KW tuples not found — "
+            "cannot separate legacy shims from live Simulator fields"))
+    surfaces: List[Tuple[str, str, Sequence[str]]] = []
+    for cls in ("FabricSpec", "ClusterSpec"):
+        names = _class_field_names(specs, cls)
+        if names is None:
+            findings.append(Finding(RULE, SPECS, 1, f"class {cls} not found"))
+        else:
+            surfaces.append((SPECS, cls, names))
+    sim_fields = _class_field_names(simulator, "Simulator") or []
+    surfaces.append((SIMULATOR, "Simulator",
+                     [f for f in sim_fields if f not in legacy]))
+    engine_texts = (batch.text, sweep.text)
+    for path, cls, names in surfaces:
+        for name in names:
+            if not _referenced(name, *engine_texts):
+                findings.append(Finding(
+                    RULE, path, 1,
+                    f"{cls}.{name} is never referenced in batch_engine.py "
+                    f"or sweep.py — the batched/sweep side cannot be "
+                    f"honouring it"))
+
+    # ---- structural twins: the batched hierarchy/memory surfaces -----
+    for twin in ("InterLane", "CandidateBatch"):
+        if find_class(batch.tree, twin) is None:
+            findings.append(Finding(
+                RULE, BATCH_ENGINE, 1,
+                f"class {twin} not found — the batched structure twin of "
+                f"the scalar surface is gone"))
+    for fn_name in ("run_batch", "memory_bytes_batch", "feasible_batch"):
+        if find_function(batch.tree, fn_name) is None:
+            findings.append(Finding(
+                RULE, BATCH_ENGINE, 1,
+                f"function {fn_name} not found in batch_engine.py"))
+
+    # ---- P8: memory model parity -------------------------------------
+    for name in _class_field_names(workloads, "MemoryModel") or []:
+        if not _referenced(name, batch.text):
+            findings.append(Finding(
+                RULE, WORKLOADS, 1,
+                f"MemoryModel.{name} is never referenced in batch_engine.py "
+                f"— memory_bytes_batch/feasible_batch have drifted from the "
+                f"scalar memory model"))
+    return findings

@@ -1,0 +1,182 @@
+"""UNITS — seconds/bytes/bandwidth flow through dozens of fields and CSV
+columns with nothing but naming discipline keeping them straight.
+
+U1  Every float-typed dataclass field in ``src/repro/core`` must be
+    *unit-resolvable*: its name carries a unit token (``_s``, ``_bytes``,
+    ``_bw``, ``_gib``, ``_rate``, ``_flops``, ...), a dimensionless token
+    (``_fraction``, ``_efficiency``, ``_ratio``, ...), or the line carries
+    an explicit ``# repro: unit[...]`` declaration.  The declaration form
+    exists for names that are API-frozen — ``Breakdown.compute`` is a
+    golden/as_dict key and ``ClusterSpec.inter_wafer_latency`` is a
+    public kwarg, so they cannot grow a suffix without breaking parity
+    goldens; the comment makes the unit machine-readable instead.
+
+U2  CSV header tokens (module-level ``*CSV_HEADER*`` string constants in
+    core) that contain a physical stem (``time``, ``latency``, ``bytes``,
+    ``memory``...) must also carry a unit token — a ``decode_time``
+    column would be flagged until it becomes ``decode_time_s``.
+
+U3  ``+``/``-`` over two operands whose *names* resolve to different
+    known units (``x_s + y_bytes``) is flagged — unit mixing must go
+    through an explicit conversion expression (which breaks the naive
+    name inference, by design).  ``*``/``/`` legitimately change units,
+    so their results are treated as unknown.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .engine import (Finding, Repo, annotation_text, dataclass_fields,
+                     is_dataclass_def)
+
+RULE = "UNITS"
+
+CORE_PREFIX = "src/repro/core"
+
+# name tokens that resolve a unit (suffix-or-component match)
+UNIT_TOKENS = {
+    "s": "s", "sec": "s", "secs": "s", "seconds": "s", "ms": "s",
+    "us": "s", "ns": "s",
+    "bytes": "bytes", "byte": "bytes", "gib": "bytes", "gb": "bytes",
+    "mb": "bytes", "kib": "bytes",
+    "bw": "bw", "bps": "bw", "gbps": "bw",
+    "rate": "rate", "hz": "rate",
+    "flops": "flops", "tflops": "flops",
+    "params": "count", "w": "power", "watts": "power", "mm2": "area",
+}
+# tokens that mark a field as deliberately dimensionless
+DIMENSIONLESS_TOKENS = {
+    "fraction", "frac", "ratio", "factor", "efficiency", "utilization",
+    "util", "share", "slowdown", "speedup", "scale", "prob", "probability",
+}
+# stems that indicate a physical quantity in CSV column names (U2)
+PHYSICAL_STEMS = {
+    "time", "latency", "bytes", "bw", "memory", "mem", "hbm", "load",
+    "bandwidth", "overhead", "duration", "elapsed",
+}
+
+FLOAT_ANNOTATIONS = {
+    "float", "Optional[float]", "Tuple[float, ...]", "List[float]",
+    "Sequence[float]",
+}
+
+
+def _tokens(name: str) -> List[str]:
+    return [t for t in name.lower().split("_") if t]
+
+
+def resolve_unit(name: str) -> Optional[str]:
+    """Unit implied by a name, or None.  The *last* unit-bearing token
+    wins (``act_bytes_per_sample`` → bytes; ``time_per_sample_s`` → s)."""
+    toks = _tokens(name)
+    for t in reversed(toks):
+        if t in UNIT_TOKENS:
+            return UNIT_TOKENS[t]
+    if any(t in DIMENSIONLESS_TOKENS for t in toks):
+        return "dimensionless"
+    return None
+
+
+def _is_float_annotation(text: str) -> bool:
+    return text.replace(" ", "") in {a.replace(" ", "")
+                                     for a in FLOAT_ANNOTATIONS}
+
+
+def _check_fields(sf, findings: List[Finding]) -> None:
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.ClassDef) and is_dataclass_def(node)):
+            continue
+        for field in dataclass_fields(node):
+            if not _is_float_annotation(annotation_text(field)):
+                continue
+            name = field.target.id  # type: ignore[union-attr]
+            if resolve_unit(name) is not None:
+                continue
+            if sf.declared_unit(field.lineno) is not None:
+                continue
+            findings.append(Finding(
+                RULE, sf.path, field.lineno,
+                f"float field {node.name}.{name} has no unit suffix "
+                f"(_s/_bytes/_bw/_gib/_rate/...), no dimensionless token "
+                f"and no `# repro: unit[...]` declaration"))
+
+
+def _check_csv_headers(sf, findings: List[Finding]) -> None:
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        if not any("CSV_HEADER" in t for t in targets):
+            continue
+        try:
+            value = ast.literal_eval(node.value)
+        except (ValueError, SyntaxError):
+            continue
+        if not isinstance(value, str):
+            continue
+        for col in value.split(","):
+            col = col.strip()
+            toks = set(_tokens(col))
+            if not toks & PHYSICAL_STEMS:
+                continue
+            if resolve_unit(col) is None and not sf.is_suppressed(
+                    RULE, node.lineno):
+                findings.append(Finding(
+                    RULE, sf.path, node.lineno,
+                    f"CSV column '{col}' ({targets[0]}) names a physical "
+                    f"quantity but carries no unit token"))
+
+
+class _MixVisitor(ast.NodeVisitor):
+    """Flags Add/Sub whose operands resolve to different known units."""
+
+    def __init__(self, sf, findings: List[Finding]):
+        self.sf = sf
+        self.findings = findings
+
+    @staticmethod
+    def _name_of(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        return None
+
+    def _unit_of(self, node: ast.AST) -> Optional[str]:
+        name = self._name_of(node)
+        if name is not None:
+            # suffix semantics only: a bare `w` or `s` loop variable must
+            # not be read as watts/seconds — require an actual `_unit`
+            # suffix (≥ 2 name components) before trusting the inference
+            if len(_tokens(name)) < 2:
+                return None
+            u = resolve_unit(name)
+            return None if u == "dimensionless" else u
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            lu, ru = self._unit_of(node.left), self._unit_of(node.right)
+            return lu or ru
+        return None      # calls, subscripts, Mult/Div: unknown unit
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            lu, ru = self._unit_of(node.left), self._unit_of(node.right)
+            if lu and ru and lu != ru:
+                self.findings.append(Finding(
+                    RULE, self.sf.path, node.lineno,
+                    f"'{ast.unparse(node)}' adds/subtracts operands with "
+                    f"different units ({lu} vs {ru}) — convert explicitly"))
+        self.generic_visit(node)
+
+
+def check(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in repo.files(CORE_PREFIX):
+        if sf.tree is None:
+            continue
+        _check_fields(sf, findings)
+        _check_csv_headers(sf, findings)
+        _MixVisitor(sf, findings).visit(sf.tree)
+    return findings

@@ -70,7 +70,7 @@ class AutoStrategyDecision:
     remat: str
     master: bool
     moments_dtype: str
-    time_per_sample: float
+    time_per_sample_s: float
     memory_bytes_per_npu: float
     npu_hbm_bytes: float
     n_candidates: int                 # simulated sweep points (all modes)
@@ -152,7 +152,7 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
                       training=training)
     n_layers = adapter_n_layers(cfg)
     n_candidates = n_infeasible = 0
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # repro: ignore[DETERMINISM] duration metric only
     for execution in ("stationary", "streaming"):
         def wl(st: Strategy, _e=execution):
             return from_model_config(cfg, shape, st, execution=_e)
@@ -176,12 +176,12 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
             hierarchy=chosen.hierarchy,
             execution=execution, remat=remat, master=master,
             moments_dtype=moments_dtype,
-            time_per_sample=chosen.time_per_sample,
+            time_per_sample_s=chosen.time_per_sample,
             memory_bytes_per_npu=chosen.memory_bytes_per_npu,
             npu_hbm_bytes=npu_hbm_bytes,
             n_candidates=n_candidates, n_infeasible=n_infeasible,
             n_dominated=len(feasible) - len(front),
-            sweep_seconds=time.perf_counter() - t0)
+            sweep_seconds=time.perf_counter() - t0)  # repro: ignore[DETERMINISM] never feeds goldens
     raise InfeasibleModelError(
         f"{cfg.name}/{shape.name}: none of {n_candidates} candidates fits "
         f"{npu_hbm_bytes / 2**30:.1f} GiB/NPU at {n_npus} NPUs/wafer × "
@@ -210,7 +210,7 @@ def decision_csv_rows(decisions: Sequence[AutoStrategyDecision]) -> List[str]:
             f"{'x'.join(map(str, d.hierarchy))},{d.inter_topology},"
             f"{d.execution},{d.remat},"
             f"{int(d.master)},{d.moments_dtype},"
-            f"{d.time_per_sample:.9g},{d.memory_bytes_per_npu:.9g},"
+            f"{d.time_per_sample_s:.9g},{d.memory_bytes_per_npu:.9g},"
             f"{d.npu_hbm_bytes:.9g},{d.n_candidates},{d.n_infeasible},"
             f"{d.n_dominated},{d.sweep_seconds:.3f}")
     return rows

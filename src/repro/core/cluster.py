@@ -73,7 +73,7 @@ class WaferLink:
     GB/s = 12.8 TB/s sits inside that envelope)."""
     n_links: int = 32
     link_bw: float = 400e9            # B/s per link per direction
-    latency: float = 5e-7             # per inter-level step
+    latency: float = 5e-7             # repro: unit[s] (per inter-level step)
 
     def __post_init__(self):
         if self.n_links < 1 or self.link_bw <= 0:

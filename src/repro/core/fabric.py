@@ -35,8 +35,8 @@ class FredConfig:
     l1_l2_bw: float             # per-L1-switch uplink to the L2 spine
     in_network: bool
     io_bw: float = 128e9
-    switch_latency: float = 20e-9
-    step_overhead: float = 4e-7       # per flow-step overhead (single fabric
+    switch_latency: float = 20e-9     # repro: unit[s]
+    step_overhead: float = 4e-7       # repro: unit[s] per flow-step (single fabric
                                       # traversal; no multi-hop protocol)
 
 

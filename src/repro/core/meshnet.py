@@ -32,8 +32,8 @@ class MeshFabric:
     cols: int = 4
     link_bw: float = 750e9            # B/s per direction
     io_bw: float = 128e9              # per I/O controller
-    latency_per_hop: float = 20e-9
-    step_overhead: float = 8e-7       # per ring-step SW/protocol latency
+    latency_per_hop: float = 20e-9    # repro: unit[s]
+    step_overhead: float = 8e-7       # repro: unit[s] per ring-step SW/protocol
                                       # (ASTRA-SIM-style NPU processing delay)
     n_io: Optional[int] = None        # None → derived border placement
     defects: Optional[DefectMask] = None

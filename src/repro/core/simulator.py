@@ -84,21 +84,21 @@ class LRUCache(collections.OrderedDict):
 class Breakdown:
     workload: str
     fabric: str
-    compute: float
-    input_load: float
-    mp: float
-    dp: float
-    pp: float
-    stream: float
+    compute: float        # repro: unit[s]
+    input_load: float     # repro: unit[s]
+    mp: float             # repro: unit[s]
+    dp: float             # repro: unit[s]
+    pp: float             # repro: unit[s]
+    stream: float         # repro: unit[s]
     # per-level DP split (informational): raw un-overlapped All-Reduce time
     # spent within wafers vs across the inter-level links.  ``dp`` remains
     # the *exposed* DP time and is what ``total`` counts; on a single wafer
     # dp_intra is the raw AR sum and dp_inter is 0.  ``dp_levels`` splits
     # dp_inter per hierarchy level (wafer↔wafer/rack, rack↔rack/pod, …);
     # empty on a single wafer, one entry per inter level on a cluster.
-    dp_intra: float = 0.0
-    dp_inter: float = 0.0
-    dp_levels: Tuple[float, ...] = ()
+    dp_intra: float = 0.0             # repro: unit[s]
+    dp_inter: float = 0.0             # repro: unit[s]
+    dp_levels: Tuple[float, ...] = () # repro: unit[s]
 
     @property
     def total(self) -> float:
@@ -139,7 +139,7 @@ class Simulator:
     n_wafers: Optional[int] = None                 # 1 ≡ single wafer
     inter_wafer_links: Optional[int] = None        # links per unit per level
     inter_wafer_bw: Optional[float] = None         # B/s per link per dir
-    inter_wafer_latency: Optional[float] = None    # per inter-level step
+    inter_wafer_latency: Optional[float] = None    # repro: unit[s] per step
     inter_topology: Optional[str] = None           # ring | fully_connected
                                                    # | switch (every level)
     hierarchy: Optional[Tuple[int, ...]] = None    # level counts, innermost

@@ -47,7 +47,7 @@ class ClusterSpec:
     inter_topology: str = "ring"
     inter_wafer_links: int = 32
     inter_wafer_bw: float = 400e9
-    inter_wafer_latency: float = 5e-7
+    inter_wafer_latency: float = 5e-7   # repro: unit[s] (per inter-level step)
 
     def __post_init__(self):
         if self.hierarchy is not None:

@@ -629,7 +629,10 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 rep_brs = [sim.run(evals[i][1]) for i in rep_idx]
                 _emit(fabric, wf, shape, hier, topo, sim, evals, rep_of,
                       rep_brs, mem_arr, feas_arr)
-    for fabric in set(r.fabric for r in results):
+    # dict.fromkeys, not set(): first-seen order is deterministic across
+    # processes, so the pareto flag assignment (and the CSV row order any
+    # golden diff sees) cannot depend on PYTHONHASHSEED
+    for fabric in dict.fromkeys(r.fabric for r in results):
         subset = [r for r in results if r.fabric == fabric]
         if memory is not None:
             # infeasible points never make the front; the memory objective

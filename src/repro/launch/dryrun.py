@@ -86,7 +86,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                        "inter_topology": d.inter_topology,
                        "hierarchy": list(d.hierarchy),
                        "execution": d.execution},
-            "time_per_sample_s": d.time_per_sample,
+            "time_per_sample_s": d.time_per_sample_s,
             "memory_bytes_per_npu": d.memory_bytes_per_npu,
             "npu_hbm_bytes": d.npu_hbm_bytes,
             "why": {"n_candidates": d.n_candidates,

@@ -1,0 +1,459 @@
+"""repro.analysis — the static invariant checker suite (ISSUE 7).
+
+Fixture-driven positive/negative/suppressed cases per rule, engine-level
+baseline semantics, the two acceptance mutations (a ``CandidateBatch``
+packed field deleted / a dummy ``Strategy`` field added must fail the
+PARITY checker), and the live-repo self-test: the working tree must pass
+with the committed (empty) baseline.
+
+Everything here is stdlib-only — this file runs on the JAX-free CI core
+lane.
+"""
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_checks
+from repro.analysis.__main__ import DEFAULT_BASELINE
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.engine import (Finding, SourceFile, load_baseline,
+                                   split_baselined, write_baseline)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+PARITY_FILES = (
+    "src/repro/core/placement.py", "src/repro/core/simulator.py",
+    "src/repro/core/batch_engine.py", "src/repro/core/workloads.py",
+    "src/repro/core/specs.py", "src/repro/core/sweep.py")
+
+
+def make_tree(root: Path, files: dict) -> Path:
+    """Write a fixture repo: {relpath: source} + a requirements-core.txt
+    (the layering checker derives its allowed set from it)."""
+    files = {"requirements-core.txt": "numpy>=1.24\npytest>=7.0\n", **files}
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return root
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------
+# engine: suppressions, unit declarations, baseline
+# --------------------------------------------------------------------------
+
+def test_suppression_and_unit_comment_parsing():
+    sf = SourceFile("x.py", "\n".join([
+        "a = 1  # repro: ignore[UNITS]",
+        "b = 2  # repro: ignore[UNITS, DETERMINISM]",
+        "c = 3  # repro: ignore[*]",
+        "d: float = 4.0  # repro: unit[s]",
+        "e = 5",
+    ]))
+    assert sf.is_suppressed("UNITS", 1)
+    assert not sf.is_suppressed("PARITY", 1)
+    assert sf.is_suppressed("DETERMINISM", 2)
+    assert sf.is_suppressed("PARITY", 3)          # wildcard
+    assert sf.declared_unit(4) == "s"
+    assert not sf.is_suppressed("UNITS", 5)
+    assert sf.declared_unit(5) is None
+
+
+def test_baseline_roundtrip_and_stale_detection(tmp_path):
+    f1 = Finding("UNITS", "a.py", 3, "msg one")
+    f2 = Finding("PARITY", "b.py", 9, "msg two")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, [f1, f2])
+    baseline = load_baseline(path)
+    assert baseline == {f1.baseline_key(), f2.baseline_key()}
+    # f1 still fires (at a *different* line — identity ignores lines),
+    # f2 no longer fires (stale), f3 is new
+    f1_moved = Finding("UNITS", "a.py", 30, "msg one")
+    f3 = Finding("UNITS", "c.py", 1, "brand new")
+    new, old, stale = split_baselined([f1_moved, f3], baseline)
+    assert new == [f3]
+    assert old == [f1_moved]
+    assert stale == [f2.baseline_key()]
+    assert load_baseline(tmp_path / "absent.json") == set()
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    make_tree(tmp_path, {"src/repro/core/broken.py": "def f(:\n"})
+    findings, _ = run_checks(tmp_path, rules=("UNITS",))
+    assert any("syntax error" in f.message for f in findings)
+
+
+# --------------------------------------------------------------------------
+# LAYERING
+# --------------------------------------------------------------------------
+
+def test_layering_flags_jax_reachable_from_core(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/model.py": "import numpy as np\nimport jax\n",
+    })
+    findings, _ = run_checks(tmp_path, rules=("LAYERING",))
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.path == "src/repro/core/model.py" and f.line == 2
+    assert "'jax'" in f.message and "repro.core.model" in f.message
+
+
+def test_layering_flags_transitive_edge_with_chain(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/model.py": "from repro.train.optim import OptimConfig\n",
+        "src/repro/train/optim.py": "import flax\nOptimConfig = object\n",
+    })
+    findings, _ = run_checks(tmp_path, rules=("LAYERING",))
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.path == "src/repro/train/optim.py"
+    assert "repro.train.optim <- repro.core.model" in f.message
+
+
+def test_layering_allows_sanctioned_gating(tmp_path):
+    make_tree(tmp_path, {
+        # lazy (function-level), try/ImportError-guarded, and
+        # TYPE_CHECKING imports are the sanctioned jax gating patterns
+        "src/repro/core/model.py": "\n".join([
+            "from typing import TYPE_CHECKING",
+            "try:",
+            "    import jax",
+            "except ImportError:",
+            "    jax = None",
+            "if TYPE_CHECKING:",
+            "    import flax",
+            "def f():",
+            "    import torch",
+            "import numpy as np",
+        ]) + "\n",
+    })
+    findings, _ = run_checks(tmp_path, rules=("LAYERING",))
+    assert findings == []
+
+
+def test_layering_suppression(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/model.py":
+            "import jax  # repro: ignore[LAYERING]\n",
+    })
+    findings, suppressed = run_checks(tmp_path, rules=("LAYERING",))
+    assert findings == []
+    assert rules_of(suppressed) == ["LAYERING"]
+
+
+def test_layering_flags_runtime_importing_analysis(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/train/loop.py": "from repro.analysis import Finding\n",
+        # parallel/serve/kernels likewise; core itself may (it is a root)
+        "src/repro/serve/engine.py": "import repro.analysis.engine\n",
+    })
+    findings, _ = run_checks(tmp_path, rules=("LAYERING",))
+    assert sorted(f.path for f in findings) == [
+        "src/repro/serve/engine.py", "src/repro/train/loop.py"]
+    assert all("must not depend on the static checkers" in f.message
+               for f in findings)
+
+
+def test_layering_missing_requirements_core_is_a_finding(tmp_path):
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/core/x.py").write_text("import numpy\n")
+    findings, _ = run_checks(tmp_path, rules=("LAYERING",))
+    assert any("requirements-core.txt is missing" in f.message
+               for f in findings)
+
+
+# --------------------------------------------------------------------------
+# PARITY — run against copies of the real core files, then mutate them
+# --------------------------------------------------------------------------
+
+def copy_core(tmp_path: Path) -> Path:
+    for rel in PARITY_FILES + ("requirements-core.txt",):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO_ROOT / rel, dst)
+    return tmp_path
+
+
+def test_parity_passes_on_live_core_copy(tmp_path):
+    copy_core(tmp_path)
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert findings == []
+
+
+def test_parity_fails_when_packed_field_deleted(tmp_path):
+    """Acceptance: deleting any one CandidateBatch packed field fails."""
+    copy_core(tmp_path)
+    be = tmp_path / "src/repro/core/batch_engine.py"
+    text = be.read_text()
+    assert '"seq", ' in text
+    be.write_text(text.replace('"seq", ', "", 1))
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert any("'seq'" in f.message and "no longer packed" in f.message
+               for f in findings)
+
+
+def test_parity_fails_when_strategy_grows_dummy_field(tmp_path):
+    """Acceptance: a Strategy axis batch_engine doesn't pack fails —
+    the standing guard for the ROADMAP's ep/sp axes."""
+    copy_core(tmp_path)
+    pl = tmp_path / "src/repro/core/placement.py"
+    text = pl.read_text()
+    anchor = "    wafers: int = 1"
+    assert anchor in text
+    pl.write_text(text.replace(anchor, "    ep: int = 1\n" + anchor, 1))
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert any("Strategy.ep has no packed counterpart" in f.message
+               for f in findings)
+
+
+def test_parity_fails_when_breakdown_field_not_packed(tmp_path):
+    copy_core(tmp_path)
+    sim = tmp_path / "src/repro/core/simulator.py"
+    text = sim.read_text()
+    anchor = "    dp_inter: float = 0.0             # repro: unit[s]\n"
+    assert anchor in text
+    sim.write_text(text.replace(
+        anchor, anchor + "    dp_exposed: float = 0.0  # repro: unit[s]\n", 1))
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert any("Breakdown.dp_exposed" in f.message for f in findings)
+    # ... and the as_dict coverage rule fires too (float field)
+    assert any("missing from as_dict()" in f.message for f in findings)
+
+
+def test_parity_fails_on_unpacked_workload_read(tmp_path):
+    copy_core(tmp_path)
+    wl = tmp_path / "src/repro/core/workloads.py"
+    text = wl.read_text()
+    anchor = "    layers_per_stage = -(-w.n_layers // st.pp)"
+    assert anchor in text
+    wl.write_text(text.replace(
+        anchor, "    _ = w.router_topk\n" + anchor, 1))
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert any("w.router_topk" in f.message for f in findings)
+
+
+def test_parity_missing_module_is_a_finding(tmp_path):
+    copy_core(tmp_path)
+    (tmp_path / "src/repro/core/batch_engine.py").unlink()
+    findings, _ = run_checks(tmp_path, rules=("PARITY",))
+    assert any("expected core module missing" in f.message
+               for f in findings)
+
+
+# --------------------------------------------------------------------------
+# UNITS
+# --------------------------------------------------------------------------
+
+UNITS_FIXTURE = """\
+import dataclasses
+
+@dataclasses.dataclass
+class Timing:
+    decode_time: float          {v1}
+    prefill_time_s: float = 0.0
+    hbm: float = 0.0            # repro: unit[bytes]
+    efficiency: float = 1.0
+    n_requests: int = 0
+"""
+
+
+def test_units_flags_suffixless_float_field(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/timing.py": UNITS_FIXTURE.format(v1="")})
+    findings, _ = run_checks(tmp_path, rules=("UNITS",))
+    assert len(findings) == 1
+    assert "Timing.decode_time" in findings[0].message
+    assert findings[0].line == 5
+
+
+def test_units_accepts_declaration_and_suppression(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/a.py": UNITS_FIXTURE.format(v1="# repro: unit[s]"),
+        "src/repro/core/b.py":
+            UNITS_FIXTURE.format(v1="# repro: ignore[UNITS]"),
+    })
+    findings, suppressed = run_checks(tmp_path, rules=("UNITS",))
+    assert findings == []
+    assert len(suppressed) == 1 and suppressed[0].path == "src/repro/core/b.py"
+
+
+def test_units_flags_csv_header_token(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/rows.py":
+            'CSV_HEADER = "workload,mp,decode_time,total_s"\n'})
+    findings, _ = run_checks(tmp_path, rules=("UNITS",))
+    assert len(findings) == 1
+    assert "'decode_time'" in findings[0].message
+
+
+def test_units_flags_mixed_unit_arithmetic(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/mix.py": "\n".join([
+            "def f(t_s, n_bytes, u_s, link_bw):",
+            "    bad = t_s + n_bytes",            # s + bytes: flagged
+            "    ok = t_s + u_s",                 # same unit
+            "    ok2 = t_s + n_bytes / link_bw",  # division converts
+            "    return bad, ok, ok2",
+        ]) + "\n"})
+    findings, _ = run_checks(tmp_path, rules=("UNITS",))
+    assert len(findings) == 1
+    assert findings[0].line == 2 and "s vs bytes" in findings[0].message
+
+
+def test_units_only_applies_to_core(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/serve/timing.py": UNITS_FIXTURE.format(v1="")})
+    findings, _ = run_checks(tmp_path, rules=("UNITS",))
+    assert findings == []
+
+
+# --------------------------------------------------------------------------
+# DETERMINISM
+# --------------------------------------------------------------------------
+
+def test_determinism_flags_unseeded_rng(tmp_path):
+    make_tree(tmp_path, {
+        "examples/demo.py": "\n".join([
+            "import random",
+            "import numpy as np",
+            "x = random.random()",                 # global RNG
+            "r = random.Random()",                 # unseeded instance
+            "g = np.random.default_rng()",         # unseeded generator
+            "y = np.random.rand(3)",               # legacy global API
+            "ok = random.Random(0)",
+            "ok2 = np.random.default_rng(1234)",
+        ]) + "\n"})
+    findings, _ = run_checks(tmp_path, rules=("DETERMINISM",))
+    assert sorted(f.line for f in findings) == [3, 4, 5, 6]
+
+
+def test_determinism_wall_clock_only_in_core(tmp_path):
+    src = "import time\nt = time.perf_counter()\n"
+    make_tree(tmp_path, {
+        "src/repro/core/model.py": src,
+        "benchmarks/bench.py": src,     # instrumentation outside core: fine
+    })
+    findings, _ = run_checks(tmp_path, rules=("DETERMINISM",))
+    assert [f.path for f in findings] == ["src/repro/core/model.py"]
+
+
+def test_determinism_flags_set_iteration(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/rows.py": "\n".join([
+            "def rows(results):",
+            "    for fabric in set(r.fabric for r in results):",  # flagged
+            "        pass",
+            "    for fabric in dict.fromkeys(r.fabric for r in results):",
+            "        pass",
+            "    for fabric in sorted(set(r.fabric for r in results)):",
+            "        pass",
+            "    return [x for x in {1, 2}]",                     # flagged
+        ]) + "\n"})
+    findings, _ = run_checks(tmp_path, rules=("DETERMINISM",))
+    assert sorted(f.line for f in findings) == [2, 8]
+
+
+def test_determinism_suppression(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/core/model.py":
+            "import time\n"
+            "t = time.perf_counter()  # repro: ignore[DETERMINISM]\n"})
+    findings, suppressed = run_checks(tmp_path, rules=("DETERMINISM",))
+    assert findings == [] and len(suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# DEPRECATION
+# --------------------------------------------------------------------------
+
+def test_deprecation_flags_legacy_simulator_kwargs(tmp_path):
+    make_tree(tmp_path, {
+        "examples/demo.py": "\n".join([
+            "from repro.core.simulator import Simulator",
+            "from repro.core.specs import FabricSpec",
+            "bad = Simulator('FRED-A', mesh_shape=(5, 4), n_wafers=2)",
+            "ok = Simulator('FRED-A', spec=FabricSpec(fred_shape=(4, 5)))",
+        ]) + "\n"})
+    findings, _ = run_checks(tmp_path, rules=("DEPRECATION",))
+    assert len(findings) == 2        # one per legacy kwarg on line 3
+    assert all(f.line == 3 for f in findings)
+    kwargs = {f.message.split("(")[1].split("=")[0] for f in findings}
+    assert kwargs == {"mesh_shape", "n_wafers"}
+
+
+def test_deprecation_flags_bare_strategy_tuple(tmp_path):
+    make_tree(tmp_path, {
+        "src/repro/parallel/wire.py": "\n".join([
+            "def f(pcfg, decision):",
+            "    a = pcfg.replace(auto_strategy=(2, 4, 1, 1, 'FRED-A'))",
+            "    pcfg.auto_strategy = (2, 4, 1, 1, 'FRED-A')",
+            "    b = pcfg.replace(auto_strategy=decision)",
+            "    return a, b",
+        ]) + "\n"})
+    findings, _ = run_checks(tmp_path, rules=("DEPRECATION",))
+    assert sorted(f.line for f in findings) == [2, 3]
+
+
+def test_deprecation_suppression(tmp_path):
+    make_tree(tmp_path, {
+        "examples/demo.py":
+            "from repro.core.simulator import Simulator\n"
+            "s = Simulator('FRED-A', n_io=18)  # repro: ignore[DEPRECATION]\n"
+    })
+    findings, suppressed = run_checks(tmp_path, rules=("DEPRECATION",))
+    assert findings == [] and len(suppressed) == 1
+
+
+# --------------------------------------------------------------------------
+# live repo self-test + CLI
+# --------------------------------------------------------------------------
+
+def test_live_repo_passes_with_committed_baseline():
+    """The working tree must be clean under all five rules modulo the
+    committed baseline — the same check CI runs."""
+    findings, _ = run_checks(REPO_ROOT)
+    baseline = load_baseline(REPO_ROOT / DEFAULT_BASELINE)
+    new, _, _ = split_baselined(findings, baseline)
+    assert new == [], "new invariant findings:\n" + "\n".join(
+        f.render() for f in new)
+
+
+def test_committed_baseline_is_empty():
+    """ISSUE 7 ships with nothing grandfathered; keep it that way (fix or
+    `# repro: ignore[...]` instead of baselining)."""
+    data = json.loads((REPO_ROOT / DEFAULT_BASELINE).read_text())
+    assert data["findings"] == []
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    root = make_tree(tmp_path, {
+        "src/repro/core/model.py": "import jax\n"})
+    args = ["--check", "--root", str(root), "--rules", "LAYERING"]
+    assert cli_main(args) == 1
+    out = capsys.readouterr().out
+    assert "src/repro/core/model.py:1: LAYERING" in out
+    # fix it -> exit 0; --json report written either way
+    (root / "src/repro/core/model.py").write_text("import numpy\n")
+    report = tmp_path / "report.json"
+    assert cli_main(args + ["--json", str(report)]) == 0
+    assert json.loads(report.read_text())["ok"] is True
+
+
+def test_cli_regen_baseline_grandfathers_findings(tmp_path):
+    root = make_tree(tmp_path, {
+        "src/repro/core/model.py": "import jax\n"})
+    baseline = root / "baseline.json"
+    args = ["--check", "--root", str(root), "--rules", "LAYERING",
+            "--baseline", str(baseline)]
+    assert cli_main(args + ["--regen-baseline"]) == 0
+    # grandfathered now -> clean exit; a *new* finding still fails
+    assert cli_main(args) == 0
+    (root / "src/repro/core/model.py").write_text("import jax\nimport flax\n")
+    assert cli_main(args) == 1
