@@ -518,6 +518,126 @@ def bench_autostrategy(goldens: str = ""):
 
 
 # --------------------------------------------------------------------------
+# epsweep — expert/sequence-parallel axes + overlap-aware cost model gate
+# --------------------------------------------------------------------------
+
+# the 7-axis parity grid: a real MoE workload (mixtral-8x7b, whose
+# Workload carries a2a_bytes_per_sample_layer/expert_param_fraction) over
+# (fabric × shape × wafers × strategy × ep × sp), re-run per overlap
+# fraction — every point exercises the All-to-All kernels and the
+# exposed-comm chain on both engines.
+EPSWEEP_ARCH = "mixtral-8x7b"
+EPSWEEP_OVERLAPS = (0.0, 0.3)
+
+
+def bench_epsweep(budget: float = 0.0, goldens: str = ""):
+    """The expert-parallel CI gate: batched↔scalar bit parity over every
+    (ep × sp × all_to_all × overlap) sweep point, then the MoE
+    auto-strategy decisions (both :data:`repro.core.autostrategy
+    .MOE_ARCHS` entries must choose ``ep > 1``) diffed against
+    ``tests/goldens/epsweep.json``; writes
+    ``artifacts/epsweep_decisions.csv``.  ``budget`` (seconds, 0 = off)
+    gates the batched wall time across all overlap fractions."""
+    from repro.core.autostrategy import (DECISION_CSV_HEADER, EP_SWEEP_KW,
+                                         MOE_ARCHS, check_goldens,
+                                         decision_csv_rows, decision_table)
+    from repro.configs.registry import get_config
+    from repro.core.sweep import sweep
+    from repro.core.workloads import (MemoryModel, adapter_n_layers,
+                                      from_model_config)
+    from repro.models.config import SHAPES_BY_NAME
+
+    cfg = get_config(EPSWEEP_ARCH)
+    shape = SHAPES_BY_NAME["train_4k"]
+
+    def wl(st):
+        return from_model_config(cfg, shape, st, execution="stationary")
+
+    kw = dict(n_layers=adapter_n_layers(cfg), max_wafers=2,
+              memory=MemoryModel(), **EP_SWEEP_KW)
+    sweep(wl, 64, **kw)                        # warm imports/allocators
+    t_batched = 0.0
+    for overlap in EPSWEEP_OVERLAPS:
+        okw = dict(kw, comm_overlap_fraction=overlap)
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = sweep(wl, 64, engine="batched", **okw)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        t_batched += best
+        n_ep = sum(1 for r in res if r.strategy.ep > 1)
+        n_sp = sum(1 for r in res if r.strategy.sp > 1)
+        emit(f"epsweep[batched|overlap={overlap}]", best * 1e6,
+             f"points={len(res)};ep_points={n_ep};sp_points={n_sp};"
+             f"points_per_sec={len(res)/best:.0f}")
+        # batched-vs-scalar parity: the A2A structure memo, the masked
+        # EP groups and the exposed-comm chain must reproduce the scalar
+        # walk bit-for-bit on every new axis
+        t0 = time.perf_counter()
+        oracle = sweep(wl, 64, engine="scalar", **okw)
+        emit(f"epsweep[scalar|overlap={overlap}]",
+             (time.perf_counter() - t0) * 1e6, f"points={len(oracle)}")
+        mismatches = sum(
+            1 for ra, rb in zip(oracle, res)
+            if (ra.fabric, ra.shape, ra.strategy, ra.n_wafers) !=
+               (rb.fabric, rb.shape, rb.strategy, rb.n_wafers)
+            or ra.breakdown.as_dict() != rb.breakdown.as_dict()
+            or ra.breakdown.dp_levels != rb.breakdown.dp_levels
+            or (ra.pareto, ra.feasible) != (rb.pareto, rb.feasible))
+        if len(oracle) != len(res) or mismatches:
+            print(f"epsweep[PARITY],0.0,{mismatches} mismatching points "
+                  f"at overlap={overlap} (scalar {len(oracle)} vs "
+                  f"batched {len(res)})", file=sys.stderr)
+            sys.exit("epsweep: batched engine diverged from the scalar "
+                     "oracle on the ep/sp/overlap axes — a bit-parity "
+                     "regression in core/batch_engine.py")
+        emit(f"epsweep[parity|overlap={overlap}]", 0.0,
+             f"batched==scalar over {len(res)} points")
+    # MoE decisions: the whole point of the new axes — both MoE registry
+    # entries must elect expert parallelism once it is searchable
+    box = []
+
+    def run():
+        box[:] = decision_table(MOE_ARCHS, **EP_SWEEP_KW)
+    us = _time(run, iters=1)
+    decisions = box
+    emit("epsweep_decisions", us, f"models={len(decisions)}")
+    for d in decisions:
+        emit(f"epsweep[{d.arch}]", 0.0,
+             f"chosen={d.strategy}@{d.fabric};execution={d.execution};"
+             f"ep={d.ep};sp={d.sp};"
+             f"mem_GiB={d.memory_bytes_per_npu/2**30:.2f};"
+             f"t_per_sample_us={d.time_per_sample_s*1e6:.3f}")
+    path = _artifacts() / "epsweep_decisions.csv"
+    path.write_text("\n".join([DECISION_CSV_HEADER] +
+                              decision_csv_rows(decisions)) + "\n")
+    emit("epsweep[csv]", 0.0, f"{path} rows={len(decisions)}")
+    no_ep = [d.arch for d in decisions if d.ep <= 1]
+    if no_ep:
+        print(f"epsweep[EP-REGRESSION],0.0,{','.join(no_ep)} chose ep=1",
+              file=sys.stderr)
+        sys.exit("epsweep: MoE model(s) no longer elect expert "
+                 "parallelism — the EP cost/memory model regressed "
+                 "(simulator EP phase, ep_share, or the sweep axes)")
+    if goldens:
+        errors = check_goldens(decisions, goldens)
+        if errors:
+            for e in errors:
+                print(f"epsweep[GOLDEN-DIFF],0.0,{e}", file=sys.stderr)
+            sys.exit("epsweep: MoE decisions diverge from "
+                     f"{goldens} — if the cost-model change is intended, "
+                     "regenerate with tests/gen_epsweep_golden.py")
+        emit("epsweep[goldens]", 0.0, f"match {goldens}")
+    if budget and t_batched > budget:
+        print(f"epsweep[BUDGET],0.0,batched {t_batched:.3f}s > {budget}s",
+              file=sys.stderr)
+        sys.exit("epsweep: batched ep/sp sweep blew the CI wall-time "
+                 "budget — a perf regression in the A2A/overlap kernels "
+                 "of core/batch_engine.py or core/sweep.py")
+
+
+# --------------------------------------------------------------------------
 # Table III — FRED switch HW overhead
 # --------------------------------------------------------------------------
 
@@ -665,6 +785,7 @@ BENCHES = {
     "hiersweep": bench_hiersweep,
     "faultsweep": bench_faultsweep,
     "autostrategy": bench_autostrategy,
+    "epsweep": bench_epsweep,
     "table3": bench_table3,
     "routing": bench_routing,
     "collectives": bench_collectives,
@@ -677,9 +798,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default="")
     ap.add_argument("--goldens", type=str, default="",
-                    help="autostrategy only: diff chosen strategies "
-                         "against this JSON (tests/goldens/"
-                         "autostrategy.json); exit non-zero on mismatch")
+                    help="autostrategy/faultsweep/epsweep: diff chosen "
+                         "strategies against this JSON (tests/goldens/"
+                         "<bench>.json); exit non-zero on mismatch")
     ap.add_argument("--sweepperf-full", action="store_true",
                     help="sweepperf only: also time the scalar engine on "
                          "the 512-NPU sweep (tens of seconds — the "
@@ -699,6 +820,13 @@ def main() -> None:
                          "checked; --goldens also diffs the degraded "
                          "decisions against tests/goldens/"
                          "faultsweep.json)")
+    ap.add_argument("--epsweep-budget", type=float, default=0.0,
+                    help="epsweep only: fail if the batched MoE ep/sp "
+                         "sweep (summed over the overlap fractions) "
+                         "exceeds this many seconds (CI gate; parity vs "
+                         "the scalar oracle and the ep>1 MoE decisions "
+                         "are always checked; --goldens diffs against "
+                         "tests/goldens/epsweep.json)")
     ap.add_argument("--hiersweep-budget", type=float, default=0.0,
                     help="hiersweep only: fail if the batched 64-NPU × "
                          "4-wafer × {ring,fully_connected,switch} × "
@@ -724,6 +852,9 @@ def main() -> None:
         elif n == "faultsweep":
             bench_faultsweep(budget=args.faultsweep_budget,
                              goldens=args.goldens)
+        elif n == "epsweep":
+            bench_epsweep(budget=args.epsweep_budget,
+                          goldens=args.goldens)
         else:
             BENCHES[n]()
 

@@ -3,10 +3,13 @@
 PRs 4–6 hold ``batch_engine.run_batch`` bit-identical to
 ``Simulator.run`` and CI gates re-prove it dynamically (sweepperf /
 hiersweep / faultsweep goldens) — but only over the axes the sweeps
-*exercise*.  A new ``Strategy`` or ``Workload`` axis (the ROADMAP's
-``ep``/``sp``) that ``CandidateBatch`` does not pack would sail through
-those gates and silently diverge at sweep time.  This checker pins the
-coupling statically via :data:`PACK_CONTRACT`, the explicit map from each
+*exercise*.  A new ``Strategy`` or ``Workload`` axis that
+``CandidateBatch`` does not pack would sail through
+those gates and silently diverge at sweep time.  (The ``ep``/``sp`` axes
+landed exactly this way: this check went red the moment CandidateBatch
+packed them and green once the contract below named their scalar twins.)
+This checker pins the coupling statically via :data:`PACK_CONTRACT`, the
+explicit map from each
 ``CandidateBatch`` packed array to the scalar-side field it mirrors.
 
 When an axis is added on either side, this map (and the parity tests the
@@ -58,6 +61,8 @@ PACK_CONTRACT: Dict[str, Tuple[str, str]] = {
     "dp": ("Strategy", "dp"),
     "pp": ("Strategy", "pp"),
     "wafers": ("Strategy", "wafers"),
+    "ep": ("Strategy", "ep"),
+    "sp": ("Strategy", "sp"),
     "n_layers": ("Workload", "n_layers"),
     "mp_ar": ("Workload", "mp_allreduce_per_layer"),
     "samples": ("Workload", "samples_per_dp"),
@@ -68,6 +73,8 @@ PACK_CONTRACT: Dict[str, Tuple[str, str]] = {
     "abps": ("Workload", "act_bytes_per_sample"),
     "pbt": ("Workload", "param_bytes_total"),
     "kv_layer": ("Workload", "kv_bytes_per_sample_layer"),
+    "a2a_layer": ("Workload", "a2a_bytes_per_sample_layer"),
+    "expert_frac": ("Workload", "expert_param_fraction"),
     "streaming": ("Workload", "execution"),
 }
 

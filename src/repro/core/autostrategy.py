@@ -48,6 +48,13 @@ if TYPE_CHECKING:
 
 DEFAULT_FABRICS = ("baseline", "FRED-C", "FRED-D")
 
+# The MoE registry entries the epsweep CI gate pins (both must choose
+# ep > 1) and the expert/sequence axes their decision sweep searches —
+# shared by benchmarks.run --only epsweep and tests/gen_epsweep_golden.py
+# so the gate and its golden generator can never drift apart.
+MOE_ARCHS = ("mixtral-8x7b", "arctic-480b")
+EP_SWEEP_KW = dict(ep_candidates=(1, 2, 4, 8), sp_candidates=(1, 2))
+
 
 class InfeasibleModelError(RuntimeError):
     """No (fabric × shape × wafers × strategy × execution) candidate fits
@@ -94,12 +101,27 @@ class AutoStrategyDecision:
     def wafers(self) -> int:
         return self.strategy.wafers
 
+    @property
+    def ep(self) -> int:
+        return self.strategy.ep
+
+    @property
+    def sp(self) -> int:
+        return self.strategy.sp
+
     def golden(self) -> Dict[str, object]:
-        """The fields the CI strategy-regression gate pins."""
-        return {"mp": self.mp, "dp": self.dp, "pp": self.pp,
-                "wafers": self.wafers, "fabric": self.fabric,
-                "inter_topology": self.inter_topology,
-                "execution": self.execution}
+        """The fields the CI strategy-regression gate pins.  ep/sp appear
+        only when > 1, so goldens from the 5-axis era stay byte-identical
+        for dense models while MoE decisions pin their EP degree."""
+        out = {"mp": self.mp, "dp": self.dp, "pp": self.pp,
+               "wafers": self.wafers, "fabric": self.fabric,
+               "inter_topology": self.inter_topology,
+               "execution": self.execution}
+        if self.ep > 1:
+            out["ep"] = self.ep
+        if self.sp > 1:
+            out["sp"] = self.sp
+        return out
 
 
 def _pick(front: Sequence[SweepResult]) -> SweepResult:
@@ -112,7 +134,8 @@ def _pick(front: Sequence[SweepResult]) -> SweepResult:
         r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers,
         TOPOLOGY_CODES.get(r.inter_topology, -1), len(r.hierarchy),
         r.fabric, r.hierarchy, r.shape,
-        (r.strategy.mp, r.strategy.dp, r.strategy.pp)))
+        (r.strategy.mp, r.strategy.dp, r.strategy.pp,
+         r.strategy.ep, r.strategy.sp)))
 
 
 def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
@@ -126,7 +149,11 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
                     moments_dtype: str = "float32",
                     remat: str = "full",
                     min_utilization: float = 0.9,
-                    prune_symmetric: bool = True) -> AutoStrategyDecision:
+                    prune_symmetric: bool = True,
+                    ep_candidates: Sequence[int] = (1,),
+                    sp_candidates: Sequence[int] = (1,),
+                    comm_overlap_fraction: float = 0.0
+                    ) -> AutoStrategyDecision:
     """Return the simulator-chosen, memory-feasible strategy for a cell.
 
     Weight-stationary execution is preferred (paper Sec. III-A);
@@ -161,7 +188,10 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
                         max_wafers=max_wafers,
                         inter_topologies=inter_topologies,
                         max_levels=max_levels, memory=mem,
-                        prune_symmetric=prune_symmetric)
+                        prune_symmetric=prune_symmetric,
+                        ep_candidates=ep_candidates,
+                        sp_candidates=sp_candidates,
+                        comm_overlap_fraction=comm_overlap_fraction)
         n_candidates += len(results)
         feasible = [r for r in results if r.feasible]
         n_infeasible += len(results) - len(feasible)
@@ -194,7 +224,7 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
 # --------------------------------------------------------------------------
 
 DECISION_CSV_HEADER = (
-    "arch,shape,fabric,shape_a,shape_b,mp,dp,pp,wafers,hierarchy,"
+    "arch,shape,fabric,shape_a,shape_b,mp,dp,pp,ep,sp,wafers,hierarchy,"
     "inter_topology,execution,remat,"
     "master,moments_dtype,time_per_sample_s,memory_bytes_per_npu,"
     "npu_hbm_bytes,n_candidates,n_infeasible,n_dominated,sweep_s")
@@ -206,7 +236,7 @@ def decision_csv_rows(decisions: Sequence[AutoStrategyDecision]) -> List[str]:
         rows.append(
             f"{d.arch},{d.shape},{d.fabric},"
             f"{d.wafer_shape[0]},{d.wafer_shape[1]},"
-            f"{d.mp},{d.dp},{d.pp},{d.wafers},"
+            f"{d.mp},{d.dp},{d.pp},{d.ep},{d.sp},{d.wafers},"
             f"{'x'.join(map(str, d.hierarchy))},{d.inter_topology},"
             f"{d.execution},{d.remat},"
             f"{int(d.master)},{d.moments_dtype},"

@@ -42,8 +42,16 @@ Term map onto the paper's Sec. VII cost model (and the scalar code):
     where ``n == rows·cols``); FRED trees: 4 fabric traversals of
     (in-network: halved) traffic (Sec. V/VIII) — with ``dp·pp/wafers``
     groups contending for the spine;
+  * **EP comm** (MoE lanes with ``ep > 1``): expert dispatch/combine
+    All-to-All over the ep-sized strided DP subgroup (stride mp·pp) —
+    the same memoized structural tables serve the A2A, whose Table-I
+    traffic equals the All-Gather's; one per-layer MP All-Reduce is
+    subsumed (``mp_ar − 1``), and a ``comm_overlap_fraction`` share of
+    the compute hides EP then MP time (``max(0, comm − overlap)`` per
+    phase, identity ops at the 0.0 default);
   * **PP comm** (Sec. VII-C): boundary activation transfer per
-    microbatch, exposed for the ``M + S − 1`` bubble slots;
+    microbatch (SP shards the boundary a further ``sp``-way), exposed
+    for the ``M + S − 1`` bubble slots;
   * **DP comm** (Sec. VII-B): per-layer gradient All-Reduce — on
     clusters the hierarchical RS(intra) → per-inter-level collectives →
     AG(intra) decomposition of core/cluster.py, with the level topology
@@ -220,16 +228,17 @@ class CandidateBatch:
     wafer count and reuses it across every (fabric, shape) it visits.
     """
 
-    _ARRAYS = ("mp", "dp", "pp", "wafers", "n_layers", "mp_ar", "samples",
-               "minibatch", "seq", "params_layer", "flops", "abps", "pbt",
-               "kv_layer", "streaming")
+    _ARRAYS = ("mp", "dp", "pp", "wafers", "ep", "sp", "n_layers", "mp_ar",
+               "samples", "minibatch", "seq", "params_layer", "flops",
+               "abps", "pbt", "kv_layer", "a2a_layer", "expert_frac",
+               "streaming")
     __slots__ = ("workloads",) + _ARRAYS
 
     def __init__(self, workloads: Sequence[Workload]):
         self.workloads = list(workloads)
         n = len(self.workloads)
-        ints = np.empty((9, n), dtype=np.int64)
-        flts = np.empty((5, n), dtype=np.float64)
+        ints = np.empty((11, n), dtype=np.int64)
+        flts = np.empty((7, n), dtype=np.float64)
         streaming = np.empty(n, dtype=bool)
         for i, w in enumerate(self.workloads):
             st = w.strategy
@@ -237,21 +246,26 @@ class CandidateBatch:
             ints[1, i] = st.dp
             ints[2, i] = st.pp
             ints[3, i] = st.wafers
-            ints[4, i] = w.n_layers
-            ints[5, i] = w.mp_allreduce_per_layer
-            ints[6, i] = w.samples_per_dp
-            ints[7, i] = w.minibatch
-            ints[8, i] = w.seq
+            ints[4, i] = st.ep
+            ints[5, i] = st.sp
+            ints[6, i] = w.n_layers
+            ints[7, i] = w.mp_allreduce_per_layer
+            ints[8, i] = w.samples_per_dp
+            ints[9, i] = w.minibatch
+            ints[10, i] = w.seq
             flts[0, i] = w.params_per_layer
             flts[1, i] = w.flops_fwd_per_sample_layer
             flts[2, i] = w.act_bytes_per_sample
             flts[3, i] = w.param_bytes_total
             flts[4, i] = w.kv_bytes_per_sample_layer
+            flts[5, i] = w.a2a_bytes_per_sample_layer
+            flts[6, i] = w.expert_param_fraction
             streaming[i] = w.execution == "streaming"
-        (self.mp, self.dp, self.pp, self.wafers, self.n_layers, self.mp_ar,
-         self.samples, self.minibatch, self.seq) = ints
+        (self.mp, self.dp, self.pp, self.wafers, self.ep, self.sp,
+         self.n_layers, self.mp_ar, self.samples, self.minibatch,
+         self.seq) = ints
         (self.params_layer, self.flops, self.abps, self.pbt,
-         self.kv_layer) = flts
+         self.kv_layer, self.a2a_layer, self.expert_frac) = flts
         self.streaming = streaming
 
     def __len__(self) -> int:
@@ -552,8 +566,11 @@ class BatchEngine:
         npw = (sim.cluster.npus_per_wafer if sim.cluster is not None
                else sim.n_npus)
         per_wafer_arr = b.mp * b.pp * (b.dp // np.maximum(b.wafers, 1))
+        dpw_arr = b.dp // np.maximum(b.wafers, 1)
         bad = (per_wafer_arr > npw) | \
-            (b.pp > b.n_layers) | (b.dp % np.maximum(b.wafers, 1) != 0)
+            (b.pp > b.n_layers) | (b.dp % np.maximum(b.wafers, 1) != 0) | \
+            ((b.ep > 1) & (dpw_arr % np.maximum(b.ep, 1) != 0)) | \
+            ((b.sp > 1) & (b.mp % np.maximum(b.sp, 1) != 0))
         if sim.cluster is None:
             bad |= b.wafers > 1
         else:
@@ -588,6 +605,14 @@ class BatchEngine:
                 raise ValueError(
                     f"{st} has pp={st.pp} stages but {w.name} only "
                     f"{w.n_layers} layers — stages must hold whole layers")
+            if st.ep > 1 and st.dp_per_wafer % st.ep != 0:
+                raise ValueError(
+                    f"{st}: ep={st.ep} must divide the per-wafer DP degree "
+                    f"{st.dp_per_wafer} — EP groups stay within a wafer")
+            if st.sp > 1 and st.mp % st.sp != 0:
+                raise ValueError(
+                    f"{st}: sp={st.sp} must divide mp={st.mp} — sequence "
+                    f"parallelism splits activations across MP peers")
 
     # ---- main ----------------------------------------------------------------
     def run_batch(self, batch: Union[CandidateBatch, Sequence[Workload]],
@@ -637,18 +662,40 @@ class BatchEngine:
         compute = (fwd_stage + bwd_stage) * bubble
 
         # ---- MP comm (Sec. VII-B): per-layer All-Reduce, fwd + bwd ---------
+        # with EP active the expert-dispatch All-to-All subsumes the FFN
+        # All-Reduce — one fewer MP sync per layer (scalar: mp_ar − 1)
+        ep_mask = (b.ep > 1) & (b.a2a_layer > 0.0)
+        mp_ar = np.where(ep_mask & (b.mp_ar > 0), b.mp_ar - 1, b.mp_ar)
         act_bytes = b.abps * b.samples
-        mp_mask = (mp > 1) & (b.mp_ar > 0)
+        mp_mask = (mp > 1) & (mp_ar > 0)
         mp_conc = np.maximum(1, (dp * pp) // wafers)
         per_layer = self._wafer_coll("all_reduce", mp, np.ones_like(mp),
                                      mp_conc, act_bytes, needed=mp_mask)
         mp_time = np.where(mp_mask,
-                           per_layer * b.mp_ar * 2 * layers * bubble, 0.0)
+                           per_layer * mp_ar * 2 * layers * bubble, 0.0)
+
+        # ---- EP comm: expert dispatch/combine All-to-All -------------------
+        # EP groups are ep consecutive DP peers (stride mp·pp), always
+        # within one wafer — the same strided structural tables as MP/DP
+        # serve the All-to-All per lane
+        a2a_bytes = b.a2a_layer * b.samples
+        ep_conc = np.maximum(1, (mp * pp * dp) // (b.ep * wafers))
+        per_layer_ep = self._wafer_coll("all_to_all", b.ep, mp * pp,
+                                        ep_conc, a2a_bytes, needed=ep_mask)
+        ep_raw = np.where(ep_mask,
+                          per_layer_ep * 2 * 2 * layers * bubble, 0.0)
+
+        # ---- compute/comm overlap (EP first, then MP) ----------------------
+        overlappable = sim.comm_overlap_fraction * compute
+        ep_time = np.maximum(0.0, ep_raw - overlappable)
+        rem = np.maximum(0.0, overlappable - ep_raw)
+        mp_time = np.maximum(0.0, mp_time - rem)
+        exposed_comm = mp_time + ep_time
 
         # ---- PP comm (Sec. VII-C): boundary transfer per microbatch --------
         pp_bw = (sim.mesh.link_bw if sim.mesh is not None
                  else sim.fred.config.npu_l1_bw)
-        per_mb = 2 * ((act_bytes / mb) / pp_bw)
+        per_mb = 2 * ((act_bytes / mb / b.sp) / pp_bw)
         pp_time = np.where(pp > 1, per_mb * (mb + pp - 1), 0.0)
 
         # ---- DP comm (Sec. VII-B, hierarchical on clusters) ----------------
@@ -732,7 +779,7 @@ class BatchEngine:
         # hottest remaining per-point Python in a 500+-NPU sweep
         cols = [a.tolist() for a in
                 (compute, input_load, mp_time, dp_time, pp_time,
-                 stream_time, dp_intra, dp_inter)]
+                 stream_time, dp_intra, dp_inter, ep_time, exposed_comm)]
         l1s, l2s = lvl1.tolist(), lvl2.tolist()
         nls = n_lvl.tolist()
         fabric = sim.fabric_name
@@ -748,7 +795,8 @@ class BatchEngine:
                 "stream": cols[5][i], "dp_intra": cols[6][i],
                 "dp_inter": cols[7][i],
                 "dp_levels": (() if nl == 0 else
-                              (l1s[i],) if nl == 1 else (l1s[i], l2s[i]))}
+                              (l1s[i],) if nl == 1 else (l1s[i], l2s[i])),
+                "ep_s": cols[8][i], "exposed_comm_s": cols[9][i]}
             out.append(br)
         return out
 
@@ -825,9 +873,14 @@ def memory_bytes_batch(batch: Union[CandidateBatch, Sequence[Workload]],
     stationary = ~streaming
     layers = -(-b.n_layers // b.pp)
     buffers = 3 if mem.training else 2
+    # expert share of the params divides by ep (scalar: ep_share factor;
+    # (1−f)+f is not bitwise 1.0, so inactive lanes select the literal)
+    ep_on = (b.ep > 1) & (b.expert_frac != 0.0)
+    ep_share = np.where(ep_on,
+                        (1.0 - b.expert_frac) + b.expert_frac / b.ep, 1.0)
     resident = np.where(streaming,
-                        buffers * b.params_layer / mp,
-                        b.params_layer * layers / mp)
+                        buffers * b.params_layer * ep_share / mp,
+                        b.params_layer * ep_share * layers / mp)
     opt_per_param = optimizer_bytes_per_param(mem.master, mem.moments_dtype)
     if mem.training:
         opt_bytes = np.where(stationary, resident * opt_per_param, 0.0)
@@ -839,7 +892,7 @@ def memory_bytes_batch(batch: Union[CandidateBatch, Sequence[Workload]],
 
     mult = ACT_REMAT_MULT[mem.remat] if mem.training else 1.0
     act_layers = layers if mem.training else np.ones_like(layers)
-    act_bytes = mult * act_layers * b.abps * np.maximum(b.seq, 1) / mp
+    act_bytes = mult * act_layers * b.abps * np.maximum(b.seq, 1) / mp / b.sp
 
     kv_bytes = np.zeros_like(resident)
     if not mem.training:

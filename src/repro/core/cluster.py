@@ -343,12 +343,32 @@ class WaferCluster:
             local = next(iter(by_wafer.values()))
             return (self._wafer_coll(kind, local, nbytes, concurrent_groups),
                     zeros)
+        inter_conc = (concurrent_groups if inter_concurrent_groups is None
+                      else inter_concurrent_groups)
+        if kind == "all_to_all":
+            # no reduction involved, so no RS/AG sandwich: each member
+            # exchanges the wafer-local k/n share of its payload inside
+            # the wafer, and the full payload crosses each spanned level
+            # (same full-payload-per-level convention as ``_level_times``)
+            n = len(group)
+            widest = max(by_wafer.values(), key=len)
+            k = len(widest)
+            intra = 0.0
+            if k > 1:
+                intra = self._wafer_coll("all_to_all", widest,
+                                         nbytes * k / n, concurrent_groups)
+            spans = self.level_spans(by_wafer.keys())
+            levels_t = tuple(
+                level_collective_time(lvl.topology, "all_to_all", s, nbytes,
+                                      lvl.link.agg_bw, lvl.link.latency,
+                                      inter_conc) if s > 1 else 0.0
+                for lvl, s in zip(self.levels, spans))
+            return intra, levels_t
         if kind != "all_reduce":
             raise NotImplementedError(
                 f"cross-wafer {kind!r} not modeled: placement keeps MP/PP "
-                f"within a wafer, only the DP All-Reduce spans wafers")
-        inter_conc = (concurrent_groups if inter_concurrent_groups is None
-                      else inter_concurrent_groups)
+                f"within a wafer, only the DP All-Reduce and the expert "
+                f"All-to-All span wafers")
         widest = max(by_wafer.values(), key=len)
         k = len(widest)
         intra = 0.0

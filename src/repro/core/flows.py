@@ -125,7 +125,8 @@ def endpoint_traffic_bytes(kind: str, n: int, nbytes: float) -> float:
         return (n - 1) / n * nbytes
     if kind in ("reduce", "multicast", "unicast"):
         return nbytes
-    raise KeyError(kind)
+    raise ValueError(f"unknown collective kind {kind!r}; "
+                     f"expected one of {sorted(COLLECTIVES)}")
 
 
 def innetwork_traffic_bytes(kind: str, n: int, nbytes: float) -> float:
@@ -139,4 +140,5 @@ def innetwork_traffic_bytes(kind: str, n: int, nbytes: float) -> float:
         return (n - 1) / n * nbytes
     if kind in ("reduce", "multicast", "unicast"):
         return nbytes
-    raise KeyError(kind)
+    raise ValueError(f"unknown collective kind {kind!r}; "
+                     f"expected one of {sorted(COLLECTIVES)}")

@@ -27,6 +27,12 @@ class Strategy:
     pp: int
     wafers: int = 1        # wafer axis: DP replicas spread over this many
                            # wafers of a WaferCluster (1 = single wafer)
+    ep: int = 1            # expert-parallel degree: experts shard over ep
+                           # DP peers within a wafer; the dispatch/combine
+                           # All-to-All runs inside each EP group
+    sp: int = 1            # sequence-parallel degree: activations split
+                           # along the sequence dim across sp of the mp
+                           # peers (Megatron-SP style)
 
     @property
     def n_workers(self) -> int:
@@ -54,10 +60,22 @@ class Strategy:
         return [[(m, d, p) for p in range(self.pp)]
                 for m in range(self.mp) for d in range(self.dp)]
 
+    def ep_groups(self) -> List[List[Worker]]:
+        """Blocks of ``ep`` consecutive DP peers per (mp, pp) coordinate —
+        consecutive d share a wafer under :func:`cluster_placement` as long
+        as ``ep`` divides ``dp_per_wafer`` (validated by the simulator)."""
+        return [[(m, b * self.ep + e, p) for e in range(self.ep)]
+                for m in range(self.mp) for p in range(self.pp)
+                for b in range(self.dp // self.ep)]
+
     def __str__(self):
         s = f"MP({self.mp})-DP({self.dp})-PP({self.pp})"
         if self.wafers > 1:
             s += f"-W({self.wafers})"
+        if self.ep > 1:
+            s += f"-EP({self.ep})"
+        if self.sp > 1:
+            s += f"-SP({self.sp})"
         return s
 
 

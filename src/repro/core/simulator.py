@@ -5,6 +5,11 @@ baseline 2D-mesh or a FRED fabric:
 
   * compute: per-layer FLOPs / (peak·efficiency), MP-sharded;
   * MP comm: blocking All-Reduces per layer (forward and backward);
+  * EP comm (MoE workloads with ``Strategy.ep > 1``): expert dispatch +
+    combine All-to-All within each ep-sized DP subgroup, replacing one of
+    the per-layer MP All-Reduces (the FFN one the dispatch subsumes); a
+    ``comm_overlap_fraction`` share of the compute can hide EP then MP
+    time, with the remainder reported as ``exposed_comm_s``;
   * PP: GPipe microbatching — bubble factor (M + S − 1)/M plus boundary
     activation transfers;
   * DP comm: per-layer gradient All-Reduce issued as backward finishes,
@@ -99,11 +104,17 @@ class Breakdown:
     dp_intra: float = 0.0             # repro: unit[s]
     dp_inter: float = 0.0             # repro: unit[s]
     dp_levels: Tuple[float, ...] = () # repro: unit[s]
+    # exposed expert-parallel All-to-All time (0 unless Strategy.ep > 1 on
+    # an MoE workload); counted by ``total``
+    ep_s: float = 0.0                 # repro: unit[s]
+    # blocking comm left after compute/comm overlap: post-overlap mp + ep_s
+    # (informational — ``mp`` and ``ep_s`` already hold the reduced values)
+    exposed_comm_s: float = 0.0       # repro: unit[s]
 
     @property
     def total(self) -> float:
         return (self.compute + self.input_load + self.mp + self.dp +
-                self.pp + self.stream)
+                self.pp + self.stream + self.ep_s)
 
     def as_dict(self) -> Dict[str, float]:
         # float-valued only (callers reduce over values); the per-level
@@ -112,7 +123,8 @@ class Breakdown:
         return {"compute": self.compute, "input_load": self.input_load,
                 "mp": self.mp, "dp": self.dp, "pp": self.pp,
                 "stream": self.stream, "dp_intra": self.dp_intra,
-                "dp_inter": self.dp_inter, "total": self.total}
+                "dp_inter": self.dp_inter, "ep_s": self.ep_s,
+                "exposed_comm_s": self.exposed_comm_s, "total": self.total}
 
 
 _LEGACY_FABRIC_KW = ("mesh_shape", "fred_shape", "n_io")
@@ -125,6 +137,11 @@ class Simulator:
     fabric_name: str                       # "baseline" | "FRED-A".."FRED-D"
     compute_efficiency: float = 0.45
     overlap_dp: bool = True
+    # fraction of the compute time available to hide blocking collectives
+    # (EP first, then MP): exposed = max(0, comm − fraction·compute).
+    # 0.0 (the default) keeps comm fully additive — bit-identical to the
+    # pre-overlap model.
+    comm_overlap_fraction: float = 0.0
     # ---- consolidated construction specs (core/specs.py) ----------------
     spec: Optional[FabricSpec] = None              # wafer shape/io/defects
     cluster_spec: Optional[ClusterSpec] = None     # inter-wafer scale-out
@@ -339,6 +356,14 @@ class Simulator:
             raise ValueError(
                 f"{st} has pp={st.pp} stages but {w.name} only "
                 f"{w.n_layers} layers — stages must hold whole layers")
+        if st.ep > 1 and st.dp_per_wafer % st.ep != 0:
+            raise ValueError(
+                f"{st}: ep={st.ep} must divide the per-wafer DP degree "
+                f"{st.dp_per_wafer} — EP groups stay within a wafer")
+        if st.sp > 1 and st.mp % st.sp != 0:
+            raise ValueError(
+                f"{st}: sp={st.sp} must divide mp={st.mp} — sequence "
+                f"parallelism splits activations across MP peers")
         # uneven division: the pipeline is paced by its largest stage, so
         # compute/MP/DP are modeled at ceil(n_layers / pp) layers per stage
         # (exact when pp divides n_layers)
@@ -364,8 +389,14 @@ class Simulator:
         compute = (fwd_stage + bwd_stage) * bubble
 
         # ---- MP comm --------------------------------------------------------------
+        # with EP active, the expert-dispatch All-to-All subsumes the FFN
+        # All-Reduce — one fewer MP sync per layer per pass (Megatron/Tutel)
+        ep_active = st.ep > 1 and w.a2a_bytes_per_sample_layer > 0.0
+        mp_ar = w.mp_allreduce_per_layer
+        if ep_active and mp_ar:
+            mp_ar = mp_ar - 1
         mp_time = 0.0
-        if st.mp > 1 and w.mp_allreduce_per_layer:
+        if st.mp > 1 and mp_ar:
             act_bytes = w.act_bytes_per_sample * samples_per_npu
             # MP groups contend within their own wafer only — the fabric-BW
             # share is the per-wafer group count (== total on one wafer)
@@ -373,16 +404,42 @@ class Simulator:
             per_layer = self._coll_time("all_reduce", mp_group, act_bytes,
                                         concurrent=mp_conc)
             # fwd + bwd, every layer of this stage, all microbatches pipelined
-            mp_time = (per_layer * w.mp_allreduce_per_layer * 2 *
+            mp_time = (per_layer * mp_ar * 2 *
                        layers_per_stage * bubble)
+
+        # ---- EP comm (MoE expert dispatch/combine All-to-All) ----------------------
+        ep_raw = 0.0
+        if ep_active:
+            # EP groups are ep consecutive DP peers of the same (mp, pp)
+            # coordinate — the first ep members of the first DP group
+            # (NPU-id stride mp·pp under the canonical placements, defect
+            # remapping included), always within one wafer (ep | dp/wafer)
+            ep_group = dp_group[:st.ep]
+            ep_conc = max(1, st.mp * st.pp * st.dp // (st.ep * st.wafers))
+            a2a_bytes = w.a2a_bytes_per_sample_layer * samples_per_npu
+            per_layer = self._coll_time("all_to_all", ep_group, a2a_bytes,
+                                        concurrent=ep_conc)
+            # dispatch + combine (×2), fwd + bwd (×2), every layer, bubbled
+            ep_raw = per_layer * 2 * 2 * layers_per_stage * bubble
+
+        # ---- compute/comm overlap --------------------------------------------------
+        # a comm_overlap_fraction share of the compute hides blocking
+        # collectives: EP first (the dispatch sits right next to the expert
+        # FLOPs it feeds), then MP with whatever budget remains
+        overlappable = self.comm_overlap_fraction * compute
+        ep_time = max(0.0, ep_raw - overlappable)
+        rem = max(0.0, overlappable - ep_raw)
+        mp_time = max(0.0, mp_time - rem)
+        exposed_comm = mp_time + ep_time
 
         # ---- PP comm ---------------------------------------------------------------
         pp_time = 0.0
         if st.pp > 1:
             act_bytes = w.act_bytes_per_sample * samples_per_npu
             # fwd + bwd boundary transfer per microbatch, on the critical
-            # path only for the bubble-exposed fraction
-            per_mb = 2 * self._pp_time(act_bytes / microbatches)
+            # path only for the bubble-exposed fraction; SP shards the
+            # boundary tensor a further sp-way
+            per_mb = 2 * self._pp_time(act_bytes / microbatches / st.sp)
             pp_time = per_mb * (microbatches + st.pp - 1)
 
         # ---- DP comm ----------------------------------------------------------------
@@ -439,7 +496,8 @@ class Simulator:
                          compute=compute, input_load=input_load,
                          mp=mp_time, dp=dp_time, pp=pp_time,
                          stream=stream_time, dp_intra=dp_intra,
-                         dp_inter=dp_inter, dp_levels=tuple(lvl_acc))
+                         dp_inter=dp_inter, dp_levels=tuple(lvl_acc),
+                         ep_s=ep_time, exposed_comm_s=exposed_comm)
 
 
 def compare(workload: Workload, fabrics=("baseline", "FRED-C", "FRED-D"),

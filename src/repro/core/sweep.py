@@ -158,9 +158,31 @@ def hierarchy_configs(n_npus: int, max_wafers: int,
     return out
 
 
+def _expand_ep_sp(st: Strategy, ep_candidates: Sequence[int],
+                  sp_candidates: Sequence[int]) -> List[Strategy]:
+    """``st`` followed by its valid (ep, sp) variants: ep must divide the
+    per-wafer DP degree (EP groups stay within a wafer) and sp must divide
+    mp (SP splits activations across MP peers).  The base (ep=1, sp=1)
+    point is never duplicated, so the default candidates ``(1,)`` return
+    ``[st]`` — bit-identical enumeration order."""
+    out = [st]
+    for ep in ep_candidates:
+        for sp in sp_candidates:
+            if ep == 1 and sp == 1:
+                continue
+            if ep > 1 and st.dp_per_wafer % ep != 0:
+                continue
+            if sp > 1 and st.mp % sp != 0:
+                continue
+            out.append(dataclasses.replace(st, ep=ep, sp=sp))
+    return out
+
+
 def strategy_space(n_npus: int, n_layers: Optional[int] = None,
                    min_utilization: float = 0.9,
-                   n_wafers: int = 1) -> List[Strategy]:
+                   n_wafers: int = 1,
+                   ep_candidates: Sequence[int] = (1,),
+                   sp_candidates: Sequence[int] = (1,)) -> List[Strategy]:
     """All (mp, dp, pp) with mp·dp·pp ≤ n_npus and utilization ≥ the floor.
 
     ``n_layers`` (when given) keeps only pp that divide the layer count —
@@ -170,7 +192,11 @@ def strategy_space(n_npus: int, n_layers: Optional[int] = None,
     ``n_wafers > 1`` adds the wafer axis: after each base triple, the
     wafer-split variants ``Strategy(mp, dp, pp, wafers=w)`` for every
     2 ≤ w ≤ n_wafers dividing dp (DP replicas map whole onto wafers;
-    per-wafer capacity is checked later, at placement/sweep time)."""
+    per-wafer capacity is checked later, at placement/sweep time).
+
+    ``ep_candidates``/``sp_candidates`` expand each emitted strategy with
+    its valid expert-/sequence-parallel variants (:func:`_expand_ep_sp`);
+    the defaults ``(1,)`` keep the 5-axis space byte-identical."""
     floor = max(1, int(min_utilization * n_npus))
     out = []
     for used in range(n_npus, floor - 1, -1):
@@ -180,10 +206,13 @@ def strategy_space(n_npus: int, n_layers: Optional[int] = None,
                            if rest % d == 0):
                 if n_layers is not None and n_layers % pp != 0:
                     continue
-                out.append(Strategy(mp, dp, pp))
+                out.extend(_expand_ep_sp(Strategy(mp, dp, pp),
+                                         ep_candidates, sp_candidates))
                 for wf in range(2, n_wafers + 1):
                     if dp % wf == 0:
-                        out.append(Strategy(mp, dp, pp, wafers=wf))
+                        out.extend(_expand_ep_sp(
+                            Strategy(mp, dp, pp, wafers=wf),
+                            ep_candidates, sp_candidates))
     return out
 
 
@@ -213,11 +242,19 @@ def sim_signature(st: Strategy, w: Workload) -> Tuple:
     act_bytes = w.act_bytes_per_sample * w.samples_per_dp
     # components are guarded exactly as Simulator.run guards the terms, so
     # a skipped term contributes nothing to the canonical form
-    mp_term = (st.mp, st.dp * st.pp, act_bytes, w.mp_allreduce_per_layer) \
-        if (st.mp > 1 and w.mp_allreduce_per_layer) else None
-    pp_term = (act_bytes, microbatches, st.pp) if st.pp > 1 else None
+    ep_active = st.ep > 1 and w.a2a_bytes_per_sample_layer > 0
+    mp_ar = w.mp_allreduce_per_layer
+    if ep_active and mp_ar:       # the A2A subsumes one MP sync (run())
+        mp_ar = mp_ar - 1
+    mp_term = (st.mp, st.dp * st.pp, act_bytes, mp_ar) \
+        if (st.mp > 1 and mp_ar) else None
+    pp_term = (act_bytes, microbatches, st.pp, st.sp) if st.pp > 1 else None
     dp_term = ((st.dp, st.mp, st.pp, w.params_per_layer / st.mp)
                if (st.dp > 1 and w.execution == "stationary") else None)
+    ep_term = ((st.ep, st.mp * st.pp,
+                st.mp * st.pp * st.dp // (st.ep * st.wafers),
+                w.a2a_bytes_per_sample_layer * w.samples_per_dp)
+               if ep_active else None)
     stream_term = ((w.param_bytes_total / st.pp,
                     w.minibatch * w.act_bytes_per_sample)
                    if w.execution == "streaming" else None)
@@ -226,12 +263,14 @@ def sim_signature(st: Strategy, w: Workload) -> Tuple:
         # compute: per-NPU FLOPs share and pipeline pacing
         w.flops_fwd_per_sample_layer * w.samples_per_dp / st.mp,
         layers_per_stage, microbatches,
-        mp_term, pp_term, dp_term, stream_term,
+        mp_term, pp_term, dp_term, ep_term, stream_term,
         # normalizers / objectives (incl. the memory-model inputs: seq,
-        # per-MP-shard layer params, KV bytes — exact under any MemoryModel)
+        # per-MP-shard layer params, KV bytes, the EP/SP memory factors —
+        # exact under any MemoryModel)
         w.samples_per_dp, w.minibatch, w.seq,
         w.params_per_layer / st.mp, w.kv_bytes_per_sample_layer,
         w.param_bytes_total / (st.mp * st.pp),
+        st.ep, st.sp, w.expert_param_fraction,
     )
 
 
@@ -295,6 +334,7 @@ def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
                hierarchy: Optional[Tuple[int, ...]] = None,
                inter_topology: str = "",
                defects: Optional[DefectMask] = None,
+               comm_overlap_fraction: float = 0.0,
                **inter_kw) -> Simulator:
     """``n_npus`` is per wafer; ``inter_kw`` forwards the inter-wafer link
     parameters (inter_wafer_links/bw/latency) when n_wafers > 1, and
@@ -315,7 +355,8 @@ def _simulator(fabric: str, shape: Tuple[int, int], n_npus: int,
         cluster_spec = ClusterSpec(**ckw)
     return Simulator(fabric, compute_efficiency=compute_efficiency,
                      spec=spec, cluster_spec=cluster_spec,
-                     collective_cache=cache)
+                     collective_cache=cache,
+                     comm_overlap_fraction=comm_overlap_fraction)
 
 
 def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
@@ -334,7 +375,10 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
           memory: Optional[MemoryModel] = None,
           prune_symmetric: bool = False,
           engine: str = "batched",
-          defects: Optional[DefectMask] = None) -> List[SweepResult]:
+          defects: Optional[DefectMask] = None,
+          ep_candidates: Sequence[int] = (1,),
+          sp_candidates: Sequence[int] = (1,),
+          comm_overlap_fraction: float = 0.0) -> List[SweepResult]:
     """Run the full (fabric × wafer shape × wafer count × strategy)
     cross-product.
 
@@ -395,7 +439,14 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
     bandwidth shrinks with severed uplinks, and candidates needing more
     healthy NPUs per wafer than the mask leaves are skipped.  Results
     carry ``defect_rate``/``defect_seed``/``degraded_time_s``; a None (or
-    empty) mask is bit-identical to the defect-free sweep."""
+    empty) mask is bit-identical to the defect-free sweep.
+
+    ``ep_candidates``/``sp_candidates`` expand each enumerated strategy
+    with expert- and sequence-parallel variants (see
+    :func:`strategy_space`); the defaults (1,)/(1,) are bit-identical to
+    the 5-axis sweep.  ``comm_overlap_fraction`` sets the Simulator's
+    compute/communication overlap knob for every evaluated point (0.0,
+    the default, is the fully-exposed PR-7 model)."""
     if n_npus < 1:
         raise ValueError(f"n_npus must be ≥ 1, got {n_npus}")
     defects = normalize(defects)
@@ -427,7 +478,9 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
             space[wf] = [st for st in
                          strategy_space(wf * n_healthy, n_layers=n_layers,
                                         min_utilization=min_utilization,
-                                        n_wafers=wf)
+                                        n_wafers=wf,
+                                        ep_candidates=ep_candidates,
+                                        sp_candidates=sp_candidates)
                          if st.wafers == wf]
     results: List[SweepResult] = []
     cache = LRUCache(COLLECTIVE_CACHE_SIZE)
@@ -586,7 +639,9 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                 # InterLane carries each configuration's topology/spans
                 sim = _simulator(fabric, grp[0][1], n_npus, cache,
                                  compute_efficiency, n_wafers=max_wf,
-                                 defects=defects, **inter_kw)
+                                 defects=defects,
+                                 comm_overlap_fraction=comm_overlap_fraction,
+                                 **inter_kw)
                 parts, gs_parts, il_parts, metas = [], [], [], []
                 for wf, shape, hier, topo in grp:
                     _e, _ri, _ro, rep_pack, _m, _f2 = _candidates(wf)
@@ -623,6 +678,7 @@ def sweep(workload_fn: Callable[[Strategy], Workload], n_npus: int,
                                  compute_efficiency, n_wafers=wf,
                                  hierarchy=hier if wf > 1 else None,
                                  inter_topology=topo, defects=defects,
+                                 comm_overlap_fraction=comm_overlap_fraction,
                                  **inter_kw)
                 evals, rep_idx, rep_of, _rp, mem_arr, feas_arr = \
                     _candidates(wf)
@@ -684,10 +740,11 @@ def pareto_front(results: Sequence[SweepResult],
 
 
 CSV_HEADER = ("workload,fabric,shape_a,shape_b,n_wafers,n_npus,"
-              "inter_wafer_bw,hierarchy,inter_topology,mp,dp,pp,minibatch,"
-              "compute_s,input_load_s,mp_s,dp_s,dp_intra_s,dp_inter_s,"
+              "inter_wafer_bw,hierarchy,inter_topology,mp,dp,pp,ep,sp,"
+              "minibatch,"
+              "compute_s,input_load_s,mp_s,ep_s,dp_s,dp_intra_s,dp_inter_s,"
               "dp_level_1_s,dp_level_2_s,"
-              "pp_s,stream_s,total_s,"
+              "pp_s,stream_s,exposed_comm_s,total_s,"
               "time_per_sample_s,param_bytes_per_npu,"
               "memory_bytes_per_npu,feasible,routable,pareto,"
               "defect_rate,defect_seed,degraded_time_s")
@@ -708,11 +765,14 @@ def to_csv_rows(results: Sequence[SweepResult]) -> List[str]:
             f"{r.n_wafers},{r.n_npus},{r.inter_wafer_bw:.9g},"
             f"{'x'.join(map(str, r.hierarchy))},{r.inter_topology},"
             f"{r.strategy.mp},{r.strategy.dp},{r.strategy.pp},"
+            f"{r.strategy.ep},{r.strategy.sp},"
             f"{r.minibatch},"
             f"{br.compute:.9g},{br.input_load:.9g},{br.mp:.9g},"
+            f"{br.ep_s:.9g},"
             f"{br.dp:.9g},{br.dp_intra:.9g},{br.dp_inter:.9g},"
             f"{lv[0]:.9g},{lv[1]:.9g},"
-            f"{br.pp:.9g},{br.stream:.9g},{br.total:.9g},"
+            f"{br.pp:.9g},{br.stream:.9g},{br.exposed_comm_s:.9g},"
+            f"{br.total:.9g},"
             f"{r.time_per_sample:.9g},{r.param_bytes_per_npu:.9g},"
             f"{r.memory_bytes_per_npu:.9g},"
             f"{'' if r.feasible is None else int(r.feasible)},"

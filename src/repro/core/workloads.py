@@ -39,6 +39,13 @@ class Workload:
     # top-k routing; 1.0 for dense).  flops_fwd_per_sample_layer already
     # accounts for it — this field only documents the ratio.
     active_param_fraction: float = 1.0
+    # expert-dispatch All-to-All payload per sample per MoE layer
+    # (top_k · d_model · BYTES: each token ships top-k d-vectors to its
+    # experts); 0 for dense models — gates the simulator's EP phase.
+    a2a_bytes_per_sample_layer: float = 0.0
+    # fraction of params_per_layer that are expert FFN weights — the part
+    # expert parallelism shards over Strategy.ep (0 for dense models)
+    expert_param_fraction: float = 0.0
 
     @property
     def params_total(self) -> float:
@@ -163,7 +170,9 @@ def memory_bytes_per_npu(w: Workload, mem: MemoryModel) -> float:
     Sharding model (matches the simulator's placement): MP shards within a
     layer, PP shards layers (largest stage = ceil(n_layers/pp) paces the
     pipeline *and* holds the most state), DP replicates.  Sequence
-    parallelism shards activations over MP as well.  Weight-streaming
+    parallelism (``Strategy.sp``) shards activations a further ``sp``-way;
+    expert parallelism (``Strategy.ep``) shards the expert share of the
+    params over the EP group.  Weight-streaming
     keeps only a double-buffered layer (+ a gradient buffer when
     training) resident — the optimizer runs near storage (Sec. III-A).
 
@@ -173,13 +182,20 @@ def memory_bytes_per_npu(w: Workload, mem: MemoryModel) -> float:
     """
     st = w.strategy
     layers_per_stage = -(-w.n_layers // st.pp)
+    # expert weights shard over the EP group: the (1−f) dense share stays
+    # replicated per MP shard, the f expert share divides by ep
+    ep_share = 1.0
+    if st.ep > 1 and w.expert_param_fraction:
+        f = w.expert_param_fraction
+        ep_share = (1.0 - f) + f / st.ep
     if w.execution == "streaming":
         buffers = 3 if mem.training else 2      # 2 stream + 1 grad out
-        resident_params = buffers * w.params_per_layer / st.mp
+        resident_params = buffers * w.params_per_layer * ep_share / st.mp
         opt_bytes = 0.0                          # optimizer near storage
         grad_bytes = 0.0                         # counted in the buffers
     else:
-        resident_params = w.params_per_layer * layers_per_stage / st.mp
+        resident_params = (w.params_per_layer * ep_share *
+                           layers_per_stage / st.mp)
         opt_bytes = (resident_params *
                      optimizer_bytes_per_param(mem.master, mem.moments_dtype)
                      if mem.training else 0.0)
@@ -192,7 +208,7 @@ def memory_bytes_per_npu(w: Workload, mem: MemoryModel) -> float:
     mult = ACT_REMAT_MULT[mem.remat] if mem.training else 1.0
     act_layers = layers_per_stage if mem.training else 1
     act_bytes = (mult * act_layers * w.act_bytes_per_sample *
-                 max(w.seq, 1) / st.mp)
+                 max(w.seq, 1) / st.mp / st.sp)
 
     kv_bytes = 0.0
     if not mem.training and w.kv_bytes_per_sample_layer:
@@ -299,6 +315,12 @@ def from_model_config(cfg: "ModelConfig", shape: "ShapeConfig",
     samples_per_dp = max(1, total_samples // strategy.dp)
     serving = shape.kind != "train"
     kv = 2 * cfg.d_kv * BYTES if (serving and cfg.n_heads) else 0.0
+    moe = cfg.family == "moe"
+    # each token ships top-k d-vectors to its experts (dispatch; combine
+    # is charged separately by the simulator's ×2)
+    a2a = cfg.top_k * d * BYTES if moe else 0.0
+    expert_frac = ((cfg.n_experts * 3 * d * cfg.d_ff) / resident
+                   if moe and resident else 0.0)
     return Workload(
         name=f"{cfg.name}:{shape.name}",
         n_layers=n_layers,
@@ -312,6 +334,8 @@ def from_model_config(cfg: "ModelConfig", shape: "ShapeConfig",
         seq=shape.seq_len,
         kv_bytes_per_sample_layer=kv,
         active_param_fraction=active / resident if resident else 1.0,
+        a2a_bytes_per_sample_layer=a2a,
+        expert_param_fraction=expert_frac,
     )
 
 

@@ -183,6 +183,71 @@ def corrected_totals(rec, cfg) -> dict:
     return out
 
 
+def ep_compare(arch: str = "mixtral-8x7b", n_devices: int = 8,
+               seq: int = 16, d_model: int = 64, d_ff: int = 128) -> dict:
+    """Measure the expert-parallel All-to-All against the analytical model.
+
+    Compiles the explicit shard_map dispatch
+    (:func:`repro.models.moe.moe_ffn_ep`) on a reduced copy of an MoE
+    arch (host devices; one sequence per EP rank) and parses the
+    optimized HLO for all-to-all wire bytes.  The expectation has two
+    layers: the *bucket* payload 2·E·C·d (what the dispatch+combine
+    exchange physically moves, capacity headroom included) should match
+    the HLO exactly, and the cost model's *token* payload 2·T·k·d
+    (``Workload.a2a_bytes_per_sample_layer`` per token, dispatch+combine)
+    relates to it by the capacity factor — both ratios are recorded, and
+    tests/test_multidevice.py pins the bucket ratio at 1."""
+    import math as _math
+    import numpy as _np
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs.registry import get_config
+    from repro.models.moe import init_moe, moe_ffn_ep, _v
+    from repro.launch.roofline import collective_bytes_from_hlo
+
+    base = get_config(arch)
+    if not base.n_experts:
+        raise ValueError(f"{arch} is not an MoE arch")
+    cfg = dataclasses.replace(base, d_model=d_model, d_ff=d_ff,
+                              moe_dense_ff=0)
+    n = min(n_devices, len(jax.devices()), cfg.n_experts)
+    mesh = Mesh(_np.array(jax.devices()[:n]), ("data",))
+    params = {k: _v(v) for k, v in
+              init_moe(jax.random.PRNGKey(0), cfg).items()}
+    sharded = {"router": params["router"],
+               **{k: jax.device_put(params[k],
+                                    NamedSharding(mesh, P("data", None, None)))
+                  for k in ("w_gate", "w_up", "w_down")}}
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(1), (n, seq, d_model)),
+        NamedSharding(mesh, P("data", None, None)))
+    with mesh:
+        compiled = jax.jit(
+            lambda p, t: moe_ffn_ep(p, t, cfg, mesh=mesh, ep_axis="data")
+        ).lower(sharded, x).compile()
+    colls = collective_bytes_from_hlo(compiled.as_text())
+    measured = colls["per_kind_bytes"].get("all-to-all", 0)
+
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    T_l = seq                                 # tokens per EP rank
+    capacity = max(int(_math.ceil(T_l * k * cf / E)), 4)
+    capacity = -(-capacity // 4) * 4
+    bucket_bytes = 2 * E * capacity * d_model * 4      # dispatch+combine, f32
+    token_bytes = 2 * T_l * k * d_model * 4            # the cost-model payload
+    return {
+        "arch": arch, "n_devices": n, "seq": seq,
+        "d_model": d_model, "d_ff": d_ff,
+        "n_experts": E, "top_k": k, "capacity_factor": cf,
+        "capacity": capacity,
+        "measured_a2a_bytes_per_device": measured,
+        "expected_bucket_bytes_per_device": bucket_bytes,
+        "model_token_bytes_per_device": token_bytes,
+        "measured_over_bucket": measured / bucket_bytes,
+        "bucket_over_token": bucket_bytes / token_bytes,
+        "per_kind_bytes": colls["per_kind_bytes"],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", type=str, default=None)
@@ -195,8 +260,26 @@ def main(argv=None):
                     help="let the FRED simulator sweep pick (mp, dp, pp, "
                          "wafers) per cell; records the decision + "
                          "dominated/infeasible counts in the artifact")
+    ap.add_argument("--ep-compare", action="store_true",
+                    help="compile the shard_map expert-parallel All-to-All "
+                         "on a reduced MoE arch and diff the measured HLO "
+                         "wire bytes against the analytical payload; writes "
+                         "<out>/ep_compare.json and exits")
     ap.add_argument("--out", type=str, default="artifacts/dryrun")
     args = ap.parse_args(argv)
+
+    if args.ep_compare:
+        outdir = Path(args.out)
+        outdir.mkdir(parents=True, exist_ok=True)
+        rec = ep_compare(args.arch or "mixtral-8x7b")
+        (outdir / "ep_compare.json").write_text(
+            json.dumps(rec, indent=2, default=str))
+        ok = abs(rec["measured_over_bucket"] - 1.0) < 0.01
+        print(f"[dryrun] ep_compare {rec['arch']}: "
+              f"measured/bucket={rec['measured_over_bucket']:.3f} "
+              f"bucket/token={rec['bucket_over_token']:.3f} "
+              f"{'OK' if ok else 'MISMATCH'}", flush=True)
+        return 0 if ok else 1
 
     from repro.configs.registry import ARCH_IDS
     from repro.models.config import SHAPES

@@ -245,7 +245,21 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * active * tokens
 
 
-def roofline_terms(rec: dict, cfg, shape) -> dict:
+def exposed_comm_s(comm_s: float, overlappable_compute_s: float) -> float:
+    """Exposed (non-hidden) communication time under an overlap budget.
+
+    The schedulable model: communication hides behind up to
+    ``overlappable_compute_s`` of independent compute, and only the
+    excess lands on the critical path.  This is the same
+    ``max(0, comm − overlappable)`` identity the analytical cost model
+    applies per phase (core/simulator.py ``comm_overlap_fraction``) —
+    tests/test_fabric_sim.py pins the two implementations equal so the
+    XLA-side roofline and the simulator cannot drift."""
+    return max(0.0, comm_s - overlappable_compute_s)
+
+
+def roofline_terms(rec: dict, cfg, shape,
+                   comm_overlap_fraction: float = 0.0) -> dict:
     chips = rec.get("n_devices", 1)
     corrected = rec.get("corrected") or {}
     flops_pd = corrected.get("flops") or rec["cost_analysis"].get("flops", 0.0)
@@ -269,6 +283,8 @@ def roofline_terms(rec: dict, cfg, shape) -> dict:
     # term implies, relative to the all-chips peak
     frac = (mf / (chips * PEAK_FLOPS)) / bound if bound else 0.0
     return {**terms,
+            "exposed_comm_s": exposed_comm_s(
+                t_collective, comm_overlap_fraction * t_compute),
             "dominant": dominant.replace("_s", ""),
             "model_flops_total": mf,
             "hlo_flops_total": hlo_total,

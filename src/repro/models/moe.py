@@ -152,5 +152,76 @@ def moe_ffn(params, x, cfg, *, capacity_factor: float | None = None,
     return out, jnp.mean(aux)
 
 
+def moe_ffn_ep(params, x, cfg, *, mesh, ep_axis: str,
+               capacity_factor: float | None = None):
+    """Expert-parallel MoE FFN: explicit shard_map All-to-All dispatch.
+
+    The paper's All-to-All collective pattern (Sec. II-C), written out
+    rather than left to GSPMD: experts shard over ``ep_axis`` (a data
+    axis of ``mesh``), each rank routes its local tokens and builds full
+    (E, C, d) dispatch buckets, a tiled ``jax.lax.all_to_all`` exchanges
+    them so every rank holds only its E/n experts' buckets from all n
+    ranks — shape (E/n, n·C, d), the Table-I shard-D/n unicast pattern —
+    the expert FFN runs on the local weight shard, and the inverse
+    all-to-all returns outputs for the local combine.
+
+    Routing, capacity and combine math are shared with :func:`moe_ffn`,
+    so the result matches ``moe_ffn(..., n_groups=n)`` (one dispatch
+    group per EP rank) up to float reduction order — pinned by
+    tests/test_multidevice.py against the dense-gather reference.
+
+    ``x`` must shard its batch dim over ``ep_axis`` (n | B) and expert
+    weights their leading E dim (E % n == 0).
+    """
+    from repro.parallel.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    n = mesh.shape[ep_axis]
+    if B % n or E % n:
+        raise ValueError(f"moe_ffn_ep: batch {B} and n_experts {E} must "
+                         f"both divide over ep_axis {ep_axis!r} (size {n})")
+    T_l = B * S // n                       # tokens per EP rank
+    capacity = max(int(math.ceil(T_l * k * cf / E)), 4)
+    capacity = -(-capacity // 4) * 4
+
+    def shard_fn(router_w, wg, wu, wd, x_l):
+        T = x_l.shape[0] * x_l.shape[1]
+        x2d = x_l.reshape(T, d)
+        buckets, flat_slot, combine_w, aux = _group_dispatch(
+            x2d, router_w, E, k, capacity)
+        # dispatch A2A: keep E/n experts, gather every rank's C slots
+        b = jax.lax.all_to_all(buckets, ep_axis, split_axis=0,
+                               concat_axis=1, tiled=True)
+        g = jnp.einsum("ecd,edf->ecf", b, wg)
+        u = jnp.einsum("ecd,edf->ecf", b, wu)
+        h = swiglu(g, u)
+        y = jnp.einsum("ecf,efd->ecd", h, wd)
+        # combine A2A: the exact inverse exchange
+        y = jax.lax.all_to_all(y, ep_axis, split_axis=1,
+                               concat_axis=0, tiled=True)
+        out = _group_combine(y.reshape(E * capacity, d), flat_slot,
+                             combine_w, T, k)
+        return out.reshape(x_l.shape), jax.lax.pmean(aux, ep_axis)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(), P(ep_axis), P(ep_axis), P(ep_axis),
+                             P(ep_axis)),
+                   out_specs=(P(ep_axis), P()),
+                   check_vma=False)
+    out, aux = fn(_v(params["router"]), _v(params["w_gate"]),
+                  _v(params["w_up"]), _v(params["w_down"]), x)
+
+    if cfg.moe_dense_ff:
+        dn = params["dense"]
+        x2d = x.reshape(-1, d)
+        dense = swiglu(x2d @ _v(dn["w_gate"]),
+                       x2d @ _v(dn["w_up"])) @ _v(dn["w_down"])
+        out = out + dense.reshape(B, S, d)
+    return out, aux
+
+
 def _v(p):
     return p.value if isinstance(p, Box) else p

@@ -88,6 +88,7 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
     st = decision.strategy
     pcfg = pcfg.replace(auto_strategy=StrategyDecision(
         mp=st.mp, dp=st.dp, pp=st.pp, wafers=st.wafers,
+        ep=st.ep, sp=st.sp,
         inter_topology=decision.inter_topology,
         defect_seed=getattr(decision, "defect_seed", None)))
     if st.wafers > 1:

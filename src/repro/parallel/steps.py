@@ -266,6 +266,29 @@ def make_decode_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                      state_shapes=state_shapes, state_shardings=state_shardings)
 
 
+def moe_ep_ffn_fn(ruleset: Ruleset, cfg: ModelConfig,
+                  capacity_factor: Optional[float] = None):
+    """Bind the explicit shard_map All-to-All expert dispatch to a cell.
+
+    Returns ``f(params_ffn, x) -> (out, aux)`` running
+    :func:`repro.models.moe.moe_ffn_ep` on the cell's mesh over the
+    Ruleset's active EP axis (``pcfg.moe_ep_axis``).  Raises if the cell
+    has no valid EP axis — EP is a decision
+    (``StrategyDecision.ep > 1``), not a silent fallback."""
+    if not getattr(ruleset, "ep_axis", None):
+        raise ValueError(
+            "moe_ep_ffn_fn: the cell's ParallelConfig.moe_ep_axis is unset "
+            "or invalid for this mesh/model — expert parallelism needs a "
+            "data axis whose size divides n_experts")
+    from repro.models.moe import moe_ffn_ep
+
+    def f(params_ffn, x):
+        return moe_ffn_ep(params_ffn, x, cfg, mesh=ruleset.mesh,
+                          ep_axis=ruleset.ep_axis,
+                          capacity_factor=capacity_factor)
+    return f
+
+
 def make_setup(cfg, shape, mesh, pcfg=None, ocfg=None) -> CellSetup:
     if shape.kind == "train":
         return make_train_setup(cfg, shape, mesh, pcfg, ocfg)

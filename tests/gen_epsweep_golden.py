@@ -1,0 +1,68 @@
+"""Regenerate tests/goldens/epsweep.json — the pinned MoE auto-strategy
+decisions with the expert/sequence-parallel axes searchable
+(``repro.core.autostrategy.MOE_ARCHS`` × ``EP_SWEEP_KW``).  Run after an
+*intentional* cost-model change:
+
+    PYTHONPATH=src python -m tests.gen_epsweep_golden
+
+``--check`` regenerates in memory only and exits non-zero if the fresh
+decisions differ from the committed file — the nightly golden-drift gate
+(catches env-dependent float drift before it surfaces as a confusing PR
+failure), mirroring tests/gen_sweep512_golden.py.
+
+The generator refuses to write a golden in which any MoE arch chose
+``ep = 1``: the epsweep CI gate pins ``ep > 1`` for every entry, so such
+a golden would be born red.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GOLDEN = Path(__file__).parent / "goldens" / "epsweep.json"
+
+
+def fresh_goldens() -> dict:
+    from repro.core.autostrategy import EP_SWEEP_KW, MOE_ARCHS, decision_table
+    decisions = decision_table(MOE_ARCHS, **EP_SWEEP_KW)
+    no_ep = [d.arch for d in decisions if d.ep <= 1]
+    if no_ep:
+        sys.exit(f"refusing to write {GOLDEN}: {', '.join(no_ep)} chose "
+                 f"ep=1 — the epsweep gate requires every MoE arch to "
+                 f"elect expert parallelism (fix the EP cost/memory model "
+                 f"first)")
+    return {f"{d.arch}/{d.shape}": d.golden() for d in decisions}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff the regenerated decisions against the "
+                         "committed golden instead of overwriting it; "
+                         "exit 1 on drift")
+    args = ap.parse_args()
+    got = fresh_goldens()
+    if args.check:
+        want = json.loads(GOLDEN.read_text())
+        if got != want:
+            diffs = [k for k in sorted(set(got) | set(want))
+                     if got.get(k) != want.get(k)]
+            print(f"golden drift: regenerated MoE EP decisions differ "
+                  f"from {GOLDEN} ({', '.join(diffs)}).\n"
+                  f"If a cost-model change is intended, regenerate with "
+                  f"`python -m tests.gen_epsweep_golden`; otherwise the "
+                  f"environment introduced float drift.", file=sys.stderr)
+            print(json.dumps(got, indent=1, sort_keys=True),
+                  file=sys.stderr)
+            return 1
+        print(f"golden check OK: {len(got)} MoE EP decisions identical "
+              f"to {GOLDEN}")
+        return 0
+    GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {GOLDEN} ({len(got)} decisions)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -201,15 +201,15 @@ def test_parity_fails_when_packed_field_deleted(tmp_path):
 
 def test_parity_fails_when_strategy_grows_dummy_field(tmp_path):
     """Acceptance: a Strategy axis batch_engine doesn't pack fails —
-    the standing guard for the ROADMAP's ep/sp axes."""
+    the guard that forced the PR-8 ep/sp axes through PACK_CONTRACT."""
     copy_core(tmp_path)
     pl = tmp_path / "src/repro/core/placement.py"
     text = pl.read_text()
     anchor = "    wafers: int = 1"
     assert anchor in text
-    pl.write_text(text.replace(anchor, "    ep: int = 1\n" + anchor, 1))
+    pl.write_text(text.replace(anchor, "    cp: int = 1\n" + anchor, 1))
     findings, _ = run_checks(tmp_path, rules=("PARITY",))
-    assert any("Strategy.ep has no packed counterpart" in f.message
+    assert any("Strategy.cp has no packed counterpart" in f.message
                for f in findings)
 
 

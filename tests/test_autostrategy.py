@@ -225,6 +225,43 @@ def test_check_goldens_flags_divergence(tmp_path):
     assert errs and "ghost-arch" in errs[0]
 
 
+def test_moe_archs_elect_expert_parallelism():
+    """ISSUE 8 acceptance: with the ep/sp axes searchable, both MoE
+    registry models choose ep > 1 (the epsweep CI gate pins the full
+    decisions in tests/goldens/epsweep.json; this is the tier-1 view)."""
+    from repro.core.autostrategy import EP_SWEEP_KW, MOE_ARCHS
+    decisions = decision_table(MOE_ARCHS, **EP_SWEEP_KW)
+    assert [d.arch for d in decisions] == list(MOE_ARCHS)
+    for d in decisions:
+        assert d.ep > 1, d.arch
+        assert d.strategy.ep == d.ep and d.strategy.sp == d.sp
+        assert d.golden()["ep"] == d.ep
+
+
+def test_golden_dict_adds_ep_sp_keys_only_when_set():
+    """Dense-model goldens must stay byte-identical across the EP PR:
+    ``golden()`` emits the new axes only at non-default values."""
+    from repro.core.autostrategy import EP_SWEEP_KW
+    plain = decision_table(["llama3.2-1b"])[0]
+    assert plain.ep == 1 and plain.sp == 1
+    assert "ep" not in plain.golden() and "sp" not in plain.golden()
+    # a dense model never elects ep, but may take the free sp sharding
+    searched = decision_table(["llama3.2-1b"], **EP_SWEEP_KW)[0]
+    assert searched.ep == 1 and "ep" not in searched.golden()
+    if searched.sp > 1:
+        assert searched.golden()["sp"] == searched.sp
+
+
+def test_decision_csv_rows_carry_ep_sp():
+    from repro.core.autostrategy import (DECISION_CSV_HEADER,
+                                         decision_csv_rows)
+    assert ",ep,sp," in DECISION_CSV_HEADER
+    ds = decision_table(["llama3.2-1b"])
+    n = len(DECISION_CSV_HEADER.split(","))
+    rows = decision_csv_rows(ds)
+    assert rows and all(len(r.split(",")) == n for r in rows)
+
+
 def test_streaming_fallback_for_480b():
     """arctic-480b cannot hold 482B params weight-stationary on ≤128
     16-GiB NPUs — the decision must fall back to weight streaming

@@ -62,7 +62,9 @@ def random_sim_case(rng: random.Random):
             break
     else:
         mp = pp = dpw = 1
-    strategy = Strategy(mp, dpw * wafers, pp, wafers=wafers)
+    ep = rng.choice([d for d in (1, 2, 3, 4) if dpw % d == 0])
+    sp = rng.choice([d for d in (1, 2, 3) if mp % d == 0])
+    strategy = Strategy(mp, dpw * wafers, pp, wafers=wafers, ep=ep, sp=sp)
     w = Workload(
         name="rand", n_layers=rng.randint(pp, 60),
         params_per_layer=rng.uniform(1e3, 1e10),
@@ -74,6 +76,8 @@ def random_sim_case(rng: random.Random):
         samples_per_dp=rng.randint(1, 64),
         seq=rng.randint(1, 64),
         kv_bytes_per_sample_layer=rng.uniform(0.0, 1e5),
+        a2a_bytes_per_sample_layer=rng.choice((0.0, rng.uniform(1.0, 1e6))),
+        expert_param_fraction=rng.uniform(0.0, 0.95),
     )
     cspec = None
     if n_wafers > 1:
@@ -83,6 +87,8 @@ def random_sim_case(rng: random.Random):
                             inter_topology=rng.choice(INTER_TOPOLOGIES),
                             hierarchy=rng.choice(hierarchy_specs(n_wafers, 2)))
     sim = Simulator(fabric,
+                    comm_overlap_fraction=rng.choice(
+                        (0.0, rng.uniform(0.0, 1.0))),
                     spec=FabricSpec(mesh_shape=(a, b), fred_shape=(a, b),
                                     n_io=rng.randint(1, 32)),
                     cluster_spec=cspec)
@@ -158,6 +164,43 @@ def test_sweep_engines_agree_fixed_cases(kw):
         b = sweep(wl, n_layers=nl, engine="batched", **kw)
         assert a                                  # non-trivial sweep
         assert_sweeps_bit_identical(a, b)
+
+
+def _moe_t17b(strat):
+    """T17B with mixtral-style expert annotations (per-token dispatch
+    bytes + an 80% expert parameter share)."""
+    import dataclasses
+    w = transformer("T17B-moe", 78, 4256, 1024, strat, "stationary")
+    return dataclasses.replace(w, a2a_bytes_per_sample_layer=2 * 4256 * 2.0,
+                               expert_param_fraction=0.8)
+
+
+def test_sweep_engines_agree_on_moe_ep_axes():
+    """ISSUE 8 parity: the ep × sp × overlap axes stay bit-identical to
+    the scalar oracle on a workload where the EP path is actually hot."""
+    kw = dict(n_npus=20, n_layers=78, max_wafers=2, memory=MemoryModel(),
+              ep_candidates=(1, 2, 4), sp_candidates=(1, 2),
+              comm_overlap_fraction=0.3)
+    a = sweep(_moe_t17b, engine="scalar", **kw)
+    b = sweep(_moe_t17b, engine="batched", **kw)
+    assert {r.strategy.ep for r in a} > {1}     # EP points present
+    assert {r.strategy.sp for r in a} > {1}
+    assert any(r.breakdown.ep_s > 0 for r in a)
+    assert any(r.breakdown.exposed_comm_s > 0 for r in a)
+    assert_sweeps_bit_identical(a, b)
+
+
+def test_ep_axes_at_defaults_bit_identical_to_pr7_sweep():
+    """The new sweep kwargs at their defaults reproduce the pre-EP sweep
+    bit-for-bit (same guarantee the sweep512 golden pins at scale)."""
+    a = transformer_17b_sweep(20)
+    b = sweep(lambda st: _moe_t17b(st), 20, n_layers=78,
+              ep_candidates=(1,), sp_candidates=(1,),
+              comm_overlap_fraction=0.0)
+    # same strategy space; ep=1 ignores the expert annotations entirely
+    assert [r.strategy for r in a] == [r.strategy for r in b]
+    assert [r.breakdown.as_dict() for r in a] == \
+        [r.breakdown.as_dict() for r in b]
 
 
 def test_unknown_engine_rejected():

@@ -45,7 +45,9 @@ def sim_cases(draw):
     pp = draw(st.integers(min_value=1, max_value=3))
     dpw = draw(st.integers(min_value=1, max_value=4))
     assume(mp * pp * dpw <= npw)
-    strategy = Strategy(mp, dpw * wafers, pp, wafers=wafers)
+    ep = draw(st.sampled_from([d for d in (1, 2, 3, 4) if dpw % d == 0]))
+    sp = draw(st.sampled_from([d for d in (1, 2, 3) if mp % d == 0]))
+    strategy = Strategy(mp, dpw * wafers, pp, wafers=wafers, ep=ep, sp=sp)
     fin = dict(allow_nan=False, allow_infinity=False)
     w = Workload(
         name="rand", n_layers=draw(st.integers(min_value=pp, max_value=60)),
@@ -58,6 +60,9 @@ def sim_cases(draw):
         samples_per_dp=draw(st.integers(min_value=1, max_value=64)),
         seq=draw(st.integers(min_value=1, max_value=64)),
         kv_bytes_per_sample_layer=draw(st.floats(0.0, 1e5, **fin)),
+        a2a_bytes_per_sample_layer=draw(st.one_of(
+            st.just(0.0), st.floats(1.0, 1e6, **fin))),
+        expert_param_fraction=draw(st.floats(0.0, 0.95, **fin)),
     )
     cspec = None
     if n_wafers > 1:
@@ -69,6 +74,10 @@ def sim_cases(draw):
                             hierarchy=draw(st.sampled_from(
                                 hierarchy_specs(n_wafers, 2))))
     sim = Simulator(fabric,
+                    comm_overlap_fraction=draw(st.one_of(
+                        st.just(0.0),
+                        st.floats(0.0, 1.0, allow_nan=False,
+                                  allow_infinity=False))),
                     spec=FabricSpec(
                         mesh_shape=(a, b), fred_shape=(a, b),
                         n_io=draw(st.integers(min_value=1, max_value=32))),
@@ -122,14 +131,23 @@ def sweep_cases(draw):
     topos = tuple(draw(st.sets(st.sampled_from(INTER_TOPOLOGIES),
                                min_size=1, max_size=3)))
     max_levels = draw(st.integers(min_value=1, max_value=2))
+    a2a = draw(st.sampled_from((0.0, 8192.0)))
+    ep_candidates = draw(st.sampled_from(((1,), (1, 2), (1, 2, 4))))
+    sp_candidates = draw(st.sampled_from(((1,), (1, 2))))
+    overlap = draw(st.sampled_from((0.0, 0.3)))
 
     def workload_fn(strat):
-        return transformer("rand", n_layers, 1024, seq, strat, execution)
+        import dataclasses
+        w = transformer("rand", n_layers, 1024, seq, strat, execution)
+        return dataclasses.replace(
+            w, a2a_bytes_per_sample_layer=a2a,
+            expert_param_fraction=0.8 if a2a else 0.0)
 
     return dict(workload_fn=workload_fn, n_npus=n_npus, fabrics=fabrics,
                 n_layers=n_layers, max_wafers=max_wafers, memory=mem,
                 prune_symmetric=prune, inter_topologies=topos,
-                max_levels=max_levels)
+                max_levels=max_levels, ep_candidates=ep_candidates,
+                sp_candidates=sp_candidates, comm_overlap_fraction=overlap)
 
 
 @settings(deadline=None, max_examples=20)
@@ -139,6 +157,55 @@ def test_sweep_engines_agree_on_totals_and_pareto(kw):
     a = sweep(engine="scalar", **kw)
     b = sweep(engine="batched", **kw)
     assert_sweeps_bit_identical(a, b)
+
+
+# --------------------------------------------------------------------------
+# expert-parallel / overlap properties (ISSUE 8)
+# --------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(n=st.integers(2, 64),
+       d=st.floats(1.0, 1e12, allow_nan=False, allow_infinity=False))
+def test_a2a_traffic_never_exceeds_all_gather(n, d):
+    """At equal payload an All-to-All moves no more wire bytes per NPU
+    than an All-Gather — every member keeps its own shard in both."""
+    from repro.core.flows import (endpoint_traffic_bytes,
+                                  innetwork_traffic_bytes)
+    for fn in (endpoint_traffic_bytes, innetwork_traffic_bytes):
+        assert fn("all_to_all", n, d) <= fn("all_gather", n, d)
+
+
+@settings(deadline=None)
+@given(case=sim_cases())
+def test_exposed_comm_bounded_by_comm_phases(case):
+    """exposed_comm_s is exactly the post-overlap mp + ep time, hence
+    bounded by the sum of every blocking comm phase."""
+    sim, w = case
+    br = sim.run(w)
+    assert br.exposed_comm_s == br.mp + br.ep_s
+    assert br.exposed_comm_s <= br.mp + br.ep_s + br.dp
+    assert br.ep_s >= 0.0 and br.exposed_comm_s >= 0.0
+
+
+@settings(deadline=None)
+@given(case=sim_cases())
+def test_ep_sp_defaults_bit_identical_to_dense_model(case):
+    """ep=1 / sp=1 / overlap=0 reproduce the pre-EP cost and memory model
+    bit-for-bit, regardless of expert-traffic annotations."""
+    import dataclasses
+    sim, w = case
+    w0 = dataclasses.replace(
+        w, strategy=dataclasses.replace(w.strategy, ep=1, sp=1))
+    dense = dataclasses.replace(w0, a2a_bytes_per_sample_layer=0.0,
+                                expert_param_fraction=0.0)
+    sim0 = Simulator(sim.fabric_name, spec=sim.spec,
+                     cluster_spec=sim.cluster_spec,
+                     comm_overlap_fraction=0.0)
+    a, b = sim0.run(w0), sim0.run(dense)
+    assert a.as_dict() == b.as_dict()
+    assert a.ep_s == 0.0 and a.exposed_comm_s == a.mp
+    mem = MemoryModel()
+    assert memory_bytes_per_npu(w0, mem) == memory_bytes_per_npu(dense, mem)
 
 
 @settings(deadline=None)

@@ -88,9 +88,31 @@ def test_hierarchical_collective_parts():
     # one member per wafer: no local reduce-scatter possible — pure inter
     intra, inter = cl.collective_time_parts("all_reduce", [0, 20], D)
     assert intra == 0.0 and inter > 0
-    # only All-Reduce crosses wafers (MP/PP are placed within one)
+    # only All-Reduce and All-to-All cross wafers (MP/PP stay within one)
     with pytest.raises(NotImplementedError):
         cl.collective_time_parts("all_gather", span, D)
+
+
+def test_hierarchical_all_to_all_parts():
+    """Cross-wafer expert All-to-All (ISSUE 8): wafer-local exchange of
+    the k/n payload share + the full payload over each spanned level —
+    no RS/AG sandwich (nothing to reduce)."""
+    cl = WaferCluster(FredFabric(CONFIGS["FRED-C"]), 2)
+    wafer = FredFabric(CONFIGS["FRED-C"])
+    D = 1e8
+    # contained in one wafer: pure intra, identical to the wafer fabric
+    intra, inter = cl.collective_time_parts("all_to_all", [0, 1, 2, 3], D)
+    assert inter == 0.0
+    assert intra == wafer.collective_time("all_to_all", [0, 1, 2, 3], D)
+    # spanning both wafers: 2 members per wafer exchange D·k/n = D/2
+    # locally, the full D crosses the wafer level
+    intra_s, inter_s = cl.collective_time_parts("all_to_all",
+                                                [0, 1, 20, 21], D)
+    assert inter_s > 0
+    assert intra_s == wafer.collective_time("all_to_all", [0, 1], D * 2 / 4)
+    # one member per wafer: nothing to exchange locally — pure inter
+    intra_1, inter_1 = cl.collective_time_parts("all_to_all", [0, 20], D)
+    assert intra_1 == 0.0 and inter_1 > 0
 
 
 def test_inter_wafer_ring_scales_with_link_budget():

@@ -7,7 +7,9 @@ from repro.core.fabric import CONFIGS, FredFabric
 from repro.core.meshnet import MeshFabric
 from repro.core.placement import Strategy, fred_placement, mesh_placement, placement_groups
 from repro.core.simulator import Simulator, compare
-from repro.core.workloads import paper_workloads, fig2_strategies
+from repro.core.workloads import (MemoryModel, Workload,
+                                  memory_bytes_per_npu, paper_workloads,
+                                  fig2_strategies)
 
 
 # --------------------------------------------------------------------------
@@ -84,6 +86,165 @@ def test_in_network_halves_traffic():
 def test_fred_io_line_rate():
     assert FredFabric(CONFIGS["FRED-C"]).io_linerate_factor() == 1.0
     assert MeshFabric().io_linerate_factor() < 0.66
+
+
+# --------------------------------------------------------------------------
+# All-to-All (Table I) — pinned hand-computed cases per fabric
+# --------------------------------------------------------------------------
+
+def test_all_to_all_traffic_matches_table_i():
+    from repro.core.flows import (all_to_all, endpoint_traffic_bytes,
+                                  innetwork_traffic_bytes)
+    n, D = 8, 1e9
+    # n serial steps, each a parallel set of n disjoint D/n unicasts
+    steps = all_to_all(list(range(n)), D)
+    assert len(steps) == n and all(len(s) == n for s in steps)
+    assert all(f.bytes == D / n for s in steps for f in s)
+    # step 0 is the identity permutation (self-delivery), so the wire
+    # traffic is (n−1)/n·D — no reduction, so in-network buys nothing
+    assert endpoint_traffic_bytes("all_to_all", n, D) == \
+        innetwork_traffic_bytes("all_to_all", n, D) == (n - 1) / n * D
+
+
+def test_unknown_collective_kind_rejected():
+    from repro.core.flows import (endpoint_traffic_bytes,
+                                  innetwork_traffic_bytes)
+    for fn in (endpoint_traffic_bytes, innetwork_traffic_bytes):
+        with pytest.raises(ValueError, match="unknown collective kind"):
+            fn("all_shuffle", 4, 1e6)
+
+
+def test_all_to_all_pinned_mesh_wafer_wide():
+    """Hand-computed: wafer-wide A2A on the 5×4 mesh — hierarchical 2D
+    with half the All-Reduce step count (one pass, no reduce-back)."""
+    m = MeshFabric()
+    D = 1e9
+    traffic = (m.n - 1) / m.n * D                       # 19/20 · D
+    steps = (m.cols - 1) + (m.rows - 1)                 # 7
+    per_step = (traffic / steps) / m.wafer_wide_allreduce_bw() \
+        + m.latency_per_hop + m.step_overhead
+    assert m.collective_time("all_to_all", list(range(m.n)), D) == \
+        pytest.approx(steps * per_step, rel=1e-12)
+
+
+@pytest.mark.parametrize("name,steps", [
+    ("FRED-A", 3),   # endpoint: 2(n−1) ring steps halved — one direction
+    ("FRED-B", 2),   # in-network, one L1: NPU→L1→NPU traversals
+    ("FRED-C", 3),
+    ("FRED-D", 2),
+])
+def test_all_to_all_pinned_fred_one_l1(name, steps):
+    """Hand-computed per Table-IV config: 4 NPUs under one L1 exchange
+    D = 4e8 B; traffic is (n−1)/n·D either way (no reduction to fuse)."""
+    fab = FredFabric(CONFIGS[name])
+    cfg = fab.config
+    D = 4e8
+    traffic = 3 / 4 * D
+    per_step = (traffic / steps) / cfg.npu_l1_bw \
+        + cfg.switch_latency + cfg.step_overhead
+    assert fab.collective_time("all_to_all", [0, 1, 2, 3], D) == \
+        pytest.approx(steps * per_step, rel=1e-12)
+
+
+def test_all_to_all_pinned_fred_wafer_wide_in_network():
+    """Spanning all five L1s: 4 traversals (NPU→L1→L2→L1→NPU), spine-
+    limited on FRED-B (1.5 TB/s), NPU-link-limited on FRED-D (3 TB/s)."""
+    D = 1e9
+    group = list(range(20))
+    traffic = 19 / 20 * D
+    for name, bw in (("FRED-B", 1.5e12), ("FRED-D", 3e12)):
+        fab = FredFabric(CONFIGS[name])
+        cfg = fab.config
+        per_step = (traffic / 4) / bw + cfg.switch_latency \
+            + cfg.step_overhead
+        assert fab.collective_time("all_to_all", group, D) == \
+            pytest.approx(4 * per_step, rel=1e-12), name
+
+
+# --------------------------------------------------------------------------
+# expert / sequence parallelism + overlap (ISSUE 8 tentpole)
+# --------------------------------------------------------------------------
+
+def _moe_workload(st, a2a=4096.0, mp_ar=2):
+    """Synthetic MoE workload: per-token expert dispatch traffic plus a
+    dominant expert share of the parameters."""
+    return Workload(name="moe", n_layers=12, params_per_layer=1e8,
+                    flops_fwd_per_sample_layer=1e10,
+                    act_bytes_per_sample=8192.0, strategy=st,
+                    execution="stationary", mp_allreduce_per_layer=mp_ar,
+                    samples_per_dp=4,
+                    a2a_bytes_per_sample_layer=a2a,
+                    expert_param_fraction=0.8)
+
+
+def test_ep_must_divide_per_wafer_dp():
+    with pytest.raises(ValueError, match="ep=3"):
+        Simulator("FRED-C").run(_moe_workload(Strategy(2, 5, 2, ep=3)))
+
+
+def test_sp_must_divide_mp():
+    with pytest.raises(ValueError, match="sp=3"):
+        Simulator("FRED-C").run(_moe_workload(Strategy(2, 5, 2, sp=3)))
+
+
+def test_ep_replaces_one_mp_allreduce_and_adds_a2a():
+    sim = Simulator("FRED-C")
+    st1, st2 = Strategy(2, 4, 2), Strategy(2, 4, 2, ep=2)
+    b1 = sim.run(_moe_workload(st1))
+    b2 = sim.run(_moe_workload(st2))
+    assert b1.ep_s == 0.0 and b2.ep_s > 0.0
+    # the dispatch A2A subsumes the FFN All-Reduce: mp_ar 2 → 1 exactly
+    assert b2.mp * 2 == b1.mp
+    # overlap off: exposed comm is the full post-phase mp + ep time, and
+    # ep_s is counted by total
+    assert b2.exposed_comm_s == b2.mp + b2.ep_s
+    assert b2.total == (b2.compute + b2.input_load + b2.mp + b2.dp +
+                        b2.pp + b2.stream + b2.ep_s)
+    # ep=1 ignores the expert-traffic annotations entirely (dense model)
+    assert sim.run(_moe_workload(st1)).as_dict() == \
+        sim.run(_moe_workload(st1, a2a=0.0)).as_dict()
+
+
+def test_ep_and_sp_shard_memory():
+    mem = MemoryModel()
+    base = memory_bytes_per_npu(_moe_workload(Strategy(2, 4, 2)), mem)
+    # EP shards the expert weights (resident scale (1−f) + f/ep < 1)
+    ep = memory_bytes_per_npu(_moe_workload(Strategy(2, 4, 2, ep=2)), mem)
+    # SP shards the resident activations a further sp-way
+    sp = memory_bytes_per_npu(_moe_workload(Strategy(2, 4, 2, sp=2)), mem)
+    assert ep < base and sp < base
+
+
+def test_sp_shards_pp_boundary_traffic():
+    sim = Simulator("FRED-C")
+    b1 = sim.run(_moe_workload(Strategy(2, 4, 2)))
+    b2 = sim.run(_moe_workload(Strategy(2, 4, 2, sp=2)))
+    assert b2.pp * 2 == b1.pp            # boundary tensor sharded sp-way
+    assert b2.mp == b1.mp and b2.compute == b1.compute
+
+
+def test_overlap_chain_matches_roofline_identity():
+    """comm_overlap_fraction: EP hides first, MP consumes the remaining
+    budget — and each phase obeys exactly
+    ``launch/roofline.exposed_comm_s`` (max(0, comm − overlappable)), so
+    the XLA-side roofline and the analytical model cannot drift."""
+    from repro.launch.roofline import exposed_comm_s
+    w = _moe_workload(Strategy(2, 4, 2, ep=2))
+    raw = Simulator("FRED-C").run(w)
+    assert raw.ep_s > 0 and raw.mp > 0
+    for f in (0.0, 0.02, 0.5, 1.0):
+        br = Simulator("FRED-C", comm_overlap_fraction=f).run(w)
+        budget = f * raw.compute
+        ep = exposed_comm_s(raw.ep_s, budget)
+        mp = exposed_comm_s(raw.mp, max(0.0, budget - raw.ep_s))
+        assert br.ep_s == ep and br.mp == mp           # bit-exact
+        assert br.exposed_comm_s == mp + ep
+        assert (br.compute, br.dp, br.pp, br.stream) == \
+            (raw.compute, raw.dp, raw.pp, raw.stream)
+    # a full-compute budget hides everything here
+    hidden = Simulator("FRED-C", comm_overlap_fraction=1.0).run(w)
+    assert hidden.ep_s == 0.0 and hidden.mp == 0.0 \
+        and hidden.exposed_comm_s == 0.0
 
 
 # --------------------------------------------------------------------------
