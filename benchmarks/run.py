@@ -638,6 +638,113 @@ def bench_epsweep(budget: float = 0.0, goldens: str = ""):
 
 
 # --------------------------------------------------------------------------
+# lifetimesweep — MTBF-driven goodput vs healthy-time decisions gate
+# --------------------------------------------------------------------------
+
+LIFETIME_CSV_HEADER = (
+    "arch,shape,objective,fabric,shape_a,shape_b,mp,dp,pp,ep,sp,wafers,"
+    "execution,flip,mtbf_npu_hours,time_per_sample_s,"
+    "goodput_samples_per_s,ckpt_write_s,ckpt_interval_s,useful_fraction,"
+    "survives_mission")
+
+
+def bench_lifetimesweep(budget: float = 0.0, goldens: str = ""):
+    """The lifetime-goodput CI gate: every registry arch decided twice —
+    healthy time vs lifetime goodput at :data:`repro.core.autostrategy
+    .LIFETIME_MTBF_NPU_HOURS` — with two invariants always checked: at
+    least one arch must *flip* its strategy under failures (otherwise
+    the objective is vacuous), and at ``mtbf = ∞`` the goodput decision
+    must be identical to the time decision for every arch (the bit-
+    identity that keeps the pre-lifetime goldens byte-stable).
+    ``--goldens`` diffs the pairs against tests/goldens/
+    lifetimesweep.json; writes ``artifacts/lifetimesweep_decisions.csv``.
+    ``budget`` (seconds, 0 = off) gates the total decision wall time."""
+    from repro.core.autostrategy import (LIFETIME_ARCHS, LIFETIME_SWEEP_KW,
+                                         LIFETIME_MTBF_NPU_HOURS,
+                                         _strategy_signature,
+                                         check_lifetime_goldens,
+                                         decision_table,
+                                         lifetime_decision_pairs,
+                                         lifetime_golden)
+    box = []
+
+    def run():
+        box[:] = lifetime_decision_pairs()
+    us = _time(run, iters=1)
+    pairs = box
+    emit("lifetimesweep_decisions", us,
+         f"models={len(pairs)};mtbf_npu_h={LIFETIME_MTBF_NPU_HOURS}")
+    rows = []
+    n_flips = 0
+    for t, g in pairs:
+        flip = lifetime_golden((t, g))["flip"]
+        n_flips += flip
+        emit(f"lifetimesweep[{t.arch}]", 0.0,
+             f"time={t.strategy}@{t.fabric};goodput={g.strategy}@"
+             f"{g.fabric};flip={int(flip)};"
+             f"goodput_samples_per_s={g.goodput_samples_per_s:.1f};"
+             f"useful_fraction={g.useful_fraction:.4f};"
+             f"ckpt_write_s={g.ckpt_write_s:.3f};"
+             f"ckpt_interval_s={g.ckpt_interval_s:.1f};"
+             f"survives={int(g.survives_mission)}")
+        for d in (t, g):
+            rows.append(
+                f"{d.arch},{d.shape},{d.objective},{d.fabric},"
+                f"{d.wafer_shape[0]},{d.wafer_shape[1]},"
+                f"{d.mp},{d.dp},{d.pp},{d.ep},{d.sp},{d.wafers},"
+                f"{d.execution},{int(flip)},{d.mtbf_npu_hours:.9g},"
+                f"{d.time_per_sample_s:.9g},"
+                f"{d.goodput_samples_per_s:.9g},{d.ckpt_write_s:.9g},"
+                f"{d.ckpt_interval_s:.9g},{d.useful_fraction:.9g},"
+                f"{int(d.survives_mission)}")
+    path = _artifacts() / "lifetimesweep_decisions.csv"
+    path.write_text("\n".join([LIFETIME_CSV_HEADER] + rows) + "\n")
+    emit("lifetimesweep[csv]", 0.0, f"{path} rows={len(rows)}")
+    if not n_flips:
+        print("lifetimesweep[FLIP-REGRESSION],0.0,no arch flips between "
+              "time and goodput objectives", file=sys.stderr)
+        sys.exit("lifetimesweep: the goodput objective no longer flips "
+                 "any registry decision at the pinned MTBF — the "
+                 "failure/degradation model regressed (core/lifetime.py "
+                 "chain, elastic reachability, or checkpoint costs)")
+    emit("lifetimesweep[flips]", 0.0,
+         f"{n_flips}/{len(pairs)} archs flip at "
+         f"mtbf={LIFETIME_MTBF_NPU_HOURS}h/NPU")
+    # mtbf=∞ bit-identity: goodput must reduce to the time objective
+    inf_d = decision_table(LIFETIME_ARCHS, objective="goodput",
+                           **LIFETIME_SWEEP_KW)
+    drift = [t.arch for (t, _g), i in zip(pairs, inf_d)
+             if _strategy_signature(t) != _strategy_signature(i)]
+    if drift:
+        print(f"lifetimesweep[INF-IDENTITY],0.0,{','.join(drift)} differ "
+              f"at mtbf=inf", file=sys.stderr)
+        sys.exit("lifetimesweep: goodput at mtbf=∞ is no longer "
+                 "bit-identical to the time objective — the never-fails "
+                 "degeneracy in core/lifetime.py broke, which also "
+                 "endangers the pre-lifetime goldens")
+    emit("lifetimesweep[inf-identity]", 0.0,
+         f"goodput@mtbf=inf == time for all {len(inf_d)} archs")
+    if goldens:
+        errors = check_lifetime_goldens(pairs, goldens)
+        if errors:
+            for e in errors:
+                print(f"lifetimesweep[GOLDEN-DIFF],0.0,{e}",
+                      file=sys.stderr)
+            sys.exit("lifetimesweep: decisions diverge from "
+                     f"{goldens} — if the cost-model change is intended, "
+                     "regenerate with tests/gen_lifetime_golden.py")
+        emit("lifetimesweep[goldens]", 0.0, f"match {goldens}")
+    wall_s = us / 1e6
+    if budget and wall_s > budget:
+        print(f"lifetimesweep[BUDGET],0.0,decisions {wall_s:.3f}s > "
+              f"{budget}s", file=sys.stderr)
+        sys.exit("lifetimesweep: the time+goodput decision table blew "
+                 "the CI wall-time budget — a perf regression in the "
+                 "degradation-chain fallback sweeps or their cache "
+                 "(core/lifetime.py)")
+
+
+# --------------------------------------------------------------------------
 # Table III — FRED switch HW overhead
 # --------------------------------------------------------------------------
 
@@ -786,6 +893,7 @@ BENCHES = {
     "faultsweep": bench_faultsweep,
     "autostrategy": bench_autostrategy,
     "epsweep": bench_epsweep,
+    "lifetimesweep": bench_lifetimesweep,
     "table3": bench_table3,
     "routing": bench_routing,
     "collectives": bench_collectives,
@@ -827,6 +935,12 @@ def main() -> None:
                          "the scalar oracle and the ep>1 MoE decisions "
                          "are always checked; --goldens diffs against "
                          "tests/goldens/epsweep.json)")
+    ap.add_argument("--lifetimesweep-budget", type=float, default=0.0,
+                    help="lifetimesweep only: fail if the time+goodput "
+                         "decision table exceeds this many seconds (CI "
+                         "gate; the ≥1-flip and mtbf=∞ bit-identity "
+                         "invariants are always checked; --goldens diffs "
+                         "against tests/goldens/lifetimesweep.json)")
     ap.add_argument("--hiersweep-budget", type=float, default=0.0,
                     help="hiersweep only: fail if the batched 64-NPU × "
                          "4-wafer × {ring,fully_connected,switch} × "
@@ -855,6 +969,9 @@ def main() -> None:
         elif n == "epsweep":
             bench_epsweep(budget=args.epsweep_budget,
                           goldens=args.goldens)
+        elif n == "lifetimesweep":
+            bench_lifetimesweep(budget=args.lifetimesweep_budget,
+                                goldens=args.goldens)
         else:
             BENCHES[n]()
 

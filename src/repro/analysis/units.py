@@ -39,6 +39,7 @@ CORE_PREFIX = "src/repro/core"
 UNIT_TOKENS = {
     "s": "s", "sec": "s", "secs": "s", "seconds": "s", "ms": "s",
     "us": "s", "ns": "s",
+    "hours": "hours", "hrs": "hours",
     "bytes": "bytes", "byte": "bytes", "gib": "bytes", "gb": "bytes",
     "mb": "bytes", "kib": "bytes",
     "bw": "bw", "bps": "bw", "gbps": "bw",

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
@@ -54,6 +55,20 @@ DEFAULT_FABRICS = ("baseline", "FRED-C", "FRED-D")
 # so the gate and its golden generator can never drift apart.
 MOE_ARCHS = ("mixtral-8x7b", "arctic-480b")
 EP_SWEEP_KW = dict(ep_candidates=(1, 2, 4, 8), sp_candidates=(1, 2))
+
+# The lifetimesweep CI gate: every registry arch, decided twice (healthy
+# time vs lifetime goodput) on the PR-6 single-wafer deployment at a
+# realistic per-NPU MTBF.  2000 h/NPU ≈ 83 days; at 20 used NPUs the
+# system fails every ~100 h, ~7 failures over the 720 h mission — enough
+# for elastic-degradation differences to flip decisions (zamba2-2.7b,
+# chatglm3-6b, arctic-480b at the pinned settings).  Shared by
+# benchmarks.run --only lifetimesweep and tests/gen_lifetime_golden.py so
+# the gate and its golden generator can never drift apart.
+LIFETIME_ARCHS = ("zamba2-2.7b", "llava-next-34b", "whisper-medium",
+                  "llama3.2-1b", "chatglm3-6b", "qwen3-32b", "qwen1.5-4b",
+                  "arctic-480b", "mixtral-8x7b", "mamba2-1.3b")
+LIFETIME_SWEEP_KW = dict(n_npus=20, max_wafers=1)
+LIFETIME_MTBF_NPU_HOURS = 2000.0
 
 
 class InfeasibleModelError(RuntimeError):
@@ -84,6 +99,16 @@ class AutoStrategyDecision:
     n_infeasible: int                 # failed the memory predicate
     n_dominated: int                  # feasible but off the Pareto front
     sweep_seconds: float
+    # lifetime-goodput objective (core/lifetime.py); defaults are the
+    # plain time objective so pre-lifetime constructions/goldens are
+    # untouched
+    objective: str = "time"           # time | goodput
+    mtbf_npu_hours: float = math.inf
+    goodput_samples_per_s: float = 0.0
+    ckpt_write_s: float = 0.0         # repro: unit[s]
+    ckpt_interval_s: float = 0.0      # repro: unit[s] (inf: never ckpt)
+    useful_fraction: float = 1.0      # healthy-state wall-clock share
+    survives_mission: bool = True     # degradation chain never went dead
 
     @property
     def mp(self) -> int:
@@ -121,7 +146,19 @@ class AutoStrategyDecision:
             out["ep"] = self.ep
         if self.sp > 1:
             out["sp"] = self.sp
+        if self.objective != "time":
+            out["objective"] = self.objective
         return out
+
+
+def _pick_key(r: SweepResult):
+    """The deterministic tiebreak chain shared by the time objective's
+    Pareto pick and the goodput objective's equal-goodput tiebreak."""
+    return (r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers,
+            TOPOLOGY_CODES.get(r.inter_topology, -1), len(r.hierarchy),
+            r.fabric, r.hierarchy, r.shape,
+            (r.strategy.mp, r.strategy.dp, r.strategy.pp,
+             r.strategy.ep, r.strategy.sp))
 
 
 def _pick(front: Sequence[SweepResult]) -> SweepResult:
@@ -130,12 +167,36 @@ def _pick(front: Sequence[SweepResult]) -> SweepResult:
     interconnect (ring < fully-connected < switch — at 2 wafers all
     three are time-equal, so the tiebreak buys the ring's 2 links over a
     switch or n² point-to-point wiring), then a total lexical tiebreak."""
-    return min(front, key=lambda r: (
-        r.time_per_sample, r.memory_bytes_per_npu, r.n_wafers,
-        TOPOLOGY_CODES.get(r.inter_topology, -1), len(r.hierarchy),
-        r.fabric, r.hierarchy, r.shape,
-        (r.strategy.mp, r.strategy.dp, r.strategy.pp,
-         r.strategy.ep, r.strategy.sp)))
+    return min(front, key=_pick_key)
+
+
+def _pick_by_goodput(workload_fn, feasible: Sequence[SweepResult],
+                     n_npus: int, *, mem: MemoryModel, failure,
+                     top_k: int, n_states: int, seed: int,
+                     sweep_kw: Dict):
+    """(chosen, LifetimeEstimate) with the highest lifetime goodput.
+
+    Candidates come from the whole *feasible* set (ordered and truncated
+    by the time objective's deterministic key), not just the time/memory
+    Pareto front — a survivable strategy dominated on healthy time is
+    exactly what this objective exists to find.  Fallback re-sweeps are
+    shared across candidates via one per-mask cache.  Equal goodput
+    falls back to the time objective's tiebreak, so at ``mtbf = ∞``
+    (every fraction exactly 1.0) the choice is bit-identical to
+    ``_pick``."""
+    from .lifetime import evaluate_candidate
+    ranked = sorted(feasible, key=_pick_key)[:top_k]
+    cache: Dict = {}
+    best = None
+    for r in ranked:
+        est = evaluate_candidate(
+            workload_fn, r, n_npus, failure=failure, mem=mem,
+            n_states=n_states, seed=seed, sweep_kw=sweep_kw,
+            fallback_cache=cache)
+        key = (-est.goodput_samples_per_s,) + _pick_key(r)
+        if best is None or key < best[0]:
+            best = (key, r, est)
+    return best[1], best[2]
 
 
 def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
@@ -152,9 +213,27 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
                     prune_symmetric: bool = True,
                     ep_candidates: Sequence[int] = (1,),
                     sp_candidates: Sequence[int] = (1,),
-                    comm_overlap_fraction: float = 0.0
+                    comm_overlap_fraction: float = 0.0,
+                    objective: str = "time",
+                    mtbf_npu_hours: float = math.inf,
+                    mtbf_wafer_hours: float = math.inf,
+                    mission_hours: float = 720.0,
+                    restart_s: float = 60.0,
+                    goodput_top_k: int = 32,
+                    n_failure_states: int = 3,
+                    failure_seed: int = 0
                     ) -> AutoStrategyDecision:
     """Return the simulator-chosen, memory-feasible strategy for a cell.
+
+    ``objective="goodput"`` ranks candidates by **lifetime goodput**
+    (core/lifetime.py) instead of healthy-iteration time: the top
+    ``goodput_top_k`` feasible candidates (by the time-objective order)
+    are each pushed through the MTBF / checkpoint / elastic-degradation
+    model at ``mtbf_npu_hours`` (and optionally ``mtbf_wafer_hours``)
+    over a ``mission_hours`` run, so a slightly-slower strategy that
+    keeps running after failures can beat a fragile healthy-time winner.
+    At ``mtbf = ∞`` the goodput ranking is bit-identical to the time
+    objective (nothing fails, the useful fraction is exactly 1.0).
 
     Weight-stationary execution is preferred (paper Sec. III-A);
     weight-streaming is tried only when no stationary candidate fits the
@@ -173,32 +252,55 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
     still the training-iteration model, so serving decisions rank
     strategies by the same communication structure, not absolute latency.
     """
+    if objective not in ("time", "goodput"):
+        raise ValueError(f"unknown objective {objective!r} — "
+                         f"'time' or 'goodput'")
     training = shape.kind == "train"
     mem = MemoryModel(npu_hbm_bytes=npu_hbm_bytes, master=master,
                       moments_dtype=moments_dtype, remat=remat,
                       training=training)
     n_layers = adapter_n_layers(cfg)
     n_candidates = n_infeasible = 0
+    sweep_kw = dict(fabrics=fabrics, n_layers=n_layers,
+                    min_utilization=min_utilization,
+                    max_wafers=max_wafers,
+                    inter_topologies=inter_topologies,
+                    max_levels=max_levels, memory=mem,
+                    prune_symmetric=prune_symmetric,
+                    ep_candidates=ep_candidates,
+                    sp_candidates=sp_candidates,
+                    comm_overlap_fraction=comm_overlap_fraction)
     t0 = time.perf_counter()  # repro: ignore[DETERMINISM] duration metric only
     for execution in ("stationary", "streaming"):
         def wl(st: Strategy, _e=execution):
             return from_model_config(cfg, shape, st, execution=_e)
-        results = sweep(wl, n_npus, fabrics=fabrics, n_layers=n_layers,
-                        min_utilization=min_utilization,
-                        max_wafers=max_wafers,
-                        inter_topologies=inter_topologies,
-                        max_levels=max_levels, memory=mem,
-                        prune_symmetric=prune_symmetric,
-                        ep_candidates=ep_candidates,
-                        sp_candidates=sp_candidates,
-                        comm_overlap_fraction=comm_overlap_fraction)
+        results = sweep(wl, n_npus, **sweep_kw)
         n_candidates += len(results)
         feasible = [r for r in results if r.feasible]
         n_infeasible += len(results) - len(feasible)
         if not feasible:
             continue
         front = [r for r in feasible if r.pareto]
-        chosen = _pick(front)
+        extra: Dict[str, object] = {}
+        if objective == "goodput":
+            from .lifetime import FailureModel
+            failure = FailureModel(mtbf_npu_hours=mtbf_npu_hours,
+                                   mtbf_wafer_hours=mtbf_wafer_hours,
+                                   restart_s=restart_s,
+                                   mission_hours=mission_hours)
+            chosen, est = _pick_by_goodput(
+                wl, feasible, n_npus, mem=mem, failure=failure,
+                top_k=goodput_top_k, n_states=n_failure_states,
+                seed=failure_seed, sweep_kw=sweep_kw)
+            extra = dict(objective="goodput",
+                         mtbf_npu_hours=mtbf_npu_hours,
+                         goodput_samples_per_s=est.goodput_samples_per_s,
+                         ckpt_write_s=est.ckpt_write_s,
+                         ckpt_interval_s=est.interval_s,
+                         useful_fraction=est.fractions["useful"],
+                         survives_mission=est.survives_mission)
+        else:
+            chosen = _pick(front)
         return AutoStrategyDecision(
             arch=cfg.name, shape=shape.name, fabric=chosen.fabric,
             wafer_shape=chosen.shape, strategy=chosen.strategy,
@@ -211,7 +313,8 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
             npu_hbm_bytes=npu_hbm_bytes,
             n_candidates=n_candidates, n_infeasible=n_infeasible,
             n_dominated=len(feasible) - len(front),
-            sweep_seconds=time.perf_counter() - t0)  # repro: ignore[DETERMINISM] never feeds goldens
+            sweep_seconds=time.perf_counter() - t0,  # repro: ignore[DETERMINISM] never feeds goldens
+            **extra)
     raise InfeasibleModelError(
         f"{cfg.name}/{shape.name}: none of {n_candidates} candidates fits "
         f"{npu_hbm_bytes / 2**30:.1f} GiB/NPU at {n_npus} NPUs/wafer × "
@@ -292,6 +395,78 @@ def check_goldens(decisions: Sequence[AutoStrategyDecision],
             errors.append(f"{key}: chosen {got} != golden {want}")
     # a golden with no matching decision means the gate lost coverage
     # (model dropped/renamed in the bench list) — that must fail too
+    for key in sorted(set(goldens) - seen):
+        errors.append(f"{key}: golden has no matching decision (model "
+                      f"removed from the bench list? delete the golden "
+                      f"entry if intended)")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# lifetimesweep (time-vs-goodput decision pairs + golden gate)
+# --------------------------------------------------------------------------
+
+def lifetime_decision_pairs(
+        archs: Sequence[str] = LIFETIME_ARCHS,
+        shape_name: str = "train_4k",
+        mtbf_npu_hours: float = LIFETIME_MTBF_NPU_HOURS,
+        **kw) -> List[Tuple[AutoStrategyDecision, AutoStrategyDecision]]:
+    """Per-arch ``(time, goodput)`` decision pairs at one MTBF.
+
+    Both decisions see the identical sweep space (``LIFETIME_SWEEP_KW``
+    unless overridden) — the only difference is the ranking objective,
+    so a differing pair is a genuine MTBF-driven strategy flip."""
+    merged = {**LIFETIME_SWEEP_KW, **kw}
+    time_d = decision_table(archs, shape_name, objective="time", **merged)
+    good_d = decision_table(archs, shape_name, objective="goodput",
+                            mtbf_npu_hours=mtbf_npu_hours, **merged)
+    return list(zip(time_d, good_d))
+
+
+def _strategy_signature(d: AutoStrategyDecision) -> Dict[str, object]:
+    """The decision fields a flip is judged on (objective key dropped —
+    the two columns differ there by construction)."""
+    sig = d.golden()
+    sig.pop("objective", None)
+    sig["wafer_shape"] = list(d.wafer_shape)
+    return sig
+
+
+def lifetime_golden(pair: Tuple[AutoStrategyDecision, AutoStrategyDecision]
+                    ) -> Dict[str, object]:
+    """One golden entry: both decisions, the flip verdict, and whether
+    the goodput winner's degradation chain survives the mission."""
+    t, g = pair
+    ts, gs = _strategy_signature(t), _strategy_signature(g)
+    return {"time": ts, "goodput": gs, "flip": ts != gs,
+            "survives_mission": g.survives_mission}
+
+
+def check_lifetime_goldens(
+        pairs: Sequence[Tuple[AutoStrategyDecision, AutoStrategyDecision]],
+        golden_path: str) -> List[str]:
+    """Diff time/goodput decision pairs against the lifetimesweep golden.
+
+    Same contract as :func:`check_goldens`: returns human-readable
+    mismatch lines (empty = green) and flags orphaned golden entries, so
+    a cost-model change that silently flips a goodput decision — or
+    un-flips one the gate pins — fails CI."""
+    with open(golden_path) as fh:
+        goldens = json.load(fh)
+    errors = []
+    seen = set()
+    for pair in pairs:
+        t = pair[0]
+        key = f"{t.arch}/{t.shape}"
+        seen.add(key)
+        want = goldens.get(key)
+        if want is None:
+            errors.append(f"{key}: no golden entry (add it to "
+                          f"{golden_path})")
+            continue
+        got = lifetime_golden(pair)
+        if got != want:
+            errors.append(f"{key}: decided {got} != golden {want}")
     for key in sorted(set(goldens) - seen):
         errors.append(f"{key}: golden has no matching decision (model "
                       f"removed from the bench list? delete the golden "

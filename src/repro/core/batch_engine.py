@@ -306,26 +306,41 @@ class BatchEngine:
     sim: Simulator
 
     def __post_init__(self):
+        if getattr(self.sim, "wafer_defects", None) is not None:
+            raise NotImplementedError(
+                "per-wafer defect masks (ClusterSpec.wafer_defects) are a "
+                "scalar-Simulator feature, not a sweep axis — the batched "
+                "engine only models the uniform FabricSpec.defects mask")
         self._io_rate = self.sim._io_rate()
         self._gs_lane: Optional[np.ndarray] = None   # per-lane FRED group
                                                      # sizes in fused runs
 
     # ---- structural tables (one batched computation per missing pattern) ---
     def _ring_structs(self, counts: np.ndarray, strides: np.ndarray,
-                      needed: Optional[np.ndarray] = None
+                      needed: Optional[np.ndarray] = None,
+                      used: Optional[np.ndarray] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         mesh = self.sim.mesh
         rows, cols = mesh.rows, mesh.cols
-        uniq, inv = _unique_rows((counts, strides))
         d = mesh.defects
         if d is not None:
             # masked structures come from the scalar defect-aware walk on
-            # the compacted group (detours and congestion depend on where
-            # the holes are, not just on the (count, stride) pattern).
-            # ``needed`` marks the lanes the scalar engine actually
-            # evaluates: a hole-disconnected ring must raise exactly when
-            # the scalar path would route it, and stay silent (neutral
-            # structure, result masked out downstream) when it would not.
+            # the compacted group family (detours and congestion depend on
+            # where the holes are, not just on the (count, stride)
+            # pattern).  ``used`` is the per-lane NPUs-used-per-wafer the
+            # strided concurrent-group family tiles (meshnet
+            # strided_ring_family) — the evaluated ring pays the max
+            # shared-link load over the whole family, exactly like the
+            # scalar path's concurrent_rings; None falls back to the
+            # single representative ring.  ``needed`` marks the lanes the
+            # scalar engine actually evaluates: a hole-disconnected ring
+            # must raise exactly when the scalar path would route it, and
+            # stay silent (neutral structure, result masked out
+            # downstream) when it would not.
+            from .meshnet import strided_ring_family
+            if used is None:
+                used = np.zeros_like(counts)
+            uniq, inv = _unique_rows((counts, strides, used))
             healthy = d.healthy()
             m = len(uniq)
             if needed is None:
@@ -335,18 +350,20 @@ class BatchEngine:
                                          minlength=m) > 0
             cong = np.empty(m, dtype=np.int64)
             hops = np.empty(m, dtype=np.float64)
-            for j, (c, s) in enumerate(uniq):
+            for j, (c, s, u) in enumerate(uniq):
                 if c <= 1 or not pat_needed[j]:
                     cong[j], hops[j] = 1, 1.0
                     continue
-                key = (rows, cols, c, s, d)
+                key = (rows, cols, c, s, u, d)
                 st = _RING_STRUCTS.get(key)
                 if st is None:
-                    group = [healthy[i * s] for i in range(c)]
-                    st = mesh.ring_structure(group)
+                    fam = strided_ring_family(healthy, c, s, u)
+                    st = (max(mesh.ring_max_congestion(fam), 1),
+                          mesh._ring_hops(fam[0]))
                     _RING_STRUCTS[key] = st
                 cong[j], hops[j] = st
             return cong[inv], hops[inv]
+        uniq, inv = _unique_rows((counts, strides))
         missing = [(c, s) for c, s in uniq
                    if c > 1 and (rows, cols, c, s) not in _RING_STRUCTS]
         if missing:
@@ -501,11 +518,19 @@ class BatchEngine:
 
     def _wafer_coll(self, kind: str, counts: np.ndarray, strides: np.ndarray,
                     conc: np.ndarray, nbytes: np.ndarray,
-                    needed: Optional[np.ndarray] = None) -> np.ndarray:
-        """One intra-wafer collective over the (count, stride) pattern —
-        mesh rings ignore concurrency exactly like the scalar path."""
+                    needed: Optional[np.ndarray] = None,
+                    used: Optional[np.ndarray] = None) -> np.ndarray:
+        """One intra-wafer collective over the (count, stride) pattern.
+
+        Healthy mesh rings ignore concurrency exactly like the scalar
+        path (disjoint X-Y rings); under a defect mask ``used`` (per-lane
+        NPUs used per wafer) keys the concurrent-ring family whose
+        shared-link detour congestion the evaluated ring pays — the
+        scalar path's ``concurrent_rings``, bit-for-bit.  FRED already
+        models concurrency via the ``conc`` bandwidth share."""
         if self.sim.mesh is not None:
-            cong, hops = self._ring_structs(counts, strides, needed=needed)
+            cong, hops = self._ring_structs(counts, strides, needed=needed,
+                                            used=used)
             return self._mesh_coll(kind, counts, cong, hops, nbytes)
         g, k, fac = self._span_structs(counts, strides)
         return self._fred_coll(kind, counts, g, k, conc, nbytes, l2f=fac)
@@ -669,8 +694,12 @@ class BatchEngine:
         act_bytes = b.abps * b.samples
         mp_mask = (mp > 1) & (mp_ar > 0)
         mp_conc = np.maximum(1, (dp * pp) // wafers)
+        # per-lane NPUs used per wafer — the strided concurrent-group
+        # family extent every axis' masked ring congestion is keyed on
+        used = mp * pp * (dp // np.maximum(wafers, 1))
         per_layer = self._wafer_coll("all_reduce", mp, np.ones_like(mp),
-                                     mp_conc, act_bytes, needed=mp_mask)
+                                     mp_conc, act_bytes, needed=mp_mask,
+                                     used=used)
         mp_time = np.where(mp_mask,
                            per_layer * mp_ar * 2 * layers * bubble, 0.0)
 
@@ -681,7 +710,8 @@ class BatchEngine:
         a2a_bytes = b.a2a_layer * b.samples
         ep_conc = np.maximum(1, (mp * pp * dp) // (b.ep * wafers))
         per_layer_ep = self._wafer_coll("all_to_all", b.ep, mp * pp,
-                                        ep_conc, a2a_bytes, needed=ep_mask)
+                                        ep_conc, a2a_bytes, needed=ep_mask,
+                                        used=used)
         ep_raw = np.where(ep_mask,
                           per_layer_ep * 2 * 2 * layers * bubble, 0.0)
 
@@ -717,7 +747,7 @@ class BatchEngine:
             # computing both to the same value
             if sim.mesh is not None:
                 cong, hops = self._ring_structs(counts, stride,
-                                                needed=dp_mask)
+                                                needed=dp_mask, used=used)
                 t_ar = self._mesh_coll("all_reduce", counts, cong, hops,
                                        grad)
                 t_rs = self._mesh_coll("reduce_scatter", counts, cong,
@@ -751,7 +781,7 @@ class BatchEngine:
                                             s2, mp, grad, agg2, lat2), 0.0)
         else:
             ti = self._wafer_coll("all_reduce", dp, stride, n_dp_groups,
-                                  grad, needed=dp_mask)
+                                  grad, needed=dp_mask, used=used)
             te1 = np.zeros_like(ti)
             te2 = np.zeros_like(ti)
         dp_intra, lvl1, lvl2 = _iterated_layer_sum(ti, te1, te2, layers,

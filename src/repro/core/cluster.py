@@ -184,6 +184,11 @@ class WaferCluster:
     link: WaferLink = dataclasses.field(default_factory=WaferLink)
     topology: str = "ring"
     levels: Optional[Sequence[HierarchyLevel]] = None
+    # one DefectMask (or None = pristine) per wafer — the cluster stops
+    # pretending every wafer shipped with the same holes.  Mutually
+    # exclusive with a mask on the base ``wafer`` fabric; None keeps the
+    # uniform-wafer fast path bit-identical.
+    wafer_defects: Optional[Sequence] = None
 
     def __post_init__(self):
         if self.levels is not None:
@@ -207,6 +212,51 @@ class WaferCluster:
         # hot enough to show in sweep profiles, so snapshot it once (the
         # wafer shape is fixed for the cluster's lifetime)
         self._npus_per_wafer = self.wafer.n_npus
+        self._wafer_variants: Optional[Tuple[WaferFabric, ...]] = None
+        if self.wafer_defects is not None:
+            from .defects import normalize
+            masks = tuple(normalize(m) for m in self.wafer_defects)
+            if all(m is None for m in masks):
+                self.wafer_defects = None
+            else:
+                if len(masks) != self.n_wafers:
+                    raise ValueError(
+                        f"wafer_defects has {len(masks)} entries for a "
+                        f"{self.n_wafers}-wafer cluster — one mask (or "
+                        f"None) per wafer")
+                if self.wafer.defects is not None:
+                    raise ValueError(
+                        "per-wafer wafer_defects and a defect mask on the "
+                        "base wafer fabric are mutually exclusive — pass "
+                        "one or the other")
+                for w, m in enumerate(masks):
+                    if m is not None and m.n_npus != self._npus_per_wafer:
+                        raise ValueError(
+                            f"wafer {w} mask covers {m.n_npus} NPUs but "
+                            f"each wafer has {self._npus_per_wafer}")
+                self.wafer_defects = masks
+                self._wafer_variants = tuple(
+                    self.wafer if m is None
+                    else dataclasses.replace(self.wafer, defects=m)
+                    for m in masks)
+
+    def wafer_fabric(self, wafer_idx: int) -> WaferFabric:
+        """The fabric of one specific wafer — the base fabric unless a
+        per-wafer defect mask replaces it with a degraded variant."""
+        if self._wafer_variants is None:
+            return self.wafer
+        return self._wafer_variants[wafer_idx]
+
+    @property
+    def n_healthy_npus(self) -> int:
+        """Usable NPUs across the cluster under the per-wafer masks (the
+        base fabric's own mask counts uniformly when no per-wafer list is
+        set)."""
+        if self.wafer_defects is not None:
+            npw = self._npus_per_wafer
+            return sum(npw if m is None else m.n_healthy
+                       for m in self.wafer_defects)
+        return self.wafer.n_healthy * self.n_wafers
 
     # ---- id space --------------------------------------------------------------
     @property
@@ -261,11 +311,28 @@ class WaferCluster:
 
     # ---- collectives -----------------------------------------------------------
     def _wafer_coll(self, kind: str, local_group: Sequence[int],
-                    nbytes: float, concurrent_groups: int) -> float:
-        if isinstance(self.wafer, MeshFabric):
-            return self.wafer.collective_time(kind, local_group, nbytes)
-        return self.wafer.collective_time(kind, local_group, nbytes,
-                                          concurrent_groups=concurrent_groups)
+                    nbytes: float, concurrent_groups: int,
+                    ring_family: "Tuple[int, int, int] | None" = None,
+                    wafer_idx: int = 0) -> float:
+        """Intra-wafer collective on wafer ``wafer_idx``'s fabric (the
+        per-wafer degraded variant when ``wafer_defects`` is set).
+        ``ring_family`` is the compact ``(count, stride, n_used)``
+        descriptor of the strided concurrent local-group family (one per
+        wafer); under a defect mask the mesh materializes it so detoured
+        sibling rings charge the evaluated ring the real shared-link
+        bandwidth (healthy meshes keep the single-ring model — their X-Y
+        rings are disjoint)."""
+        fab = self.wafer_fabric(wafer_idx)
+        if isinstance(fab, MeshFabric):
+            rings: Sequence[Sequence[int]] = ()
+            if ring_family is not None and fab.defects is not None:
+                from .meshnet import strided_ring_family
+                rings = strided_ring_family(fab.defects.healthy(),
+                                            *ring_family)
+            return fab.collective_time(kind, local_group, nbytes,
+                                       concurrent_rings=rings)
+        return fab.collective_time(kind, local_group, nbytes,
+                                   concurrent_groups=concurrent_groups)
 
     def inter_ring_params(self) -> Tuple[float, float]:
         """(aggregate level-1 BW, per-step latency) — kept for the PR-2
@@ -322,7 +389,8 @@ class WaferCluster:
 
     def collective_time_levels(self, kind: str, group: Sequence[int],
                                nbytes: float, concurrent_groups: int = 1,
-                               inter_concurrent_groups: "int | None" = None
+                               inter_concurrent_groups: "int | None" = None,
+                               ring_family: "Tuple[int, int, int] | None" = None
                                ) -> Tuple[float, Tuple[float, ...]]:
         """(intra-wafer, per-inter-level) time split for one collective.
 
@@ -340,8 +408,10 @@ class WaferCluster:
             return 0.0, zeros
         by_wafer = self.split_by_wafer(group)
         if len(by_wafer) == 1:
-            local = next(iter(by_wafer.values()))
-            return (self._wafer_coll(kind, local, nbytes, concurrent_groups),
+            w = next(iter(by_wafer))
+            return (self._wafer_coll(kind, by_wafer[w], nbytes,
+                                     concurrent_groups,
+                                     ring_family=ring_family, wafer_idx=w),
                     zeros)
         inter_conc = (concurrent_groups if inter_concurrent_groups is None
                       else inter_concurrent_groups)
@@ -351,12 +421,25 @@ class WaferCluster:
             # the wafer, and the full payload crosses each spanned level
             # (same full-payload-per-level convention as ``_level_times``)
             n = len(group)
-            widest = max(by_wafer.values(), key=len)
-            k = len(widest)
             intra = 0.0
-            if k > 1:
-                intra = self._wafer_coll("all_to_all", widest,
-                                         nbytes * k / n, concurrent_groups)
+            if self._wafer_variants is not None:
+                # per-wafer masks: each wafer runs its local exchange on
+                # its *own* degraded fabric in parallel — slowest gates
+                for w, local in by_wafer.items():
+                    kw = len(local)
+                    if kw > 1:
+                        intra = max(intra, self._wafer_coll(
+                            "all_to_all", local, nbytes * kw / n,
+                            concurrent_groups, ring_family=ring_family,
+                            wafer_idx=w))
+            else:
+                widest = max(by_wafer.values(), key=len)
+                k = len(widest)
+                if k > 1:
+                    intra = self._wafer_coll("all_to_all", widest,
+                                             nbytes * k / n,
+                                             concurrent_groups,
+                                             ring_family=ring_family)
             spans = self.level_spans(by_wafer.keys())
             levels_t = tuple(
                 level_collective_time(lvl.topology, "all_to_all", s, nbytes,
@@ -369,12 +452,30 @@ class WaferCluster:
                 f"cross-wafer {kind!r} not modeled: placement keeps MP/PP "
                 f"within a wafer, only the DP All-Reduce and the expert "
                 f"All-to-All span wafers")
+        if self._wafer_variants is not None:
+            # per-wafer masks: the RS/AG sandwich runs concurrently on
+            # every spanned wafer's own degraded fabric; the slowest
+            # wafer's sandwich gates the hierarchical All-Reduce
+            intra = 0.0
+            for w, local in by_wafer.items():
+                if len(local) <= 1:
+                    continue
+                t = (self._wafer_coll("reduce_scatter", local, nbytes,
+                                      concurrent_groups,
+                                      ring_family=ring_family, wafer_idx=w) +
+                     self._wafer_coll("all_gather", local, nbytes,
+                                      concurrent_groups,
+                                      ring_family=ring_family, wafer_idx=w))
+                intra = max(intra, t)
+            spans = self.level_spans(by_wafer.keys())
+            return intra, self._level_times(spans, nbytes, inter_conc)
         widest = max(by_wafer.values(), key=len)
         k = len(widest)
         intra = 0.0
         if k > 1:
             intra += self._wafer_coll("reduce_scatter", widest, nbytes,
-                                      concurrent_groups)
+                                      concurrent_groups,
+                                      ring_family=ring_family)
         # the k per-member shard exchanges run concurrently but share the
         # same inter links at every level, so the group's boundary traffic
         # at a level is set by its full payload regardless of k (the
@@ -384,18 +485,21 @@ class WaferCluster:
         levels_t = self._level_times(spans, nbytes, inter_conc)
         if k > 1:
             intra += self._wafer_coll("all_gather", widest, nbytes,
-                                      concurrent_groups)
+                                      concurrent_groups,
+                                      ring_family=ring_family)
         return intra, levels_t
 
     def collective_time_parts(self, kind: str, group: Sequence[int],
                               nbytes: float, concurrent_groups: int = 1,
-                              inter_concurrent_groups: "int | None" = None
+                              inter_concurrent_groups: "int | None" = None,
+                              ring_family: "Tuple[int, int, int] | None" = None
                               ) -> Tuple[float, float]:
         """(intra-wafer, total-inter) split — the PR-2 two-way view of
         :meth:`collective_time_levels` (single-level clusters are
         bit-identical; deeper stacks sum their levels)."""
         intra, levels_t = self.collective_time_levels(
-            kind, group, nbytes, concurrent_groups, inter_concurrent_groups)
+            kind, group, nbytes, concurrent_groups, inter_concurrent_groups,
+            ring_family=ring_family)
         inter = 0.0
         for t in levels_t:
             inter += t
@@ -433,7 +537,12 @@ class WaferCluster:
 
     def tag(self) -> Tuple:
         """Physical identity of the inter levels for collective memo keys
-        (the wafer fabric contributes its own tag)."""
-        return ("cluster", self.n_wafers) + tuple(
+        (the wafer fabric contributes its own tag; per-wafer defect masks
+        are part of the identity — two clusters with different hole
+        patterns must never share collective memo entries)."""
+        t = ("cluster", self.n_wafers) + tuple(
             (lvl.count, lvl.topology, lvl.link.n_links, lvl.link.link_bw,
              lvl.link.latency) for lvl in self.levels)
+        if self.wafer_defects is not None:
+            t = t + (tuple(self.wafer_defects),)
+        return t

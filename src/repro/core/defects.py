@@ -221,3 +221,21 @@ def mesh_connected(mask: DefectMask, rows: int, cols: int) -> bool:
 def normalize(mask: Optional[DefectMask]) -> Optional[DefectMask]:
     """Empty masks → None, so all-healthy draws share the no-mask path."""
     return None if mask is None or mask.is_empty else mask
+
+
+# ---- per-wafer mask lists (WaferCluster.wafer_defects) --------------------
+
+def masks_to_json(masks: Sequence[Optional[DefectMask]]) -> str:
+    """JSON for a per-wafer mask list — one entry per wafer, ``null`` for
+    a pristine wafer (the on-disk form of
+    ``ClusterSpec.wafer_defects``)."""
+    return json.dumps([None if m is None else json.loads(m.to_json())
+                       for m in masks], sort_keys=True)
+
+
+def masks_from_json(text: str) -> Tuple[Optional[DefectMask], ...]:
+    """Inverse of :func:`masks_to_json`; entries are normalized (an empty
+    mask loads as None)."""
+    return tuple(None if e is None
+                 else normalize(DefectMask.from_json(json.dumps(e)))
+                 for e in json.loads(text))

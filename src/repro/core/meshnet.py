@@ -26,6 +26,33 @@ from .defects import DefectMask, normalize
 Link = Tuple[Tuple[int, int], Tuple[int, int]]   # ((r,c) -> (r,c))
 
 
+def strided_ring_family(healthy: Sequence[int], count: int, stride: int,
+                        n_used: int) -> List[List[int]]:
+    """All concurrent rings of one strided-group pattern, materialized on
+    the ``healthy`` id list.
+
+    Under the canonical placements every collective of one parallelism
+    axis is a family of arithmetic progressions over the first ``n_used``
+    healthy NPUs, fully determined by ``(count, stride, n_used)``: ring
+    ``(blk, r)`` holds ``healthy[blk·count·stride + r + i·stride]`` for
+    ``i < count`` — MP groups are ``(mp, 1)`` blocks, DP groups
+    ``(dp_per_wafer, mp·pp)`` interleaves, EP groups ``(ep, mp·pp)``
+    interleaved blocks.  ``family[0]`` is always the representative group
+    the scalar simulator evaluates, so feeding the whole family to
+    :meth:`MeshFabric.collective_time` as ``concurrent_rings`` charges the
+    evaluated ring the *real* shared-link congestion its siblings' detour
+    paths create under a defect mask (healthy meshes keep the
+    single-ring model — disjoint X-Y rings never detour onto each other).
+    Degenerate patterns (``count ≤ 1`` or a block wider than ``n_used``)
+    fall back to the single representative ring."""
+    block = count * stride
+    if count <= 1 or block <= 0 or block > n_used:
+        return [[healthy[i * stride] for i in range(max(count, 1))]]
+    return [[healthy[blk * block + r + i * stride] for i in range(count)]
+            for blk in range(n_used // block)
+            for r in range(stride)]
+
+
 @dataclasses.dataclass
 class MeshFabric:
     rows: int = 5

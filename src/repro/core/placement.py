@@ -198,7 +198,8 @@ def _masked_wafer_capacity(strategy: Strategy, n_wafers: int,
 @functools.lru_cache(maxsize=4096)
 def cached_placement_groups(strategy: Strategy, n_wafers: int,
                             npus_per_wafer: int,
-                            defects: Optional[DefectMask] = None
+                            defects: Optional[DefectMask] = None,
+                            wafer_defects: "Optional[Tuple[Optional[DefectMask], ...]]" = None
                             ) -> Dict[str, List[List[int]]]:
     """Memoized :func:`placement_groups` for the canonical placements.
 
@@ -213,22 +214,51 @@ def cached_placement_groups(strategy: Strategy, n_wafers: int,
     With a :class:`DefectMask` the canonical local ids are compacted onto
     each wafer's healthy NPUs (the same mask is applied to every wafer —
     the cost model's worst-wafer simplification), keeping MP groups on
-    consecutive *healthy* NPUs.
+    consecutive *healthy* NPUs.  ``wafer_defects`` (mutually exclusive
+    with ``defects``) supplies one mask — or None for a pristine wafer —
+    per cluster wafer instead, compacting each wafer onto its *own*
+    healthy list; the strategy occupies wafers ``0..strategy.wafers-1``,
+    so only those wafers' capacities gate it.
 
     Callers must treat the returned lists as immutable (they are shared).
     Capacity violations raise ``ValueError`` exactly like the uncached
     placements (exceptions are not cached by ``lru_cache``).
     """
+    if defects is not None and wafer_defects is not None:
+        raise ValueError("defects and wafer_defects are mutually "
+                         "exclusive — pass one uniform mask or one mask "
+                         "per wafer")
     if n_wafers > 1:
         ids = cluster_placement(strategy, n_wafers, npus_per_wafer)
     else:
         ids = fred_placement(strategy, npus_per_wafer)
     groups = placement_groups(strategy, ids)
+    npw = npus_per_wafer
+    if wafer_defects is not None:
+        if len(wafer_defects) != n_wafers:
+            raise ValueError(
+                f"wafer_defects has {len(wafer_defects)} entries for "
+                f"{n_wafers} wafers — one mask (or None) per wafer")
+        per_wafer = strategy.mp * strategy.pp * strategy.dp_per_wafer
+        healthy_by_wafer = [tuple(range(npw)) if m is None else m.healthy()
+                            for m in wafer_defects]
+        for w in range(strategy.wafers):
+            if per_wafer > len(healthy_by_wafer[w]):
+                raise ValueError(
+                    f"{strategy} needs {per_wafer} healthy NPUs on wafer "
+                    f"{w}, its defect mask leaves "
+                    f"{len(healthy_by_wafer[w])}")
+
+        def remap_pw(gid: int) -> int:
+            wafer, local = divmod(gid, npw)
+            return wafer * npw + healthy_by_wafer[wafer][local]
+
+        return {k: [[remap_pw(i) for i in g] for g in gs]
+                for k, gs in groups.items()}
     if defects is None:
         return groups
     _masked_wafer_capacity(strategy, n_wafers, defects)
     healthy = defects.healthy()
-    npw = npus_per_wafer
 
     def remap(gid: int) -> int:
         wafer, local = divmod(gid, npw)

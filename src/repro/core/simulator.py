@@ -187,6 +187,17 @@ class Simulator:
         self.mesh_shape, self.fred_shape = spec.mesh_shape, spec.fred_shape
         self.n_io = spec.n_io
         self.defects: Optional[DefectMask] = spec.defects
+        self.wafer_defects = cs.wafer_defects
+        if self.wafer_defects is not None:
+            if self.defects is not None:
+                raise ValueError(
+                    "FabricSpec.defects (one mask for every wafer) and "
+                    "ClusterSpec.wafer_defects (one mask per wafer) are "
+                    "mutually exclusive")
+            if cs.n_wafers == 1:
+                raise ValueError(
+                    "wafer_defects needs a multi-wafer cluster — use "
+                    "FabricSpec.defects for a single wafer")
         self.n_wafers = cs.n_wafers
         self.inter_wafer_links = cs.inter_wafer_links
         self.inter_wafer_bw = cs.inter_wafer_bw
@@ -245,7 +256,8 @@ class Simulator:
                 HierarchyLevel(LEVEL_NAMES[min(i, len(LEVEL_NAMES) - 1)],
                                c, self.inter_topology, link)
                 for i, c in enumerate(counts))
-            self.cluster = WaferCluster(base, self.n_wafers, levels=levels)
+            self.cluster = WaferCluster(base, self.n_wafers, levels=levels,
+                                        wafer_defects=self.wafer_defects)
 
     @property
     def n_npus(self) -> int:
@@ -256,6 +268,8 @@ class Simulator:
     @property
     def n_healthy_npus(self) -> int:
         """Usable NPUs after the defect mask (mask applies per wafer)."""
+        if self.wafer_defects is not None:
+            return self.cluster.n_healthy_npus
         if self.defects is None:
             return self.n_npus
         per_wafer = self.defects.n_healthy
@@ -270,7 +284,8 @@ class Simulator:
         if self.cluster is not None:
             return cached_placement_groups(strategy, self.n_wafers,
                                            self.cluster.npus_per_wafer,
-                                           self.defects)
+                                           self.defects,
+                                           wafer_defects=self.wafer_defects)
         if strategy.wafers > 1:
             raise ValueError(
                 f"{strategy} spans {strategy.wafers} wafers but this "
@@ -296,23 +311,38 @@ class Simulator:
 
     def _coll_time_levels(self, kind: str, group, nbytes: float,
                           concurrent: int,
-                          inter_concurrent: Optional[int] = None
+                          inter_concurrent: Optional[int] = None,
+                          ring_family: Optional[Tuple[int, int, int]] = None
                           ) -> Tuple[float, Tuple[float, ...]]:
         """(intra-wafer, per-inter-level) time for one collective; the
         inter tuple is empty on a single wafer and all-zero for groups
-        contained within one wafer of a cluster."""
+        contained within one wafer of a cluster.
+
+        ``ring_family`` is the compact ``(count, stride, n_used)``
+        descriptor of the strided concurrent-group family ``group``
+        belongs to (see :func:`~repro.core.meshnet.strided_ring_family`).
+        Under a defect mask the mesh path materializes the family so the
+        evaluated ring pays the real shared-link bandwidth on detour
+        paths; healthy meshes ignore it (disjoint X-Y rings)."""
         if self.collective_cache is not None:
             key = (self._fabric_tag(), kind, tuple(group), nbytes,
-                   concurrent, inter_concurrent)
+                   concurrent, inter_concurrent, ring_family)
             hit = self.collective_cache.get(key)
             if hit is not None:
                 return hit
         if self.cluster is not None:
             parts = self.cluster.collective_time_levels(
                 kind, group, nbytes, concurrent_groups=concurrent,
-                inter_concurrent_groups=inter_concurrent)
+                inter_concurrent_groups=inter_concurrent,
+                ring_family=ring_family)
         elif self.mesh is not None:
-            parts = (self.mesh.collective_time(kind, group, nbytes), ())
+            rings: Tuple = ()
+            if ring_family is not None and self.defects is not None:
+                from .meshnet import strided_ring_family
+                rings = strided_ring_family(self.defects.healthy(),
+                                            *ring_family)
+            parts = (self.mesh.collective_time(kind, group, nbytes,
+                                               concurrent_rings=rings), ())
         else:
             parts = (self.fred.collective_time(kind, group, nbytes,
                                                concurrent_groups=concurrent),
@@ -321,10 +351,12 @@ class Simulator:
             self.collective_cache[key] = parts
         return parts
 
-    def _coll_time(self, kind: str, group, nbytes: float,
-                   concurrent: int) -> float:
+    def _coll_time(self, kind: str, group, nbytes: float, concurrent: int,
+                   ring_family: Optional[Tuple[int, int, int]] = None
+                   ) -> float:
         intra, levels = self._coll_time_levels(kind, group, nbytes,
-                                               concurrent)
+                                               concurrent,
+                                               ring_family=ring_family)
         t = intra
         for x in levels:
             t += x
@@ -369,6 +401,11 @@ class Simulator:
         # (exact when pp divides n_layers)
         layers_per_stage = -(-w.n_layers // st.pp)
         samples_per_npu = w.samples_per_dp
+        # NPUs used per wafer — the id range the strided concurrent-group
+        # families of every parallelism axis tile (meshnet
+        # strided_ring_family); descriptors ride to the mesh path so
+        # masked collectives see their siblings' detour congestion
+        n_used = st.mp * st.pp * st.dp_per_wafer
 
         # ---- compute ------------------------------------------------------------
         eff_flops = NPU_PEAK_FLOPS * self.compute_efficiency
@@ -402,7 +439,8 @@ class Simulator:
             # share is the per-wafer group count (== total on one wafer)
             mp_conc = max(1, len(groups["mp"]) // st.wafers)
             per_layer = self._coll_time("all_reduce", mp_group, act_bytes,
-                                        concurrent=mp_conc)
+                                        concurrent=mp_conc,
+                                        ring_family=(st.mp, 1, n_used))
             # fwd + bwd, every layer of this stage, all microbatches pipelined
             mp_time = (per_layer * mp_ar * 2 *
                        layers_per_stage * bubble)
@@ -417,8 +455,9 @@ class Simulator:
             ep_group = dp_group[:st.ep]
             ep_conc = max(1, st.mp * st.pp * st.dp // (st.ep * st.wafers))
             a2a_bytes = w.a2a_bytes_per_sample_layer * samples_per_npu
-            per_layer = self._coll_time("all_to_all", ep_group, a2a_bytes,
-                                        concurrent=ep_conc)
+            per_layer = self._coll_time(
+                "all_to_all", ep_group, a2a_bytes, concurrent=ep_conc,
+                ring_family=(st.ep, st.mp * st.pp, n_used))
             # dispatch + combine (×2), fwd + bwd (×2), every layer, bubbled
             ep_raw = per_layer * 2 * 2 * layers_per_stage * bubble
 
@@ -457,7 +496,8 @@ class Simulator:
             # (not a multiply) so totals match the seed bit-for-bit.
             ti, te_levels = self._coll_time_levels(
                 "all_reduce", dp_group, grad_bytes_per_layer,
-                concurrent=n_dp_groups, inter_concurrent=st.mp)
+                concurrent=n_dp_groups, inter_concurrent=st.mp,
+                ring_family=(st.dp_per_wafer, st.mp * st.pp, n_used))
             for _ in range(layers_per_stage):
                 dp_intra += ti
                 for i, te in enumerate(te_levels):

@@ -41,17 +41,31 @@ class FabricSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
-    """Inter-wafer scale-out: wafer count / stacking and the link model."""
+    """Inter-wafer scale-out: wafer count / stacking and the link model.
+
+    ``wafer_defects`` carries one :class:`DefectMask` (or None for a
+    pristine wafer) per wafer — the cluster-honest alternative to
+    ``FabricSpec.defects``, which applies a single mask to *every* wafer.
+    The two are mutually exclusive (enforced by the Simulator); an
+    all-None tuple normalizes away so the pristine path stays
+    bit-identical.
+    """
     n_wafers: int = 1
     hierarchy: Optional[Tuple[int, ...]] = None
     inter_topology: str = "ring"
     inter_wafer_links: int = 32
     inter_wafer_bw: float = 400e9
     inter_wafer_latency: float = 5e-7   # repro: unit[s] (per inter-level step)
+    wafer_defects: Optional[Tuple[Optional[DefectMask], ...]] = None
 
     def __post_init__(self):
         if self.hierarchy is not None:
             object.__setattr__(self, "hierarchy", tuple(self.hierarchy))
+        if self.wafer_defects is not None:
+            masks = tuple(normalize(m) for m in self.wafer_defects)
+            object.__setattr__(
+                self, "wafer_defects",
+                None if all(m is None for m in masks) else masks)
 
 
 DEFAULT_FABRIC_SPEC = FabricSpec()

@@ -25,9 +25,10 @@ import dataclasses
 import json
 import shutil
 import threading
+import time
 import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -36,6 +37,29 @@ import numpy as np
 # numpy can't natively (de)serialize bfloat16 — store as a uint16 view and
 # record the logical dtype in the manifest
 _VIEW_DTYPES = {"bfloat16": np.uint16}
+
+# transient-IO retry policy: networked filesystems (NFS/FUSE) throw
+# spurious OSErrors under load; a failed *save* loses a checkpoint and a
+# failed *restore* kills a recovery, so both deserve a few bounded
+# attempts before giving up
+IO_RETRIES = 3
+IO_BACKOFF_S = 0.05     # repro: unit[s] (doubles per attempt)
+
+
+def _retry_io(fn: Callable[[], Any], what: str, *,
+              retries: int = IO_RETRIES,
+              backoff_s: float = IO_BACKOFF_S) -> Any:
+    """Run ``fn`` with bounded retry + exponential backoff on OSError.
+
+    The last attempt re-raises, so persistent failures (disk full, dead
+    mount, genuinely missing file) still surface to the caller."""
+    for attempt in range(retries):
+        try:
+            return fn()
+        except OSError:
+            if attempt == retries - 1:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
 
 
 def _flatten_with_paths(tree):
@@ -68,32 +92,42 @@ def save(path: str | Path, tree: Any, *, step: int,
         if logical_dtype in _VIEW_DTYPES:
             arr = arr.view(_VIEW_DTYPES[logical_dtype])
         fname = f"leaf_{i:05d}.npy"
-        np.save(tmp / fname, arr, allow_pickle=False)
+        _retry_io(lambda: np.save(tmp / fname, arr, allow_pickle=False),
+                  fname)
         manifest["leaves"].append({
             "file": fname, "shape": list(arr.shape),
             "dtype": logical_dtype,
             "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
         })
-    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
-    (tmp / "COMMIT").write_text("ok")
+    _retry_io(lambda: (tmp / "MANIFEST.json").write_text(
+        json.dumps(manifest, indent=1)), "MANIFEST.json")
+    _retry_io(lambda: (tmp / "COMMIT").write_text("ok"), "COMMIT")
     if final.exists():
         shutil.rmtree(final)
-    tmp.rename(final)
+    _retry_io(lambda: tmp.rename(final), "commit rename")
     return final
 
 
 def cleanup_incomplete(path: str | Path) -> int:
     """Remove ``step_X.tmp`` debris left by a writer that died mid-save
     (the crash the elastic-restart path recovers from).  Committed
-    checkpoints are never touched.  Returns the number swept."""
+    checkpoints are never touched.  Returns the number of debris dirs
+    gone after the call.
+
+    Idempotent under races: two recoveries sweeping the same directory
+    concurrently both succeed — a dir the other recovery already removed
+    (or the root itself vanishing mid-scan) is a no-op, not an error."""
     root = Path(path)
-    if not root.exists():
+    try:
+        debris = [d for d in root.iterdir()
+                  if d.is_dir() and d.name.startswith("step_")
+                  and d.name.endswith(".tmp")]
+    except FileNotFoundError:
         return 0
     n = 0
-    for d in root.iterdir():
-        if d.is_dir() and d.name.startswith("step_") \
-                and d.name.endswith(".tmp"):
-            shutil.rmtree(d, ignore_errors=True)
+    for d in debris:
+        shutil.rmtree(d, ignore_errors=True)
+        if not d.exists():
             n += 1
     return n
 
@@ -127,7 +161,8 @@ def restore(path: str | Path, target_tree: Any, *, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint under {root}")
     d = root / f"step_{step:08d}"
-    manifest = json.loads((d / "MANIFEST.json").read_text())
+    manifest = json.loads(_retry_io(
+        lambda: (d / "MANIFEST.json").read_text(), "MANIFEST.json"))
 
     leaves, treedef = _flatten_with_paths(target_tree)
     if len(leaves) != manifest["n_leaves"]:
@@ -139,7 +174,9 @@ def restore(path: str | Path, target_tree: Any, *, step: Optional[int] = None,
 
     out = []
     for i, meta in enumerate(manifest["leaves"]):
-        arr = np.load(d / meta["file"], allow_pickle=False)
+        arr = _retry_io(
+            lambda: np.load(d / meta["file"], allow_pickle=False),
+            meta["file"])
         if verify:
             crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
             if crc != meta["crc32"]:

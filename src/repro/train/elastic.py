@@ -46,40 +46,90 @@ def validate_shape_for_mesh(shape: ShapeConfig, mesh) -> None:
             f"(axes {dict(mesh.shape)})")
 
 
-def plan_shrink(n_alive: int, tp: int, global_batch: int) -> Tuple[int, int]:
-    """Largest ``(data, model)`` logical shape on ``n_alive`` devices.
-
-    The model axis is kept at ``tp`` — tensor-parallel layouts are tied
-    to head/FFN divisibility, so elasticity flexes the *data* axis only
-    (exactly the cost model's story: a defect draw shrinks the DP degree,
-    never the MP group).  The DP degree is the largest value that both
-    fits the survivors and divides the global batch."""
-    if tp < 1 or n_alive < tp:
-        raise ValueError(
-            f"{n_alive} surviving devices cannot host a model axis of "
-            f"{tp} — not enough healthy hardware for even one replica")
+def _best_dp(n_alive: int, tp: int, global_batch: int) -> int:
+    """Largest DP degree that fits the survivors and divides the batch."""
     dp = n_alive // tp
     while dp > 1 and global_batch % dp:
         dp -= 1
-    if global_batch % dp:
+    return dp
+
+
+def plan_shrink(n_alive: int, tp: int, global_batch: int, *,
+                model_cfg: Optional[ModelConfig] = None,
+                shape: Optional[ShapeConfig] = None,
+                npu_hbm_bytes: Optional[float] = None) -> Tuple[int, int]:
+    """Largest ``(data, model)`` logical shape on ``n_alive`` devices.
+
+    While ``n_alive >= tp`` the model axis is kept at ``tp`` — elasticity
+    flexes the *data* axis only (exactly the cost model's story: a defect
+    draw shrinks the DP degree, never the MP group) and the DP degree is
+    the largest value that both fits the survivors and divides the global
+    batch.
+
+    When the failure eats into the model axis itself (``n_alive < tp``)
+    and ``model_cfg`` is given, the model axis is re-planned over the
+    divisors of ``tp`` (largest first): a candidate ``tp'`` must divide
+    the query heads, KV heads and FFN width (tensor-parallel layouts are
+    tied to head/FFN divisibility), and — when ``shape`` and
+    ``npu_hbm_bytes`` are also given — the resharded model must still fit
+    per-NPU memory under the cost model's :class:`MemoryModel`.  Without
+    ``model_cfg`` there is nothing safe to re-plan against and the
+    shrink fails."""
+    if tp < 1:
+        raise ValueError(f"model axis must be ≥ 1, got tp={tp}")
+    if n_alive < 1:
+        raise ValueError(f"no surviving devices (n_alive={n_alive})")
+    if n_alive >= tp:
+        return _best_dp(n_alive, tp, global_batch), tp
+    if model_cfg is None:
         raise ValueError(
-            f"global batch {global_batch} has no DP degree ≤ "
-            f"{n_alive // tp} dividing it")
-    return dp, tp
+            f"{n_alive} surviving devices cannot host the model axis of "
+            f"{tp} — pass model_cfg to re-plan tp over its divisors, or "
+            f"restore onto repaired hardware")
+    from repro.core.placement import Strategy
+    from repro.core.workloads import (MemoryModel, from_model_config,
+                                      is_feasible)
+    rejected = []
+    for cand in (d for d in range(min(tp - 1, n_alive), 0, -1)
+                 if tp % d == 0):
+        if (model_cfg.n_heads % cand or model_cfg.n_kv_heads % cand
+                or model_cfg.d_ff % cand):
+            rejected.append(f"tp={cand}: heads/FFN not divisible")
+            continue
+        dp = _best_dp(n_alive, cand, global_batch)
+        if shape is not None and npu_hbm_bytes is not None:
+            w = from_model_config(model_cfg, shape,
+                                  Strategy(mp=cand, dp=dp, pp=1))
+            if not is_feasible(w, MemoryModel(npu_hbm_bytes=npu_hbm_bytes)):
+                rejected.append(f"tp={cand}: exceeds per-NPU memory")
+                continue
+        return dp, cand
+    detail = "; ".join(rejected) if rejected else "no divisor fits"
+    raise ValueError(
+        f"{n_alive} surviving devices cannot host the model axis of "
+        f"{tp} and no smaller divisor works ({detail})")
 
 
-def shrink_mesh(mesh, failed: Iterable, shape: ShapeConfig):
+def shrink_mesh(mesh, failed: Iterable, shape: ShapeConfig,
+                cfg: Optional[ModelConfig] = None,
+                npu_hbm_bytes: Optional[float] = None):
     """The largest valid ``(data, model)`` mesh on the devices surviving
-    ``failed`` (device objects or device ids).
+    ``failed`` (device objects or device ids; duplicates are deduped
+    before filtering, so a doubly-reported failure is one failure).
 
     The surviving devices keep their original mesh order, so DP replica 0
     stays on the same hardware whenever it survived — re-sharding moves
-    the minimum number of bytes."""
+    the minimum number of bytes.  With ``cfg`` a failure that eats into
+    the model axis re-plans ``tp`` over its valid divisors instead of
+    failing (see :func:`plan_shrink`)."""
     from repro.launch.mesh import make_mesh
-    failed_ids = {getattr(d, "id", d) for d in failed}
+    failed_ids = frozenset(
+        dict.fromkeys(getattr(d, "id", d) for d in failed))
     alive = [d for d in mesh.devices.flat if d.id not in failed_ids]
     tp = mesh.shape.get("model", 1)
-    dp, tp = plan_shrink(len(alive), tp, shape.global_batch)
+    dp, tp = plan_shrink(len(alive), tp, shape.global_batch,
+                         model_cfg=cfg, shape=shape,
+                         npu_hbm_bytes=npu_hbm_bytes)
     return make_mesh((dp, tp), ("data", "model"), devices=alive[:dp * tp])
 
 
@@ -113,8 +163,10 @@ def resume_after_failure(checkpoint_dir: str, cfg: ModelConfig,
     survivors become the largest still-valid ``(data, model)`` mesh and
     the last committed checkpoint is restored onto it.  Returns
     (setup, train_state, resumed_step, new_mesh) — the caller re-enters
-    its train loop under ``new_mesh`` with the DP degree dropped."""
-    new_mesh = shrink_mesh(mesh, failed, shape)
+    its train loop under ``new_mesh`` with the DP degree dropped, or —
+    when the failure ate into the model axis — with ``tp`` re-planned
+    onto a smaller head/FFN-divisible divisor."""
+    new_mesh = shrink_mesh(mesh, failed, shape, cfg=cfg)
     setup, state, at = resume_on_mesh(checkpoint_dir, cfg, shape, new_mesh,
                                       pcfg, ocfg, step=step)
     return setup, state, at, new_mesh

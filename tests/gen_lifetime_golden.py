@@ -1,0 +1,73 @@
+"""Regenerate tests/goldens/lifetimesweep.json — the pinned time-vs-
+goodput auto-strategy decision pairs (``repro.core.autostrategy
+.LIFETIME_ARCHS`` at ``LIFETIME_MTBF_NPU_HOURS`` under
+``LIFETIME_SWEEP_KW``).  Run after an *intentional* cost-model change:
+
+    PYTHONPATH=src python -m tests.gen_lifetime_golden
+
+``--check`` regenerates in memory only and exits non-zero if the fresh
+decisions differ from the committed file — the nightly golden-drift gate
+(catches env-dependent float drift before it surfaces as a confusing PR
+failure), mirroring tests/gen_epsweep_golden.py.
+
+The generator refuses to write a golden in which *no* arch flips: the
+lifetimesweep CI gate exists to pin MTBF-driven strategy flips, so a
+flip-free golden would make the gate vacuous (fix the failure /
+degradation model first).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GOLDEN = Path(__file__).parent / "goldens" / "lifetimesweep.json"
+
+
+def fresh_goldens() -> dict:
+    from repro.core.autostrategy import (lifetime_decision_pairs,
+                                         lifetime_golden)
+    pairs = lifetime_decision_pairs()
+    out = {f"{t.arch}/{t.shape}": lifetime_golden((t, g))
+           for t, g in pairs}
+    flips = [k for k, v in out.items() if v["flip"]]
+    if not flips:
+        sys.exit(f"refusing to write {GOLDEN}: no arch flips its decision "
+                 f"between the time and goodput objectives — the "
+                 f"lifetimesweep gate would be vacuous (fix the failure/"
+                 f"degradation model first)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff the regenerated decisions against the "
+                         "committed golden instead of overwriting it; "
+                         "exit 1 on drift")
+    args = ap.parse_args()
+    got = fresh_goldens()
+    if args.check:
+        want = json.loads(GOLDEN.read_text())
+        if got != want:
+            diffs = [k for k in sorted(set(got) | set(want))
+                     if got.get(k) != want.get(k)]
+            print(f"golden drift: regenerated lifetime decisions differ "
+                  f"from {GOLDEN} ({', '.join(diffs)}).\n"
+                  f"If a cost-model change is intended, regenerate with "
+                  f"`python -m tests.gen_lifetime_golden`; otherwise the "
+                  f"environment introduced float drift.", file=sys.stderr)
+            print(json.dumps(got, indent=1, sort_keys=True),
+                  file=sys.stderr)
+            return 1
+        print(f"golden check OK: {len(got)} lifetime decision pairs "
+              f"identical to {GOLDEN}")
+        return 0
+    GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+    n_flips = sum(v["flip"] for v in got.values())
+    print(f"wrote {GOLDEN} ({len(got)} decision pairs, {n_flips} flips)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,13 +11,16 @@ import random
 
 import pytest
 
-from repro.core.defects import (DefectMask, mesh_connected, mesh_links,
-                                normalize, sample_mask)
+from repro.core.batch_engine import BatchEngine
+from repro.core.defects import (DefectMask, masks_from_json, masks_to_json,
+                                mesh_connected, mesh_links, normalize,
+                                sample_mask)
 from repro.core.meshnet import MeshFabric
 from repro.core.placement import Strategy
 from repro.core.simulator import Simulator
-from repro.core.specs import FabricSpec
+from repro.core.specs import ClusterSpec, FabricSpec
 from repro.core.sweep import sweep, to_csv_rows, transformer_17b, CSV_HEADER
+from repro.core.workloads import MemoryModel, transformer
 from repro.core.yield_study import (pick_winner, yield_csv_rows,
                                     yield_study, YIELD_CSV_HEADER)
 
@@ -38,6 +41,18 @@ def test_mask_json_round_trip():
     assert m2.dead_npus == (3, 7)
     assert m2.dead_links == ((0, 1), (5, 9))
     assert DefectMask.from_json(m2.to_json()) == m2
+
+
+def test_per_wafer_masks_json_round_trip():
+    masks = (None,
+             DefectMask(n_npus=20, dead_npus=(5, 6), seed=13),
+             DefectMask(n_npus=20))              # empty → None on reload
+    text = masks_to_json(masks)
+    back = masks_from_json(text)
+    assert back == (None, masks[1], None)
+    assert json.loads(text)[0] is None           # pristine wafer is null
+    # stable on-disk form: a second trip is byte-identical
+    assert masks_to_json(back[:2] + (None,)) == masks_to_json(back)
 
 
 def test_mask_validation_and_queries():
@@ -254,6 +269,69 @@ def test_csv_header_has_defect_columns():
 
 
 # --------------------------------------------------------------------------
+# per-wafer masks (ClusterSpec.wafer_defects, PR-6 residual)
+# --------------------------------------------------------------------------
+
+
+def _cluster_sim(fabric, *, defects=None, wafer_defects=None):
+    kw = dict(mesh_shape=(4, 4)) if fabric == "baseline" \
+        else dict(fred_shape=(4, 4))
+    return Simulator(fabric, spec=FabricSpec(defects=defects, **kw),
+                     cluster_spec=ClusterSpec(n_wafers=2,
+                                              wafer_defects=wafer_defects))
+
+
+def test_per_wafer_masks_cluster_semantics():
+    mask = sample_mask(16, dead_npu_rate=0.12, seed=3, mesh_shape=(4, 4))
+    assert not mask.is_empty
+    w = transformer("T17B", 78, 4256, 1024, Strategy(4, 4, 1, wafers=2),
+                    "stationary")
+    pristine = _cluster_sim("baseline").run(w).total
+    hetero = _cluster_sim(
+        "baseline", wafer_defects=(None, mask)).run(w).total
+    uniform = _cluster_sim(
+        "baseline", wafer_defects=(mask, mask)).run(w).total
+    # a dead NPU forces mesh detours: one masked wafer already slows the
+    # cluster, masking both slows it at least as much
+    assert pristine < hetero <= uniform
+    # a uniform per-wafer list is bit-identical to the single
+    # FabricSpec.defects mask applied to every wafer
+    assert uniform == _cluster_sim("baseline", defects=mask).run(w).total
+    # all-pristine list normalizes away entirely
+    sim = _cluster_sim("baseline",
+                       wafer_defects=(None, DefectMask(n_npus=16)))
+    assert sim.wafer_defects is None
+    assert sim.run(w).total == pristine
+    # FRED fabrics take per-wafer masks too; severed uplinks on one
+    # wafer slow the spanning collectives (dead NPUs alone compact away
+    # on the reduction tree)
+    umask = DefectMask(n_npus=16, dead_uplinks=((0, 2), (1, 2)))
+    assert _cluster_sim("FRED-D", wafer_defects=(None, umask)).run(w).total \
+        > _cluster_sim("FRED-D").run(w).total
+    # capacity gates per wafer: 16 NPUs/wafer needed, the masked wafer
+    # has fewer healthy
+    big = transformer("T17B", 78, 4256, 1024, Strategy(4, 8, 1, wafers=2),
+                      "stationary")
+    with pytest.raises(ValueError, match="healthy NPUs on wafer"):
+        _cluster_sim("baseline", wafer_defects=(None, mask)).run(big)
+
+
+def test_per_wafer_masks_validation():
+    mask = DefectMask(n_npus=16, dead_npus=(3,))
+    # mutually exclusive with the uniform FabricSpec mask
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        _cluster_sim("baseline", defects=mask, wafer_defects=(None, mask))
+    # meaningless on a single wafer — use FabricSpec.defects there
+    with pytest.raises(ValueError, match="multi-wafer"):
+        Simulator("baseline", spec=FabricSpec(mesh_shape=(4, 4)),
+                  cluster_spec=ClusterSpec(n_wafers=1,
+                                           wafer_defects=(mask,)))
+    # the batched engine only models the uniform mask
+    with pytest.raises(NotImplementedError, match="per-wafer"):
+        BatchEngine(_cluster_sim("baseline", wafer_defects=(None, mask)))
+
+
+# --------------------------------------------------------------------------
 # yield study
 # --------------------------------------------------------------------------
 
@@ -292,6 +370,24 @@ def test_yield_study_deterministic():
     b = yield_study(transformer_17b, 20, **kw)
     assert a.golden() == b.golden()
     assert yield_csv_rows(a) == yield_csv_rows(b)
+
+
+def test_yield_study_infeasible_fallback_reports_dead_not_raise():
+    # 16 GiB HBM: the healthy 20-NPU sweep still has feasible points, but
+    # with 5 NPUs dead *nothing* fits — the masked re-sweep is empty and
+    # the study must report DEAD with a reason, not raise out of
+    # pick_winner
+    mem = MemoryModel(npu_hbm_bytes=16 * 2**30)
+    mask = DefectMask(n_npus=20, dead_npus=tuple(range(5)), seed=77)
+    rep = yield_study(transformer_17b, 20, n_layers=78, memory=mem,
+                      masks=[mask], fallback=True)
+    o = rep.outcomes[0]
+    assert not o.survived
+    assert o.reason and "capacity" in o.reason
+    assert o.fallback is None
+    assert rep.survival_rate == 0.0
+    assert "no feasible fallback" in rep.summary()
+    assert rep.golden()["survived"] == "0/1"
 
 
 def test_yield_study_explicit_masks_and_pick_winner():

@@ -1,0 +1,307 @@
+"""Lifetime-goodput tests (ISSUE 9 tentpole): checkpoint math, the
+elastic degradation chain, closed-form vs event-simulated missions, and
+the autostrategy goodput objective.
+
+JAX-free — runs in the core CI lane.  The two structural pins:
+
+  * at ``mtbf = ∞`` the goodput objective is *bit-identical* to the
+    time objective (useful fraction exactly 1.0, goodput exactly
+    ``1/time``) — this is what keeps every pre-lifetime golden
+    byte-stable;
+  * at the gate's pinned MTBF the objective genuinely flips decisions
+    (zamba2-2.7b trades MP(4) down to an elastic-reachable MP(3) plan),
+    spot-checked against ``tests/goldens/lifetimesweep.json``.
+"""
+
+import json
+import math
+
+import pytest
+
+from repro.core.autostrategy import (LIFETIME_ARCHS, LIFETIME_MTBF_NPU_HOURS,
+                                     LIFETIME_SWEEP_KW, _strategy_signature,
+                                     check_lifetime_goldens,
+                                     lifetime_decision_pairs, lifetime_golden)
+from repro.core.lifetime import (FailureModel, HOUR_S, LifetimePoint,
+                                 _elastic_reachable, checkpoint_state_bytes,
+                                 checkpoint_write_s, degradation_chain,
+                                 estimate_lifetime, optimal_interval,
+                                 simulate_lifetime, time_fractions,
+                                 useful_fraction, young_daly_interval)
+from repro.core.sweep import sweep, transformer_17b
+from repro.core.workloads import (BYTES, MemoryModel,
+                                  optimizer_bytes_per_param)
+
+GOLDEN_PATH = "tests/goldens/lifetimesweep.json"
+
+
+# --------------------------------------------------------------------------
+# failure model + checkpoint cost
+# --------------------------------------------------------------------------
+
+
+def test_system_mtbf_composes_npu_and_wafer_clocks():
+    fm = FailureModel()
+    assert math.isinf(fm.system_mtbf_s(20))
+    fm = FailureModel(mtbf_npu_hours=2000.0)
+    assert fm.system_mtbf_s(20) == pytest.approx(2000.0 * HOUR_S / 20)
+    # a wafer clock adds failure rate: the system MTBF must drop
+    both = FailureModel(mtbf_npu_hours=2000.0, mtbf_wafer_hours=8000.0)
+    assert both.system_mtbf_s(20, 2) < fm.system_mtbf_s(20)
+    rate = 20 / (2000.0 * HOUR_S) + 2 / (8000.0 * HOUR_S)
+    assert both.system_mtbf_s(20, 2) == pytest.approx(1.0 / rate)
+
+
+def test_checkpoint_cost_tracks_state_bytes_and_io_rate():
+    st = sweep(transformer_17b, 20, n_layers=78)[0].strategy
+    w = transformer_17b(st)
+    train = MemoryModel()
+    serve = MemoryModel(training=False)
+    params = w.params_per_layer * w.n_layers
+    per_param = BYTES + optimizer_bytes_per_param(train.master,
+                                                  train.moments_dtype)
+    assert checkpoint_state_bytes(w, train) == pytest.approx(
+        params * per_param)
+    # no optimizer state to commit when not training
+    assert checkpoint_state_bytes(w, serve) == pytest.approx(params * BYTES)
+    assert checkpoint_state_bytes(w, serve) < checkpoint_state_bytes(w, train)
+    # write time = bytes / (io rate × wafers the strategy spans)
+    assert checkpoint_write_s(w, train, 1e12) == pytest.approx(
+        checkpoint_state_bytes(w, train) / (1e12 * max(st.wafers, 1)))
+    assert checkpoint_write_s(w, train, 2e12) == pytest.approx(
+        checkpoint_write_s(w, train, 1e12) / 2)
+
+
+# --------------------------------------------------------------------------
+# Young–Daly / useful-fraction closed form
+# --------------------------------------------------------------------------
+
+
+def test_young_daly_interval():
+    assert young_daly_interval(30.0, 50_000.0) == pytest.approx(
+        math.sqrt(2.0 * 30.0 * 50_000.0))
+    assert math.isinf(young_daly_interval(30.0, math.inf))
+    assert young_daly_interval(0.0, 50_000.0) == 0.0
+
+
+def test_useful_fraction_edges_and_shape():
+    # never fails + free checkpoints: exactly 1.0 (the bit-identity pin)
+    assert useful_fraction(100.0, 0.0, 60.0, math.inf) == 1.0
+    # never fails: pure write amortization τ/(τ+δ)
+    assert useful_fraction(100.0, 25.0, 60.0, math.inf) == \
+        pytest.approx(100.0 / 125.0)
+    with pytest.raises(ValueError, match="interval"):
+        useful_fraction(0.0, 25.0, 60.0, 50_000.0)
+    # finite mtbf always costs something, and a costlier checkpoint or a
+    # flakier system costs more
+    base = useful_fraction(1000.0, 30.0, 60.0, 50_000.0)
+    assert 0.0 < base < 1.0
+    assert useful_fraction(1000.0, 60.0, 60.0, 50_000.0) < base
+    assert useful_fraction(1000.0, 30.0, 60.0, 25_000.0) < base
+
+
+def test_optimal_interval_maximizes_useful_fraction():
+    ckpt, restart, mtbf = 30.0, 60.0, 50_000.0
+    tau = optimal_interval(ckpt, restart, mtbf)
+    best = useful_fraction(tau, ckpt, restart, mtbf)
+    # near the Young–Daly seed, and better than any bracketing interval
+    assert 0.25 * young_daly_interval(ckpt, mtbf) < tau \
+        < 4.0 * young_daly_interval(ckpt, mtbf)
+    for other in (tau / 4, tau / 2, tau * 2, tau * 4):
+        assert best >= useful_fraction(other, ckpt, restart, mtbf)
+    assert math.isinf(optimal_interval(ckpt, restart, math.inf))
+    assert optimal_interval(0.0, restart, mtbf) == 1.0   # min_interval_s
+
+
+def test_time_fractions_decompose_exactly():
+    for mtbf in (30_000.0, 50_000.0, math.inf):
+        fr = time_fractions(1500.0, 30.0, 60.0, mtbf)
+        assert set(fr) == {"useful", "checkpoint", "lost", "recovery"}
+        assert sum(fr.values()) == pytest.approx(1.0, abs=1e-12)
+        assert all(0.0 <= v <= 1.0 for v in fr.values())
+    assert time_fractions(1500.0, 0.0, 60.0, math.inf) == \
+        {"useful": 1.0, "checkpoint": 0.0, "lost": 0.0, "recovery": 0.0}
+
+
+# --------------------------------------------------------------------------
+# mission estimate vs event simulation
+# --------------------------------------------------------------------------
+
+_HEALTHY = [LifetimePoint(n_failed=0, alive=True, time_per_sample_s=0.02,
+                          source="winner")]
+
+
+def test_estimate_at_infinite_mtbf_is_exact_inverse_time():
+    est = estimate_lifetime(_HEALTHY, ckpt_write_s=30.0, restart_s=60.0,
+                            mtbf_s=math.inf, mission_s=3.6e6)
+    assert est.fractions["useful"] == 1.0            # exactly, not approx
+    assert est.goodput_samples_per_s == 1.0 / 0.02   # bit-identical
+    assert est.n_expected_failures == 0
+    assert math.isinf(est.interval_s)                # never checkpoint
+    assert est.survives_mission
+    assert est.samples_total == est.goodput_samples_per_s * 3.6e6
+
+
+def test_simulation_agrees_with_closed_form():
+    kw = dict(ckpt_write_s=30.0, restart_s=60.0, mtbf_s=50_000.0,
+              mission_s=5_000_000.0)
+    est = estimate_lifetime(_HEALTHY, **kw)
+    for seed in range(3):
+        sim = simulate_lifetime(_HEALTHY, seed=seed, **kw)
+        total = sum(sim[k] for k in ("useful_s", "checkpoint_s", "lost_s",
+                                     "recovery_s"))
+        assert sim["useful_s"] / total == pytest.approx(
+            est.fractions["useful"], rel=2e-2)
+        assert sim["samples"] / kw["mission_s"] == pytest.approx(
+            est.goodput_samples_per_s, rel=2e-2)
+        # ~mission/mtbf failures actually fired
+        assert 50 <= sim["n_failures"] <= 150
+
+
+def test_dead_chain_forfeits_remaining_mission():
+    chain = [_HEALTHY[0],
+             LifetimePoint(n_failed=1, alive=False, time_per_sample_s=0.0,
+                           source="dead", reason="capacity")]
+    kw = dict(ckpt_write_s=30.0, restart_s=60.0, mtbf_s=500_000.0,
+              mission_s=5_000_000.0)
+    est = estimate_lifetime(chain, **kw)
+    assert not est.survives_mission
+    healthy = estimate_lifetime(_HEALTHY, **kw)
+    # one expected state before death ⇒ ~1/10 of the healthy mission
+    assert est.goodput_samples_per_s < 0.2 * healthy.goodput_samples_per_s
+    sim = simulate_lifetime(chain, seed=0, **kw)
+    assert sim["samples"] / kw["mission_s"] < \
+        0.3 * healthy.goodput_samples_per_s
+
+
+# --------------------------------------------------------------------------
+# elastic degradation chain
+# --------------------------------------------------------------------------
+
+
+def test_degradation_chain_fallbacks_are_elastic_reachable():
+    mem = MemoryModel(npu_hbm_bytes=64 * 2**30)
+    kw = dict(n_layers=78, memory=mem, min_utilization=0.5)
+    feas = [r for r in sweep(transformer_17b, 20, **kw) if r.feasible]
+    # a full-wafer deployment: the first death forces a re-plan
+    winner = min((r for r in feas
+                  if r.strategy.mp >= 4 and r.strategy.pp == 1
+                  and r.strategy.mp * r.strategy.dp == 20),
+                 key=lambda r: r.time_per_sample)
+    chain = degradation_chain(transformer_17b, winner, 20, n_states=3,
+                              seed=0, sweep_kw=kw)
+    assert chain[0].source == "winner"
+    assert chain[0].time_per_sample_s == winner.time_per_sample
+    assert [p.n_failed for p in chain] == list(range(len(chain)))
+    fallbacks = [p for p in chain if p.fallback is not None]
+    assert fallbacks, "full-wafer winner must re-plan after a death"
+    for p in fallbacks:
+        assert p.alive and p.source == "fallback" and p.reason
+        assert p.time_per_sample_s == p.fallback.time_per_sample \
+            > winner.time_per_sample
+        fs, ws = p.fallback.strategy, winner.strategy
+        # the re-plan is plan_shrink-shaped: same hardware, frozen
+        # pp/ep/sp/wafers, mp kept or folded onto a divisor
+        assert _elastic_reachable(p.fallback, winner)
+        assert (p.fallback.fabric, p.fallback.shape) == \
+            (winner.fabric, winner.shape)
+        assert (fs.pp, fs.ep, fs.sp, fs.wafers) == \
+            (ws.pp, ws.ep, ws.sp, ws.wafers)
+        assert fs.mp <= ws.mp and ws.mp % fs.mp == 0
+
+
+def test_degradation_chain_dies_when_no_fold_fits_memory():
+    # at 16 GiB/NPU the 17B model only fits with mp·pp ≥ 16 — folding
+    # MP(20) onto a divisor (10, 5, ...) is memory-infeasible, so the
+    # first death is terminal and the chain must end there
+    mem = MemoryModel(npu_hbm_bytes=16 * 2**30)
+    kw = dict(n_layers=78, memory=mem, min_utilization=0.5)
+    feas = [r for r in sweep(transformer_17b, 20, **kw) if r.feasible]
+    winner = min((r for r in feas if r.strategy.mp == 20),
+                 key=lambda r: r.time_per_sample)
+    chain = degradation_chain(transformer_17b, winner, 20, n_states=3,
+                              seed=0, sweep_kw=kw)
+    assert len(chain) == 2
+    dead = chain[-1]
+    assert not dead.alive and dead.source == "dead"
+    assert dead.time_per_sample_s == 0.0
+    assert "capacity" in dead.reason
+
+
+def test_elastic_reachability_predicate():
+    mem = MemoryModel(npu_hbm_bytes=64 * 2**30)
+    res = sweep(transformer_17b, 20, n_layers=78, memory=mem,
+                min_utilization=0.5)
+    by_axes = {}
+    for r in res:
+        s = r.strategy
+        by_axes.setdefault((s.mp, s.pp), r)
+    a, b = by_axes.get((2, 1)), by_axes.get((4, 1))
+    assert a is not None and b is not None
+    assert _elastic_reachable(a, b)       # mp 4 → 2 is a divisor fold
+    assert not _elastic_reachable(b, a)   # mp can never grow mid-run
+    assert _elastic_reachable(b, b)       # staying put is always legal
+    c = by_axes.get((2, 2))
+    if c is not None:
+        assert not _elastic_reachable(c, b)   # pp is frozen
+
+
+# --------------------------------------------------------------------------
+# the autostrategy goodput objective (golden spot checks)
+# --------------------------------------------------------------------------
+
+
+def test_goodput_flips_zamba2_and_not_llama():
+    with open(GOLDEN_PATH) as fh:
+        goldens = json.load(fh)
+    assert set(goldens) == {f"{a}/train_4k" for a in LIFETIME_ARCHS}
+    pairs = lifetime_decision_pairs(archs=("zamba2-2.7b", "llama3.2-1b"))
+    by_arch = {p[0].arch: p for p in pairs}
+    # zamba2 flips: the goodput pick trades healthy time for an
+    # elastic-reachable (smaller-MP) plan that keeps running
+    z = lifetime_golden(by_arch["zamba2-2.7b"])
+    assert z["flip"]
+    assert z == goldens["zamba2-2.7b/train_4k"]
+    zt, zg = by_arch["zamba2-2.7b"]
+    assert zg.objective == "goodput"
+    assert zg.mtbf_npu_hours == LIFETIME_MTBF_NPU_HOURS
+    assert zg.strategy != zt.strategy
+    assert zg.strategy.mp < zt.strategy.mp
+    assert 0.0 < zg.useful_fraction < 1.0
+    assert 0.0 < zg.ckpt_write_s < zg.ckpt_interval_s < math.inf
+    # llama's winner is already robust: no flip, same strategy both ways
+    l = lifetime_golden(by_arch["llama3.2-1b"])
+    assert not l["flip"]
+    assert l == goldens["llama3.2-1b/train_4k"]
+
+
+def test_goodput_at_infinite_mtbf_is_bit_identical_to_time():
+    pairs = lifetime_decision_pairs(archs=("zamba2-2.7b",),
+                                    mtbf_npu_hours=math.inf)
+    t, g = pairs[0]
+    assert _strategy_signature(t) == _strategy_signature(g)
+    assert g.useful_fraction == 1.0
+    assert g.goodput_samples_per_s == 1.0 / g.time_per_sample_s
+    assert math.isinf(g.ckpt_interval_s)
+
+
+def test_check_lifetime_goldens_contract(tmp_path):
+    pairs = lifetime_decision_pairs(archs=("llama3.2-1b",))
+    key = "llama3.2-1b/train_4k"
+    good = {key: lifetime_golden(pairs[0])}
+    p = tmp_path / "golden.json"
+    p.write_text(json.dumps(good))
+    assert check_lifetime_goldens(pairs, str(p)) == []
+    # a flipped decision fails
+    bad = {key: dict(good[key], flip=not good[key]["flip"])}
+    p.write_text(json.dumps(bad))
+    errors = check_lifetime_goldens(pairs, str(p))
+    assert len(errors) == 1 and key in errors[0]
+    # an orphaned golden entry fails too (coverage loss)
+    p.write_text(json.dumps({**good, "ghost/train_4k": good[key]}))
+    errors = check_lifetime_goldens(pairs, str(p))
+    assert len(errors) == 1 and "ghost" in errors[0]
+    # a missing entry fails
+    p.write_text(json.dumps({}))
+    errors = check_lifetime_goldens(pairs, str(p))
+    assert len(errors) == 1 and "no golden entry" in errors[0]

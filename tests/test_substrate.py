@@ -127,6 +127,94 @@ def test_async_checkpointer_and_gc():
         assert len(steps) <= 2
 
 
+def test_retry_io_absorbs_transient_oserrors(monkeypatch):
+    from repro.train.faults import FlakyIO
+    sleeps = []
+    monkeypatch.setattr(ckpt.time, "sleep", sleeps.append)
+    # two transient faults < IO_RETRIES attempts: absorbed, with
+    # exponential backoff between attempts
+    fn = FlakyIO(lambda: "ok", failures=2)
+    assert ckpt._retry_io(fn, "probe") == "ok"
+    assert fn.calls == 3
+    assert sleeps == [ckpt.IO_BACKOFF_S, ckpt.IO_BACKOFF_S * 2]
+    # a persistent fault exhausts the budget and re-raises
+    stuck = FlakyIO(lambda: "never", failures=100)
+    with pytest.raises(OSError):
+        ckpt._retry_io(stuck, "probe")
+    assert stuck.calls == ckpt.IO_RETRIES
+
+
+def test_checkpoint_save_and_restore_retry_flaky_io(monkeypatch):
+    from repro.train.faults import FlakyIO
+    monkeypatch.setattr(ckpt.time, "sleep", lambda _s: None)
+    tree = {"a": jnp.arange(6.0), "b": jnp.ones(3, jnp.bfloat16)}
+    with tempfile.TemporaryDirectory() as d:
+        flaky_save = FlakyIO(np.save, failures=2)
+        monkeypatch.setattr(ckpt.np, "save", flaky_save)
+        ckpt.save(d, tree, step=1, extras={"step": 1})
+        monkeypatch.setattr(ckpt.np, "save", np.save)
+        assert flaky_save.calls > 2          # retried through the faults
+        assert ckpt.latest_step(d) == 1
+        flaky_load = FlakyIO(np.load, failures=2)
+        monkeypatch.setattr(ckpt.np, "load", flaky_load)
+        restored, extras = ckpt.restore(d, tree)
+        monkeypatch.setattr(ckpt.np, "load", np.load)
+        assert flaky_load.calls > 2
+        assert extras["step"] == 1
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cleanup_incomplete_idempotent_under_race(monkeypatch):
+    """Two recoveries sweeping the same dir concurrently: the second
+    rmtree of a dir the 'other' recovery already removed must be a
+    no-op, not an error — and the count reflects dirs gone."""
+    import shutil as _shutil
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        ckpt.save(d, {"a": jnp.ones(2)}, step=1)
+        d1 = root / "step_00000002.tmp"
+        d2 = root / "step_00000003.tmp"
+        d1.mkdir()
+        d2.mkdir()
+        real_rmtree = _shutil.rmtree
+        state = {"first": True}
+
+        def racing_rmtree(path, **kw):
+            # the interleave: while this recovery handles its first
+            # debris dir, the other recovery sweeps the rest
+            if state["first"]:
+                state["first"] = False
+                real_rmtree(d2, ignore_errors=True)
+            real_rmtree(path, **kw)
+
+        monkeypatch.setattr(ckpt.shutil, "rmtree", racing_rmtree)
+        assert ckpt.cleanup_incomplete(d) == 2       # both dirs gone
+        monkeypatch.setattr(ckpt.shutil, "rmtree", real_rmtree)
+        assert not d1.exists() and not d2.exists()
+        assert ckpt.latest_step(d) == 1              # commits untouched
+        assert ckpt.cleanup_incomplete(d) == 0       # second sweep no-op
+    # root vanished entirely (recovery racing a teardown): still a no-op
+    assert ckpt.cleanup_incomplete(d) == 0
+
+
+def test_torn_save_leaves_sweepable_debris():
+    from repro.train.faults import TornWrite, torn_save
+    tree = {"a": jnp.arange(4.0), "b": jnp.ones(2)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, step=1, extras={"step": 1})
+        with pytest.raises(TornWrite):
+            torn_save(d, tree, step=2)
+        debris = Path(d) / "step_00000002.tmp"
+        assert debris.exists()                       # partial leaves only
+        assert not (debris / "COMMIT").exists()
+        assert not (debris / "MANIFEST.json").exists()
+        assert ckpt.latest_step(d) == 1              # torn step invisible
+        assert ckpt.cleanup_incomplete(d) == 1
+        restored, extras = ckpt.restore(d, tree)
+        assert extras["step"] == 1
+
+
 # --------------------------------------------------------------------------
 # data pipeline
 # --------------------------------------------------------------------------
