@@ -745,6 +745,109 @@ def bench_lifetimesweep(budget: float = 0.0, goldens: str = ""):
 
 
 # --------------------------------------------------------------------------
+# servesweep — serving-cell decisions gate (ISSUE 10)
+# --------------------------------------------------------------------------
+
+def bench_servesweep(budget: float = 0.0, goldens: str = ""):
+    """The serving-cell CI gate: :data:`repro.core.autostrategy
+    .SERVESWEEP_ARCHS` decided under the pinned production objective
+    (1M concurrent users / 60 s think time / 200 ms p99 TTFT — qwen3-32b
+    under it is the ROADMAP's north-star wafer-count question), with two
+    invariants always checked: the M/D/c closed form must agree with the
+    seeded discrete-event traffic simulator to <1 % on mean TTFT at
+    every decision's operating point (the lifetime.py
+    estimate-vs-simulate contract), and disaggregated serving must never
+    lose raw capacity to co-located at equal hardware (the by-
+    construction superset property).  ``--goldens`` diffs the decisions
+    against tests/goldens/servesweep.json; writes
+    ``artifacts/servesweep_decisions.csv``.  ``budget`` (seconds,
+    0 = off) gates the decision wall time."""
+    from repro.configs.registry import get_config
+    from repro.core.autostrategy import (SERVESWEEP_ARCHS, SERVE_OBJECTIVE,
+                                         SERVE_SWEEP_KW,
+                                         check_serving_goldens,
+                                         serving_decision_table)
+    from repro.core.serving import (RequestProfile, serving_candidates,
+                                    serving_csv_rows, simulate_traffic)
+    box = []
+
+    def run():
+        box[:] = serving_decision_table()
+    us = _time(run, iters=1)
+    decisions = box
+    emit("servesweep_decisions", us,
+         f"models={len(decisions)};"
+         f"users={SERVE_OBJECTIVE.concurrent_users};"
+         f"p99_slo_ms={SERVE_OBJECTIVE.target_p99_ms}")
+    # invariant 1: closed-form queueing vs the seeded traffic simulator,
+    # <1% on mean TTFT at each decision's per-cell operating rate
+    for d in decisions:
+        cand = d.cell
+        lam_op = d.arrival_rate_rps / d.n_cells
+        slots, occupancy_s = cand.queue_shape()
+        est_s = cand.base_ttft_s + cand.ttft_stats(lam_op).mean_wait_s
+        sim = simulate_traffic(lam_op, occupancy_s, slots,
+                               base_latency_s=cand.base_ttft_s, seed=0)
+        rel = abs(est_s - sim["mean_ttft_s"]) / sim["mean_ttft_s"]
+        emit(f"servesweep[{d.arch}]", 0.0,
+             f"placement={d.placement};wafers={d.total_wafers};"
+             f"cells={d.n_cells};ttft_p99_ms={d.ttft_p99_ms:.4g};"
+             f"est_mean_ttft_ms={est_s * 1e3:.4g};"
+             f"sim_mean_ttft_ms={sim['mean_ttft_s'] * 1e3:.4g};"
+             f"agreement={rel * 100:.3f}%")
+        if rel >= 0.01:
+            print(f"servesweep[EST-VS-SIM],0.0,{d.arch}: closed form "
+                  f"{est_s:.6g}s vs DES {sim['mean_ttft_s']:.6g}s "
+                  f"({rel * 100:.2f}% > 1%)", file=sys.stderr)
+            sys.exit("servesweep: the M/D/c queueing approximation no "
+                     "longer agrees with the seeded traffic simulator "
+                     "to <1% — the closed form and the DES in "
+                     "core/serving.py have drifted apart")
+    # invariant 2: disaggregated ≥ co-located raw capacity per wafer
+    # count (checked on the north-star arch's full candidate set)
+    cfg = get_config("qwen3-32b")
+    profile = RequestProfile(prompt_tokens=SERVE_OBJECTIVE.prompt_tokens,
+                             output_tokens=SERVE_OBJECTIVE.output_tokens)
+    cands = serving_candidates(cfg, profile, **SERVE_SWEEP_KW)
+    for w in range(1, SERVE_SWEEP_KW["max_wafers"] + 1):
+        coloc = max(c.capacity_rps for c in cands
+                    if c.placement == "colocated" and c.wafers == w)
+        disagg = max(c.capacity_rps for c in cands
+                     if c.placement == "disaggregated" and c.wafers == w)
+        if disagg < coloc:
+            print(f"servesweep[DISAGG-CAPACITY],0.0,w={w}: disaggregated "
+                  f"{disagg:.4g} rps < colocated {coloc:.4g} rps",
+                  file=sys.stderr)
+            sys.exit("servesweep: disaggregated serving lost raw "
+                     "capacity to co-located at equal hardware — the "
+                     "per-phase optima in core/serving.py no longer "
+                     "cover the shared-config space")
+        emit(f"servesweep[disagg>=coloc w={w}]", 0.0,
+             f"disagg={disagg:.6g}rps;coloc={coloc:.6g}rps")
+    rows = serving_csv_rows(decisions)
+    path = _artifacts() / "servesweep_decisions.csv"
+    path.write_text("\n".join(rows) + "\n")
+    emit("servesweep[csv]", 0.0, f"{path} rows={len(rows) - 1}")
+    if goldens:
+        errors = check_serving_goldens(decisions, goldens)
+        if errors:
+            for e in errors:
+                print(f"servesweep[GOLDEN-DIFF],0.0,{e}", file=sys.stderr)
+            sys.exit("servesweep: decisions diverge from "
+                     f"{goldens} — if the cost-model change is intended, "
+                     "regenerate with tests/gen_servesweep_golden.py")
+        emit("servesweep[goldens]", 0.0, f"match {goldens}")
+    wall_s = us / 1e6
+    if budget and wall_s > budget:
+        print(f"servesweep[BUDGET],0.0,decisions {wall_s:.3f}s > "
+              f"{budget}s", file=sys.stderr)
+        sys.exit("servesweep: the serving decision table blew the CI "
+                 "wall-time budget — a perf regression in the candidate "
+                 "enumeration or the SLO-capacity search "
+                 "(core/serving.py)")
+
+
+# --------------------------------------------------------------------------
 # Table III — FRED switch HW overhead
 # --------------------------------------------------------------------------
 
@@ -894,6 +997,7 @@ BENCHES = {
     "autostrategy": bench_autostrategy,
     "epsweep": bench_epsweep,
     "lifetimesweep": bench_lifetimesweep,
+    "servesweep": bench_servesweep,
     "table3": bench_table3,
     "routing": bench_routing,
     "collectives": bench_collectives,
@@ -941,6 +1045,13 @@ def main() -> None:
                          "gate; the ≥1-flip and mtbf=∞ bit-identity "
                          "invariants are always checked; --goldens diffs "
                          "against tests/goldens/lifetimesweep.json)")
+    ap.add_argument("--servesweep-budget", type=float, default=0.0,
+                    help="servesweep only: fail if the serving-cell "
+                         "decision table exceeds this many seconds (CI "
+                         "gate; the <1% estimate-vs-simulate agreement "
+                         "and the disaggregated≥co-located capacity "
+                         "invariants are always checked; --goldens diffs "
+                         "against tests/goldens/servesweep.json)")
     ap.add_argument("--hiersweep-budget", type=float, default=0.0,
                     help="hiersweep only: fail if the batched 64-NPU × "
                          "4-wafer × {ring,fully_connected,switch} × "
@@ -972,6 +1083,9 @@ def main() -> None:
         elif n == "lifetimesweep":
             bench_lifetimesweep(budget=args.lifetimesweep_budget,
                                 goldens=args.goldens)
+        elif n == "servesweep":
+            bench_servesweep(budget=args.servesweep_budget,
+                             goldens=args.goldens)
         else:
             BENCHES[n]()
 

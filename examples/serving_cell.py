@@ -1,0 +1,64 @@
+"""Serving-cell auto-strategy demo (core/serving.py, ISSUE 10).
+
+The ROADMAP's north-star serving question — *how many wafers does it
+take to serve qwen3-32b to 1M concurrent users at a 200 ms p99 TTFT?* —
+answered by the analytical serving cost model: for each requested
+registry architecture the (placement × wafers × inter-topology ×
+prefill plan × decode plan) sweep prices prefill and decode rooflines
+on the FRED collective simulator, batches decode under the KV-cache
+memory model, runs the M/D/c queueing layer against the offered load,
+and elects the cheapest cell composition whose p99 TTFT meets the SLO.
+
+    PYTHONPATH=src python examples/serving_cell.py [--archs a,b,...]
+        [--users 1000000] [--think-s 60] [--p99-ms 200]
+        [--prompt 1024] [--output 256] [--npus 64] [--max-wafers 2]
+"""
+
+import argparse
+
+
+def main():
+    from repro.core.autostrategy import (SERVESWEEP_ARCHS,
+                                         choose_serving_strategy)
+    from repro.core.specs import Objective
+    from repro.configs.registry import get_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", type=str, default=",".join(SERVESWEEP_ARCHS))
+    ap.add_argument("--users", type=int, default=1_000_000,
+                    help="concurrent users (arrival rate = users/think)")
+    ap.add_argument("--think-s", type=float, default=60.0)
+    ap.add_argument("--p99-ms", type=float, default=200.0,
+                    help="TTFT p99 SLO, milliseconds")
+    ap.add_argument("--prompt", type=int, default=1024)
+    ap.add_argument("--output", type=int, default=256)
+    ap.add_argument("--npus", type=int, default=64, help="NPUs per wafer")
+    ap.add_argument("--max-wafers", type=int, default=2)
+    args = ap.parse_args()
+
+    objective = Objective.serving(
+        target_p99_ms=args.p99_ms, concurrent_users=args.users,
+        think_time_s=args.think_s, prompt_tokens=args.prompt,
+        output_tokens=args.output)
+
+    print(f"{'arch':14s} {'placement':14s} {'wafers':>6s} {'inter':8s} "
+          f"{'prefill':>12s} {'decode':>16s} {'cells':>5s} "
+          f"{'total':>6s} {'p99 TTFT':>9s}")
+    for arch in args.archs.split(","):
+        d = choose_serving_strategy(
+            get_config(arch), objective,
+            n_npus=args.npus, max_wafers=args.max_wafers)
+        pf = f"{d.prefill_fabric} mp={d.prefill_mp}"
+        dec = f"{d.decode_fabric} mp={d.decode_mp} b={d.decode_batch}"
+        inter = d.inter_topology if d.wafers_per_cell > 1 else "-"
+        print(f"{arch:14s} {d.placement:14s} {d.wafers_per_cell:6d} "
+              f"{inter:8s} {pf:>12s} {dec:>16s} {d.n_cells:5d} "
+              f"{d.total_wafers:6d} {d.ttft_p99_ms:7.2f}ms")
+    rate = args.users / args.think_s
+    print(f"\n(offered load {rate:,.0f} req/s = {args.users:,} users / "
+          f"{args.think_s:.0f}s think time; 'total' wafers is the "
+          f"north-star answer; p99 is at the per-cell operating rate)")
+
+
+if __name__ == "__main__":
+    main()

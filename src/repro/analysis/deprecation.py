@@ -19,10 +19,17 @@ X2  Bare strategy tuples: a tuple literal passed as ``auto_strategy=``
     ``StrategyDecision`` (named fields, ``as_strategy()``), the 5-tuple
     is the legacy encoding.
 
-``core/simulator.py`` and ``core/specs.py`` (the shim implementation and
-its spec twin) are exempt; tests are outside the walk roots entirely —
-test shims exercising the deprecated surface on purpose is exactly why
-the engine skips ``tests/``.
+X3  Legacy decision entry points (ISSUE 10): calls to the kwarg-sprawl
+    ``choose_strategy(...)`` form — the typed front door is
+    ``choose(DeploymentRequest(...))`` with an ``Objective`` carrying
+    the mtbf/SLO parameters.  Like X1, the authoritative name list is
+    read from ``_LEGACY_CHOOSE_FNS`` in ``core/autostrategy.py`` (with
+    a frozen fallback), so retiring the shim retires the rule.
+
+``core/simulator.py``, ``core/specs.py`` and ``core/autostrategy.py``
+(the shim implementations and their spec twin) are exempt; tests are
+outside the walk roots entirely — test shims exercising the deprecated
+surface on purpose is exactly why the engine skips ``tests/``.
 """
 
 from __future__ import annotations
@@ -35,13 +42,17 @@ from .engine import Finding, Repo, string_tuple_assign
 RULE = "DEPRECATION"
 
 SIMULATOR = "src/repro/core/simulator.py"
-EXEMPT = (SIMULATOR, "src/repro/core/specs.py")
+AUTOSTRATEGY = "src/repro/core/autostrategy.py"
+EXEMPT = (SIMULATOR, "src/repro/core/specs.py", AUTOSTRATEGY)
 
 # frozen PR-6 shim list — used only when the checked tree has no
 # core/simulator.py to read the live tuples from (fixture trees in tests)
 FALLBACK_LEGACY_KW: Tuple[str, ...] = (
     "mesh_shape", "fred_shape", "n_io", "n_wafers", "inter_wafer_links",
     "inter_wafer_bw", "inter_wafer_latency", "inter_topology", "hierarchy")
+
+# frozen ISSUE-10 shim list — same fallback contract for X3
+FALLBACK_LEGACY_CHOOSE: Tuple[str, ...] = ("choose_strategy",)
 
 
 def legacy_kwargs(repo: Repo) -> Tuple[str, ...]:
@@ -54,19 +65,46 @@ def legacy_kwargs(repo: Repo) -> Tuple[str, ...]:
     return FALLBACK_LEGACY_KW
 
 
+def legacy_choose_fns(repo: Repo) -> Tuple[str, ...]:
+    sf = repo.file(AUTOSTRATEGY)
+    if sf is not None and sf.tree is not None:
+        fns = string_tuple_assign(sf.tree, "_LEGACY_CHOOSE_FNS") or ()
+        if fns:
+            return fns
+    return FALLBACK_LEGACY_CHOOSE
+
+
 def _is_simulator_call(node: ast.Call) -> bool:
     f = node.func
     return (isinstance(f, ast.Name) and f.id == "Simulator") or \
         (isinstance(f, ast.Attribute) and f.attr == "Simulator")
 
 
+def _called_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
 def check(repo: Repo) -> List[Finding]:
     findings: List[Finding] = []
     legacy = set(legacy_kwargs(repo))
+    legacy_choose = set(legacy_choose_fns(repo))
     for sf in repo.files():
         if sf.tree is None or sf.path in EXEMPT:
             continue
         for node in ast.walk(sf.tree):
+            # ---- X3: legacy decision entry points --------------------
+            if isinstance(node, ast.Call) and \
+                    _called_name(node) in legacy_choose:
+                findings.append(Finding(
+                    RULE, sf.path, node.lineno,
+                    f"{_called_name(node)}(...) is a deprecated shim — "
+                    f"build a DeploymentRequest (+ Objective) in "
+                    f"repro.core.specs and call choose(request)"))
             # ---- X1: legacy Simulator kwargs -------------------------
             if isinstance(node, ast.Call) and _is_simulator_call(node):
                 for kw in node.keywords:

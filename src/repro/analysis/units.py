@@ -43,7 +43,7 @@ UNIT_TOKENS = {
     "bytes": "bytes", "byte": "bytes", "gib": "bytes", "gb": "bytes",
     "mb": "bytes", "kib": "bytes",
     "bw": "bw", "bps": "bw", "gbps": "bw",
-    "rate": "rate", "hz": "rate",
+    "rate": "rate", "hz": "rate", "rps": "rate",
     "flops": "flops", "tflops": "flops",
     "params": "count", "w": "power", "watts": "power", "mm2": "area",
 }

@@ -36,10 +36,14 @@ import dataclasses
 import json
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple, Union, \
+    TYPE_CHECKING
 
 from .cluster import INTER_TOPOLOGIES, TOPOLOGY_CODES
 from .placement import Strategy
+from .serving import ServingDecision, decide_serving
+from .specs import DeploymentRequest, Objective
 from .sweep import SweepResult, sweep
 from .workloads import (DEFAULT_NPU_HBM_BYTES, MemoryModel,
                         adapter_n_layers, from_model_config)
@@ -48,6 +52,13 @@ if TYPE_CHECKING:
     from repro.models.config import ModelConfig, ShapeConfig
 
 DEFAULT_FABRICS = ("baseline", "FRED-C", "FRED-D")
+
+# Legacy kwarg-sprawl entry points (ISSUE 10): calls to these names are
+# flagged by analysis/deprecation.py (rule X3) outside this module and
+# core/specs.py — new call sites build a DeploymentRequest (+ Objective)
+# and go through choose(request).  The shim itself stays: it warns and
+# resolves to a bit-identical decision.
+_LEGACY_CHOOSE_FNS = ("choose_strategy",)
 
 # The MoE registry entries the epsweep CI gate pins (both must choose
 # ep > 1) and the expert/sequence axes their decision sweep searches —
@@ -199,7 +210,7 @@ def _pick_by_goodput(workload_fn, feasible: Sequence[SweepResult],
     return best[1], best[2]
 
 
-def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
+def _choose_training(cfg: "ModelConfig", shape: "ShapeConfig", *,
                     n_npus: int = 64,
                     fabrics: Sequence[str] = DEFAULT_FABRICS,
                     max_wafers: int = 2,
@@ -323,6 +334,118 @@ def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig", *,
 
 
 # --------------------------------------------------------------------------
+# unified entry point: choose(DeploymentRequest) + legacy shim
+# --------------------------------------------------------------------------
+
+Decision = Union[AutoStrategyDecision, ServingDecision]
+
+# choose_strategy kwargs that belong to the Objective, not the request
+_OBJECTIVE_KWARGS = ("objective", "mtbf_npu_hours", "mtbf_wafer_hours",
+                     "mission_hours", "restart_s", "goodput_top_k",
+                     "n_failure_states", "failure_seed")
+
+
+def _build_request(cfg: "ModelConfig", shape: Optional["ShapeConfig"],
+                   **kwargs) -> DeploymentRequest:
+    """Fold a legacy ``choose_strategy(**kwargs)`` call form into a
+    :class:`DeploymentRequest` — the objective-family kwargs move onto
+    the :class:`Objective`, everything else maps one-for-one."""
+    obj_kw = {k: kwargs.pop(k) for k in _OBJECTIVE_KWARGS if k in kwargs}
+    kind = obj_kw.pop("objective", "time")
+    objective = kind if isinstance(kind, Objective) else \
+        Objective(kind=kind, **obj_kw)
+    for f in ("fabrics", "inter_topologies", "ep_candidates",
+              "sp_candidates"):
+        if f in kwargs:
+            kwargs[f] = tuple(kwargs[f])
+    return DeploymentRequest(model=cfg, shape=shape, objective=objective,
+                             **kwargs)
+
+
+def choose(request: DeploymentRequest) -> Decision:
+    """The one decision entry point — training and serving alike.
+
+    ``request.objective.kind`` dispatches: ``time``/``goodput`` run the
+    training sweep (an :class:`AutoStrategyDecision`); ``serving`` runs
+    the serving-cell sweep of :mod:`repro.core.serving` (a
+    :class:`~repro.core.serving.ServingDecision`, whose request profile
+    and SLO live on the Objective — ``request.shape`` is ignored).
+    """
+    obj = request.objective
+    if obj.kind == "serving":
+        return decide_serving(
+            request.model, obj, n_npus=request.n_npus,
+            fabrics=request.fabrics, max_wafers=request.max_wafers,
+            inter_topologies=request.inter_topologies,
+            npu_hbm_bytes=request.npu_hbm_bytes,
+            comm_overlap_fraction=request.comm_overlap_fraction)
+    if request.shape is None:
+        raise ValueError(
+            f"objective {obj.kind!r} needs DeploymentRequest.shape "
+            f"(a ShapeConfig — which cell to train)")
+    return _choose_training(
+        request.model, request.shape, n_npus=request.n_npus,
+        fabrics=request.fabrics, max_wafers=request.max_wafers,
+        inter_topologies=request.inter_topologies,
+        max_levels=request.max_levels,
+        npu_hbm_bytes=request.npu_hbm_bytes, master=request.master,
+        moments_dtype=request.moments_dtype, remat=request.remat,
+        min_utilization=request.min_utilization,
+        prune_symmetric=request.prune_symmetric,
+        ep_candidates=request.ep_candidates,
+        sp_candidates=request.sp_candidates,
+        comm_overlap_fraction=request.comm_overlap_fraction,
+        objective=obj.kind, mtbf_npu_hours=obj.mtbf_npu_hours,
+        mtbf_wafer_hours=obj.mtbf_wafer_hours,
+        mission_hours=obj.mission_hours, restart_s=obj.restart_s,
+        goodput_top_k=obj.goodput_top_k,
+        n_failure_states=obj.n_failure_states,
+        failure_seed=obj.failure_seed)
+
+
+def choose_serving_strategy(cfg: "ModelConfig",
+                            objective: Optional[Objective] = None, *,
+                            n_npus: int = 64,
+                            fabrics: Sequence[str] = DEFAULT_FABRICS,
+                            max_wafers: int = 2,
+                            inter_topologies: Sequence[str] =
+                            INTER_TOPOLOGIES,
+                            npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
+                            comm_overlap_fraction: float = 0.0
+                            ) -> ServingDecision:
+    """Elect a serving-cell composition (the ROADMAP's millions-of-users
+    item): sugar for :func:`choose` with a serving
+    :class:`~repro.core.specs.Objective` (default: the pinned
+    :data:`SERVE_OBJECTIVE` — 1M concurrent users, 200 ms p99)."""
+    objective = SERVE_OBJECTIVE if objective is None else objective
+    if objective.kind != "serving":
+        raise ValueError(f"choose_serving_strategy needs a serving "
+                         f"Objective, got kind={objective.kind!r}")
+    return choose(DeploymentRequest(
+        model=cfg, objective=objective, n_npus=n_npus,
+        fabrics=tuple(fabrics), max_wafers=max_wafers,
+        inter_topologies=tuple(inter_topologies),
+        npu_hbm_bytes=npu_hbm_bytes,
+        comm_overlap_fraction=comm_overlap_fraction))
+
+
+def choose_strategy(cfg: "ModelConfig", shape: "ShapeConfig",
+                    **kwargs) -> AutoStrategyDecision:
+    """Deprecated legacy call form — build a :class:`DeploymentRequest`
+    (+ :class:`Objective`) and call :func:`choose` instead.
+
+    The shim resolves to a bit-identical decision (the kwargs map
+    one-for-one onto the request, same defaults), so every pre-redesign
+    golden stays byte-stable; it only adds a :class:`DeprecationWarning`.
+    """
+    warnings.warn(
+        "choose_strategy(**kwargs) is deprecated — build a "
+        "DeploymentRequest (+ Objective) in repro.core.specs and call "
+        "choose(request)", DeprecationWarning, stacklevel=2)
+    return choose(_build_request(cfg, shape, **kwargs))
+
+
+# --------------------------------------------------------------------------
 # decision table (benchmarks.run --only autostrategy / CI artifact)
 # --------------------------------------------------------------------------
 
@@ -351,11 +474,13 @@ def decision_csv_rows(decisions: Sequence[AutoStrategyDecision]) -> List[str]:
 
 def decision_table(archs: Sequence[str], shape_name: str = "train_4k",
                    **kw) -> List[AutoStrategyDecision]:
-    """Run :func:`choose_strategy` for each registry arch on one shape.
+    """Run :func:`choose` for each registry arch on one shape.
 
     The policy's frozen per-arch OptimConfig defaults feed the memory
     model (the same settings ``cell_policy`` would return), so the table
-    is exactly what ``autostrategy=True`` decides."""
+    is exactly what ``autostrategy=True`` decides.  ``**kw`` accepts the
+    legacy kwarg vocabulary (it is folded into a
+    :class:`DeploymentRequest` without the deprecation warning)."""
     from repro.configs.registry import get_config
     from repro.models.config import SHAPES_BY_NAME
     from repro.parallel.policy import paper_defaults
@@ -364,9 +489,9 @@ def decision_table(archs: Sequence[str], shape_name: str = "train_4k",
     for arch in archs:
         cfg = get_config(arch)
         pcfg, ocfg = paper_defaults(cfg, shape)
-        out.append(choose_strategy(
+        out.append(choose(_build_request(
             cfg, shape, master=ocfg.master,
-            moments_dtype=ocfg.moments_dtype, remat=pcfg.remat, **kw))
+            moments_dtype=ocfg.moments_dtype, remat=pcfg.remat, **kw)))
     return out
 
 
@@ -467,6 +592,67 @@ def check_lifetime_goldens(
         got = lifetime_golden(pair)
         if got != want:
             errors.append(f"{key}: decided {got} != golden {want}")
+    for key in sorted(set(goldens) - seen):
+        errors.append(f"{key}: golden has no matching decision (model "
+                      f"removed from the bench list? delete the golden "
+                      f"entry if intended)")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# servesweep (serving-cell decisions + golden gate)
+# --------------------------------------------------------------------------
+
+# The servesweep CI gate: one small / one north-star dense model + one
+# MoE, decided under the pinned production objective — 1M concurrent
+# users on a 60 s think time (16.7k requests/s offered), 1024-token
+# prompts, 256 generated tokens, 200 ms p99 TTFT.  qwen3-32b under this
+# objective IS the ROADMAP's "how many wafers serve 1M concurrent users
+# at a 200 ms p99" question; its total_wafers is pinned in the golden.
+# Shared by benchmarks.run --only servesweep and
+# tests/gen_servesweep_golden.py so the gate and its golden generator
+# can never drift apart.
+SERVESWEEP_ARCHS = ("llama3.2-1b", "qwen3-32b", "mixtral-8x7b")
+SERVE_OBJECTIVE = Objective.serving(
+    target_p99_ms=200.0, concurrent_users=1_000_000, think_time_s=60.0,
+    prompt_tokens=1024, output_tokens=256)
+SERVE_SWEEP_KW = dict(n_npus=64, max_wafers=2)
+
+
+def serving_decision_table(archs: Sequence[str] = SERVESWEEP_ARCHS,
+                           objective: Optional[Objective] = None,
+                           **kw) -> List[ServingDecision]:
+    """Run :func:`choose` with a serving objective for each arch."""
+    from repro.configs.registry import get_config
+    objective = SERVE_OBJECTIVE if objective is None else objective
+    merged = {**SERVE_SWEEP_KW, **kw}
+    return [choose(DeploymentRequest(model=get_config(arch),
+                                     objective=objective, **merged))
+            for arch in archs]
+
+
+def check_serving_goldens(decisions: Sequence[ServingDecision],
+                          golden_path: str) -> List[str]:
+    """Diff serving-cell decisions against the servesweep golden.
+
+    Same contract as :func:`check_goldens`: human-readable mismatch
+    lines (empty = green) plus orphan detection, keyed by arch — a cost-
+    model change that silently moves the pinned wafer count (or flips a
+    placement/fabric election) fails the CI gate."""
+    with open(golden_path) as fh:
+        goldens = json.load(fh)
+    errors = []
+    seen = set()
+    for d in decisions:
+        seen.add(d.arch)
+        want = goldens.get(d.arch)
+        if want is None:
+            errors.append(f"{d.arch}: no golden entry (add it to "
+                          f"{golden_path})")
+            continue
+        got = d.golden()
+        if got != want:
+            errors.append(f"{d.arch}: decided {got} != golden {want}")
     for key in sorted(set(goldens) - seen):
         errors.append(f"{key}: golden has no matching decision (model "
                       f"removed from the bench list? delete the golden "

@@ -1,0 +1,803 @@
+"""Serving-cell cost model: prefill/decode rooflines, continuous batching
+under Poisson arrivals, and the (throughput × p50/p99 × HBM) Pareto.
+
+The north-star question — "how many wafers serve 1M concurrent users of
+qwen3-32b at a 200 ms p99?" — needs a *serving* time model, not the
+training-iteration rank reused since PR 3.  This module builds it from
+parts the repo already trusts:
+
+* **Phase rooflines.**  Prefill is compute-bound (the whole prompt's
+  FLOPs amortize one weight read), decode is HBM-bound (every step
+  re-reads the weights plus the batch's KV).  Each phase time is
+  ``max(compute_s, hbm_s) + exposed collective`` — the exposed-comm term
+  is bit-exactly :func:`repro.launch.roofline.exposed_comm_s`, and the
+  Megatron MP All-Reduce (2/layer) is priced by the *real* fabric via
+  ``Simulator._coll_time`` on the same placement groups the training
+  sweep uses, so FRED-vs-mesh differences rank serving cells too.
+* **KV-cache-aware batching.**  The decode batch is capped by
+  :func:`repro.core.workloads.memory_bytes_per_npu` under a
+  ``training=False`` :class:`MemoryModel` (weights + KV vs the HBM
+  budget) — the exact predicate the training autostrategy trusts.
+* **Continuous batching + queueing.**  A cell is abstracted as ``c``
+  request slots of deterministic occupancy ``D = c / capacity``:
+  Poisson arrivals feed a shared FIFO queue (M/D/c).  The closed form
+  is the classic M/D/c-style approximation — Erlang-C wait probability
+  with the deterministic-service halving of the M/M/c wait, and a
+  self-consistent exponential wait tail — cross-checked by
+  :func:`simulate_traffic`, a seeded discrete-event simulator of the
+  *same* system (the lifetime.py estimate-vs-simulate pattern; the
+  servesweep gate pins <1 % agreement on mean TTFT).  Pooling is
+  modeled up to :data:`SLOT_POOL_CAP` equivalent slots (beyond a few
+  hundred slots extra pooling no longer moves the wait; capacity is
+  preserved exactly by rescaling the occupancy).
+* **Cell composition.**  :func:`serving_candidates` sweeps wafers per
+  cell × fabric × wafer shape × MP degree × decode batch ×
+  placement: ``colocated`` (one shared config continuously batches both
+  phases) vs ``disaggregated`` (each phase elects its own fabric/shape/
+  MP — FRED's reduction-distribution flexibility; ``wafers_prefill=0``
+  means per-phase fabric re-election on every wafer with an HBM KV
+  reshard, ``>0`` means dedicated prefill wafers shipping KV over the
+  inter-wafer links, where the ring / fully-connected / switch topology
+  sets the hop count and per-pair width).  Disaggregated throughput
+  ≥ co-located at equal hardware *by construction*: the per-phase
+  optima are taken over a superset of any shared config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
+
+import numpy as np
+
+from repro.launch.roofline import exposed_comm_s
+from .cluster import TOPOLOGY_CODES
+from .placement import Strategy
+from .simulator import NPU_PEAK_FLOPS
+from .specs import ClusterSpec
+from .sweep import _simulator, fred_shapes, mesh_shapes
+from .workloads import (BYTES, DEFAULT_NPU_HBM_BYTES, MemoryModel,
+                        adapter_n_layers, from_model_config,
+                        memory_bytes_per_npu)
+
+if TYPE_CHECKING:
+    from repro.models.config import ModelConfig
+
+# Per-NPU sustained HBM bandwidth.  Table II gives the NPU's 1000 TFLOPS
+# FP16 peak but no memory figure; 3.2 TB/s is the HBM3-class ratio
+# (~0.3 B/FLOP) production accelerators of that compute class ship with.
+NPU_HBM_BW = 3.2e12                   # bytes/s per NPU
+
+DEFAULT_COMPUTE_EFFICIENCY = 0.45     # matches core/sweep.py's default
+
+# Decode batch sizes searched per replica (powers of two; the HBM
+# feasibility predicate prunes the infeasible tail per config).
+BATCH_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+# Slot-utilization ceiling: capacity quotes stop at 90 % occupancy so the
+# queue keeps a stable operating margin (rho -> 1 waits diverge).
+MAX_SLOT_UTILIZATION = 0.9
+
+# Queue-model pooling cap: a cell's physical slot count c can reach tens
+# of thousands (replicas × batch); beyond a few hundred pooled slots the
+# M/D/c wait is already negligible at any stable utilization, so the
+# abstract queue uses min(c, cap) slots with occupancy rescaled to keep
+# the capacity exact.  Both the closed form and the DES use the same
+# abstraction, so the <1 % agreement gate is meaningful at any scale.
+SLOT_POOL_CAP = 512
+
+_PLACEMENT_CODES = {"colocated": 0, "disaggregated": 1}
+
+
+class InfeasibleServingError(RuntimeError):
+    """No (placement × wafers × fabric × shape × mp × batch) serving cell
+    meets the HBM budget and the latency SLO."""
+
+
+# --------------------------------------------------------------------------
+# request profile + model-derived phase terms
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RequestProfile:
+    """Token counts of one served request (prompt in, tokens out)."""
+    prompt_tokens: int = 1024
+    output_tokens: int = 256
+
+    @property
+    def ctx_tokens(self) -> int:
+        return self.prompt_tokens + self.output_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelTerms:
+    """Architecture quantities the phase rooflines consume, derived from
+    the same :func:`from_model_config` accounting the training sweep
+    uses (prefill FLOPs at the prompt's attention window, decode FLOPs
+    at the full context window — the family's averaged-position
+    convention)."""
+    n_layers: int
+    d_model: int
+    param_bytes_total: float
+    kv_bytes_per_token: float         # all layers, both K and V
+    prefill_flops_per_token: float    # all layers
+    decode_flops_per_token: float     # all layers
+    mp_allreduce_per_layer: int
+
+
+def model_terms(cfg: "ModelConfig", profile: RequestProfile) -> ModelTerms:
+    from repro.models.config import ShapeConfig
+    pf_shape = ShapeConfig("serve_prefill", "prefill",
+                           profile.prompt_tokens, 1)
+    dec_shape = ShapeConfig("serve_decode", "decode",
+                            profile.ctx_tokens, 1)
+    st = Strategy(1, 1, 1)
+    w_pf = from_model_config(cfg, pf_shape, st)
+    w_dec = from_model_config(cfg, dec_shape, st)
+    n_layers = adapter_n_layers(cfg)
+    return ModelTerms(
+        n_layers=n_layers,
+        d_model=cfg.d_model,
+        param_bytes_total=w_dec.params_per_layer * n_layers * BYTES,
+        kv_bytes_per_token=w_dec.kv_bytes_per_sample_layer * n_layers,
+        prefill_flops_per_token=w_pf.flops_fwd_per_sample_layer * n_layers,
+        decode_flops_per_token=w_dec.flops_fwd_per_sample_layer * n_layers,
+        mp_allreduce_per_layer=w_dec.mp_allreduce_per_layer,
+    )
+
+
+def serving_memory_bytes_per_npu(cfg: "ModelConfig", profile: RequestProfile,
+                                 mp: int, batch: int,
+                                 npu_hbm_bytes: float) -> float:
+    """Per-NPU resident bytes for ``batch`` live sequences at full
+    context, via the training sweep's own ``memory_bytes_per_npu`` under
+    a serving (``training=False``) :class:`MemoryModel` — weights + the
+    KV cache of ``batch × ctx`` resident tokens, MP-sharded."""
+    from repro.models.config import ShapeConfig
+    shape = ShapeConfig("serve_resident", "decode", profile.ctx_tokens, 1)
+    w = from_model_config(cfg, shape, Strategy(mp, 1, 1))
+    w = dataclasses.replace(w, samples_per_dp=batch * profile.ctx_tokens,
+                            seq=1)
+    mem = MemoryModel(npu_hbm_bytes=npu_hbm_bytes, training=False)
+    return memory_bytes_per_npu(w, mem)
+
+
+# --------------------------------------------------------------------------
+# phase rooflines (scalar oracle + batched engine, bit-identical)
+# --------------------------------------------------------------------------
+
+def decode_step_terms(flops_per_token_npu: float, weight_bytes_npu: float,
+                      kv_seq_bytes_npu: float, coll_s: float, batch: int,
+                      eff_flops: float,
+                      comm_overlap_fraction: float = 0.0) -> float:
+    """One decode step of a ``batch``-sequence replica (scalar oracle).
+
+    ``max(compute, HBM) + exposed collective`` — the weights are re-read
+    every step, the batch's KV streams once, and the MP All-Reduce is
+    exposed past the overlappable compute share (the PR-8 overlap law,
+    bit-exactly ``launch.roofline.exposed_comm_s``)."""
+    compute_s = batch * flops_per_token_npu / eff_flops
+    hbm_s = (weight_bytes_npu + batch * kv_seq_bytes_npu) / NPU_HBM_BW
+    return max(compute_s, hbm_s) + exposed_comm_s(
+        coll_s, comm_overlap_fraction * compute_s)
+
+
+def decode_step_terms_batch(flops_per_token_npu: float,
+                            weight_bytes_npu: float,
+                            kv_seq_bytes_npu: float,
+                            coll_s: np.ndarray, batches: np.ndarray,
+                            eff_flops: float,
+                            comm_overlap_fraction: float = 0.0
+                            ) -> np.ndarray:
+    """Vectorized :func:`decode_step_terms` over a batch axis —
+    bit-identical to the scalar oracle (same float64 op order; pinned by
+    tests/test_serving.py)."""
+    compute_s = batches * flops_per_token_npu / eff_flops
+    hbm_s = (weight_bytes_npu + batches * kv_seq_bytes_npu) / NPU_HBM_BW
+    return np.maximum(compute_s, hbm_s) + np.maximum(
+        0.0, coll_s - comm_overlap_fraction * compute_s)
+
+
+def prefill_time_s(terms: ModelTerms, profile: RequestProfile, mp: int,
+                   coll_s: float, eff_flops: float,
+                   comm_overlap_fraction: float = 0.0) -> float:
+    """One prompt's prefill on an ``mp``-NPU replica: the prompt's FLOPs
+    against one weight read + the prompt's KV write, plus the exposed MP
+    collective."""
+    compute_s = (profile.prompt_tokens * terms.prefill_flops_per_token /
+                 mp / eff_flops)
+    hbm_s = ((terms.param_bytes_total +
+              profile.prompt_tokens * terms.kv_bytes_per_token) / mp /
+             NPU_HBM_BW)
+    return max(compute_s, hbm_s) + exposed_comm_s(
+        coll_s, comm_overlap_fraction * compute_s)
+
+
+# --------------------------------------------------------------------------
+# M/D/c-style queueing: closed form + seeded discrete-event simulator
+# --------------------------------------------------------------------------
+
+def erlang_c(slots: int, offered: float) -> float:
+    """M/M/c wait probability (Erlang C) via the stable Erlang-B
+    recurrence; ``offered`` = arrival_rate × service (< slots)."""
+    if offered <= 0.0:
+        return 0.0
+    if offered >= slots:
+        return 1.0
+    b = 1.0
+    for k in range(1, slots + 1):
+        b = offered * b / (k + offered * b)
+    return slots * b / (slots - offered * (1.0 - b))
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueStats:
+    """Closed-form M/D/c-style wait statistics at one operating point."""
+    arrival_rate_rps: float
+    slots: int
+    service_s: float
+    utilization: float
+    wait_probability: float
+    mean_wait_s: float
+    p50_wait_s: float
+    p99_wait_s: float
+
+
+def queue_stats(arrival_rate_rps: float, service_s: float,
+                slots: int) -> QueueStats:
+    """M/D/c-style approximation: Erlang-C wait probability, the
+    deterministic-service halving of the M/M/c mean wait (exact
+    Pollaczek–Khinchine at c=1), and the self-consistent exponential
+    tail ``P(W>t) = C·exp(-2(c-a)t/D)`` for quantiles."""
+    offered = arrival_rate_rps * service_s
+    rho = offered / slots
+    if rho >= 1.0:
+        inf = math.inf
+        return QueueStats(arrival_rate_rps, slots, service_s, rho,
+                          1.0, inf, inf, inf)
+    c_wait = erlang_c(slots, offered)
+    theta = 2.0 * (slots - offered) / service_s
+    mean_wait_s = c_wait / theta
+
+    def quantile(p: float) -> float:
+        if c_wait <= 1.0 - p:
+            return 0.0
+        return math.log(c_wait / (1.0 - p)) / theta
+
+    return QueueStats(arrival_rate_rps, slots, service_s, rho, c_wait,
+                      mean_wait_s, quantile(0.5), quantile(0.99))
+
+
+def simulate_traffic(arrival_rate_rps: float, service_s: float, slots: int,
+                     *, base_latency_s: float = 0.0,
+                     n_requests: int = 200_000, seed: int = 0,
+                     warmup: int = 2_000) -> Dict[str, float]:
+    """Seeded discrete-event simulation of the same M/D/c system the
+    closed form approximates: Poisson arrivals, one shared FIFO queue,
+    ``slots`` servers of deterministic occupancy ``service_s``.
+
+    With equal deterministic service and FIFO order, request ``i``
+    starts exactly when request ``i - slots`` departs — an O(1) ring
+    buffer replaces the event heap.  Returns wait/TTFT tallies
+    (``base_latency_s`` is the deterministic prefill + handoff + first
+    decode step added to every request)."""
+    rng = random.Random(seed)
+    dep = [-math.inf] * slots          # departure of the (i-slots)-th job
+    t = 0.0
+    waits: List[float] = []
+    for i in range(n_requests):
+        t += rng.expovariate(arrival_rate_rps)
+        free = dep[i % slots]
+        wait = free - t if free > t else 0.0
+        dep[i % slots] = t + wait + service_s
+        if i >= warmup:
+            waits.append(wait)
+    waits.sort()
+    n = len(waits)
+
+    def quantile(p: float) -> float:
+        return waits[min(n - 1, int(p * n))]
+
+    mean_wait_s = math.fsum(waits) / n
+    return {
+        "n_requests": float(n),
+        "mean_wait_s": mean_wait_s,
+        "p50_wait_s": quantile(0.5),
+        "p99_wait_s": quantile(0.99),
+        "mean_ttft_s": base_latency_s + mean_wait_s,
+        "p50_ttft_s": base_latency_s + quantile(0.5),
+        "p99_ttft_s": base_latency_s + quantile(0.99),
+    }
+
+# --------------------------------------------------------------------------
+# cell candidates: placement × wafers × fabric × shape × mp × batch
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhasePlan:
+    """One phase's per-wafer configuration and its service rate."""
+    fabric: str
+    wafer_shape: Tuple[int, int]
+    mp: int
+    batch: int                        # decode batch per replica (1 = prefill)
+    replicas: int                     # per wafer (n_npus // mp)
+    step_s: float                     # prefill time / decode step time
+    rate_rps: float                   # per-wafer phase service rate
+    memory_bytes_per_npu: float
+
+    def key(self) -> Tuple:
+        return (self.fabric, self.wafer_shape, self.mp)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellCandidate:
+    """One serving-cell composition with its capacity and queue shape.
+
+    ``placement="colocated"``: one shared (fabric, shape, mp, batch)
+    continuously batches both phases — each replica time-shares prefills
+    into the decode stream, so a slot's occupancy is
+    ``batch·T_pf + output·T_step``.  ``placement="disaggregated"``: each
+    phase runs its own optimum; ``wafers_prefill=0`` re-elects the
+    fabric per phase on every wafer (KV stays in HBM, resharded when the
+    phase configs differ), ``>0`` dedicates wafers per phase and ships
+    the prompt's KV over the inter-wafer topology.
+    """
+    placement: str                    # colocated | disaggregated
+    wafers: int
+    wafers_prefill: int               # 0 = per-phase fabric re-election
+    inter_topology: str               # "" unless KV crosses wafers
+    prefill: PhasePlan
+    decode: PhasePlan
+    capacity_rps: float               # sustained request rate (rho -> 1)
+    slots: int                        # physical decode slots (replicas×batch)
+    handoff_s: float                  # KV reshard / inter-wafer transfer
+    base_ttft_s: float                # unloaded TTFT: prefill+handoff+step
+    memory_bytes_per_npu: float
+
+    def queue_shape(self) -> Tuple[int, float]:
+        """(slots, occupancy_s) of the abstract M/D/c queue — pooling
+        capped at SLOT_POOL_CAP with the occupancy rescaled so
+        slots/occupancy equals the physical capacity exactly."""
+        c = min(self.slots, SLOT_POOL_CAP)
+        return c, c / self.capacity_rps
+
+    def ttft_stats(self, arrival_rate_rps: float) -> QueueStats:
+        c, occ = self.queue_shape()
+        return queue_stats(arrival_rate_rps, occ, c)
+
+    def ttft_p99_s(self, arrival_rate_rps: float) -> float:
+        return self.base_ttft_s + self.ttft_stats(arrival_rate_rps).p99_wait_s
+
+
+def _handoff_s(profile: RequestProfile, terms: ModelTerms,
+               prefill: PhasePlan, decode: PhasePlan,
+               wafers: int, wafers_prefill: int,
+               inter_topology: str) -> float:
+    """Per-request KV handoff cost (latency-only: the transfer DMAs
+    overlap other batches' compute, so capacity is unaffected).
+
+    Re-election (wafers_prefill=0): zero when both phases share a
+    config; otherwise the prompt's KV is rewritten into the decode
+    sharding through HBM.  Dedicated wafers: the KV additionally crosses
+    the inter-wafer level once — ring pays worst-case hops, fully
+    connected a 1/(w-1)-width pair link, switch the full budget with two
+    hop latencies (core/cluster.py's level model, first-order)."""
+    kv_prompt_bytes = profile.prompt_tokens * terms.kv_bytes_per_token
+    if wafers_prefill == 0:
+        if prefill.key() == decode.key():
+            return 0.0
+        return 2.0 * kv_prompt_bytes / decode.mp / NPU_HBM_BW
+    spec = ClusterSpec()
+    agg_bw = spec.inter_wafer_links * spec.inter_wafer_bw
+    lat_s = spec.inter_wafer_latency
+    reshard_s = 2.0 * kv_prompt_bytes / decode.mp / NPU_HBM_BW
+    if inter_topology == "ring":
+        hops = max(1, wafers // 2)
+        wire_s = hops * (kv_prompt_bytes / agg_bw) + hops * lat_s
+    elif inter_topology == "fully_connected":
+        wire_s = kv_prompt_bytes * (wafers - 1) / agg_bw + lat_s
+    else:                             # switch: full width, up + down
+        wire_s = kv_prompt_bytes / agg_bw + 2.0 * lat_s
+    return reshard_s + wire_s
+
+
+def _divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def phase_plans(cfg: "ModelConfig", profile: RequestProfile, *,
+                n_npus: int = 64,
+                fabrics: Sequence[str] = ("baseline", "FRED-C", "FRED-D"),
+                npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
+                compute_efficiency: float = DEFAULT_COMPUTE_EFFICIENCY,
+                comm_overlap_fraction: float = 0.0,
+                cache: Optional[dict] = None
+                ) -> Tuple[List[PhasePlan], List[PhasePlan]]:
+    """(prefill_plans, decode_plans) per wafer, HBM-feasible only.
+
+    The MP All-Reduce is priced per (fabric, wafer shape, mp) by the
+    real collective model on the training placements; decode step times
+    run through the batched engine (bit-identical to the scalar
+    oracle).  One collective cache spans the sweep, like core/sweep."""
+    terms = model_terms(cfg, profile)
+    eff_flops = NPU_PEAK_FLOPS * compute_efficiency
+    cache = {} if cache is None else cache
+    pf_plans: List[PhasePlan] = []
+    dec_plans: List[PhasePlan] = []
+    for fabric in fabrics:
+        shapes = (mesh_shapes(n_npus) if fabric == "baseline"
+                  else fred_shapes(n_npus))
+        for shape in shapes:
+            sim = _simulator(fabric, shape, n_npus, cache,
+                             compute_efficiency)
+            for mp in _divisors(n_npus):
+                replicas = n_npus // mp
+                # memory at batch=1 gates even the prefill-only plan
+                mem_1 = serving_memory_bytes_per_npu(
+                    cfg, profile, mp, 1, npu_hbm_bytes)
+                if mem_1 > npu_hbm_bytes:
+                    continue
+                group = None
+                if mp > 1:
+                    groups = sim._groups(Strategy(mp, replicas, 1))
+                    group = (groups["mp"][0], len(groups["mp"]))
+
+                def ar_s(nbytes: float) -> float:
+                    if group is None:
+                        return 0.0
+                    per = sim._coll_time("all_reduce", group[0], nbytes,
+                                         concurrent=group[1])
+                    return per * terms.mp_allreduce_per_layer * terms.n_layers
+
+                pf_step = prefill_time_s(
+                    terms, profile, mp,
+                    ar_s(profile.prompt_tokens * terms.d_model * BYTES),
+                    eff_flops, comm_overlap_fraction)
+                pf_plans.append(PhasePlan(
+                    fabric, shape, mp, 1, replicas, pf_step,
+                    replicas / pf_step, mem_1))
+
+                batches = [b for b in BATCH_CANDIDATES
+                           if serving_memory_bytes_per_npu(
+                               cfg, profile, mp, b, npu_hbm_bytes)
+                           <= npu_hbm_bytes]
+                if not batches:
+                    continue
+                coll = np.array([ar_s(b * terms.d_model * BYTES)
+                                 for b in batches], dtype=np.float64)
+                steps = decode_step_terms_batch(
+                    terms.decode_flops_per_token / mp,
+                    terms.param_bytes_total / mp,
+                    profile.ctx_tokens * terms.kv_bytes_per_token / mp,
+                    coll, np.array(batches, dtype=np.float64),
+                    eff_flops, comm_overlap_fraction)
+                for b, step in zip(batches, steps.tolist()):
+                    dec_plans.append(PhasePlan(
+                        fabric, shape, mp, b, replicas, step,
+                        replicas * b / (profile.output_tokens * step),
+                        serving_memory_bytes_per_npu(
+                            cfg, profile, mp, b, npu_hbm_bytes)))
+    return pf_plans, dec_plans
+
+
+def _plan_key(p: PhasePlan) -> Tuple:
+    """Deterministic preference among equal-rate plans: faster step,
+    smaller footprint, then a total lexical tiebreak."""
+    return (-p.rate_rps, p.step_s, p.memory_bytes_per_npu, p.fabric,
+            p.wafer_shape, p.mp, p.batch)
+
+
+def serving_candidates(cfg: "ModelConfig", profile: RequestProfile, *,
+                       n_npus: int = 64,
+                       fabrics: Sequence[str] = ("baseline", "FRED-C",
+                                                 "FRED-D"),
+                       max_wafers: int = 2,
+                       inter_topologies: Sequence[str] = (
+                           "ring", "fully_connected", "switch"),
+                       npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
+                       compute_efficiency: float = DEFAULT_COMPUTE_EFFICIENCY,
+                       comm_overlap_fraction: float = 0.0
+                       ) -> List[CellCandidate]:
+    """Every serving-cell composition up to ``max_wafers``."""
+    pf_plans, dec_plans = phase_plans(
+        cfg, profile, n_npus=n_npus, fabrics=fabrics,
+        npu_hbm_bytes=npu_hbm_bytes,
+        compute_efficiency=compute_efficiency,
+        comm_overlap_fraction=comm_overlap_fraction)
+    if not pf_plans or not dec_plans:
+        return []
+    terms = model_terms(cfg, profile)
+    pf_by_key = {p.key(): p for p in pf_plans}
+    best_pf = min(pf_plans, key=_plan_key)
+    best_dec = min(dec_plans, key=_plan_key)
+    out: List[CellCandidate] = []
+    for w in range(1, max_wafers + 1):
+        # co-located: the decode config also runs the prefills, so both
+        # phases must share (fabric, shape, mp); a slot's occupancy is
+        # its prefill (serialized with the replica's batch-mates') plus
+        # its decode share.
+        for dec in dec_plans:
+            pf = pf_by_key[dec.key()]
+            occupancy_s = dec.batch * pf.step_s + \
+                profile.output_tokens * dec.step_s
+            slots = w * dec.replicas * dec.batch
+            out.append(CellCandidate(
+                placement="colocated", wafers=w, wafers_prefill=0,
+                inter_topology="", prefill=pf, decode=dec,
+                capacity_rps=slots / occupancy_s, slots=slots,
+                handoff_s=0.0,
+                base_ttft_s=pf.step_s + dec.step_s,
+                memory_bytes_per_npu=dec.memory_bytes_per_npu))
+        # disaggregated, per-phase fabric re-election on every wafer:
+        # capacity = 1 / (1/a + 1/b) per wafer (each request consumes
+        # 1/a of the cell in prefill mode then 1/b in decode mode)
+        hand = _handoff_s(profile, terms, best_pf, best_dec, w, 0, "")
+        cap = w / (1.0 / best_pf.rate_rps + 1.0 / best_dec.rate_rps)
+        slots = w * best_dec.replicas * best_dec.batch
+        out.append(CellCandidate(
+            placement="disaggregated", wafers=w, wafers_prefill=0,
+            inter_topology="", prefill=best_pf, decode=best_dec,
+            capacity_rps=cap, slots=slots, handoff_s=hand,
+            base_ttft_s=best_pf.step_s + hand + best_dec.step_s,
+            memory_bytes_per_npu=max(best_pf.memory_bytes_per_npu,
+                                     best_dec.memory_bytes_per_npu)))
+        # disaggregated, dedicated prefill wafers: steady state is paced
+        # by the slower stage; the prompt's KV crosses the inter level
+        for w_pf in range(1, w):
+            w_dec = w - w_pf
+            cap = min(w_pf * best_pf.rate_rps, w_dec * best_dec.rate_rps)
+            slots = w_dec * best_dec.replicas * best_dec.batch
+            for topo in inter_topologies:
+                hand = _handoff_s(profile, terms, best_pf, best_dec,
+                                  w, w_pf, topo)
+                out.append(CellCandidate(
+                    placement="disaggregated", wafers=w,
+                    wafers_prefill=w_pf, inter_topology=topo,
+                    prefill=best_pf, decode=best_dec,
+                    capacity_rps=cap, slots=slots, handoff_s=hand,
+                    base_ttft_s=best_pf.step_s + hand + best_dec.step_s,
+                    memory_bytes_per_npu=max(
+                        best_pf.memory_bytes_per_npu,
+                        best_dec.memory_bytes_per_npu)))
+    return out
+
+
+def slo_capacity_rps(cand: CellCandidate, target_p99_s: float) -> float:
+    """Largest sustainable arrival rate with p99 TTFT within the SLO
+    (0.0 = the cell can never meet it).  p99(rate) is monotone, so a
+    bisection between 0 and the utilization-capped capacity suffices;
+    the common case (SLO met at the cap) costs one evaluation."""
+    cap = MAX_SLOT_UTILIZATION * cand.capacity_rps
+    if cand.base_ttft_s > target_p99_s:
+        return 0.0
+    if cand.ttft_p99_s(cap) <= target_p99_s:
+        return cap
+    lo, hi = 0.0, cap
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if cand.ttft_p99_s(mid) <= target_p99_s:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+# --------------------------------------------------------------------------
+# Pareto front + decision
+# --------------------------------------------------------------------------
+
+def _dominates(a: Tuple, b: Tuple) -> bool:
+    return a != b and all(x <= y for x, y in zip(a, b))
+
+
+def pareto_indices(points: Sequence[Tuple]) -> List[int]:
+    """Indices of the minimizing Pareto front (incremental, like
+    ``core.sweep.pareto_front`` — O(n·|front|), deterministic order)."""
+    front: List[int] = []
+    for i, p in enumerate(points):
+        if any(_dominates(points[j], p) for j in front):
+            continue
+        front = [j for j in front if not _dominates(p, points[j])]
+        front.append(i)
+    return front
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingDecision:
+    """The elected serving-cell composition for one (model, Objective)."""
+    arch: str
+    prompt_tokens: int
+    output_tokens: int
+    target_p99_ms: float
+    arrival_rate_rps: float           # total offered load across cells
+    placement: str
+    wafers_per_cell: int
+    wafers_prefill: int
+    inter_topology: str
+    prefill_fabric: str
+    prefill_shape: Tuple[int, int]
+    prefill_mp: int
+    decode_fabric: str
+    decode_shape: Tuple[int, int]
+    decode_mp: int
+    decode_batch: int
+    n_cells: int
+    total_wafers: int                 # the north-star answer
+    cell_capacity_rps: float
+    cell_slo_capacity_rps: float
+    ttft_p50_ms: float                # at the per-cell operating rate
+    ttft_p99_ms: float
+    prefill_s: float
+    decode_step_s: float
+    handoff_s: float
+    memory_bytes_per_npu: float
+    npu_hbm_bytes: float
+    slots: int
+    n_candidates: int
+    n_infeasible: int
+    n_dominated: int
+    sweep_seconds: float
+    cell: CellCandidate
+
+    def golden(self) -> Dict:
+        """Stable decision signature for golden diffs (float-laden rate
+        fields stay out; the p99 is pinned at 6 significant digits like
+        the lifetime goldens pin goodput)."""
+        d: Dict = {
+            "placement": self.placement,
+            "wafers_per_cell": self.wafers_per_cell,
+            "inter_topology": self.inter_topology,
+            "n_cells": self.n_cells,
+            "total_wafers": self.total_wafers,
+            "prefill": {"fabric": self.prefill_fabric,
+                        "wafer_shape": list(self.prefill_shape),
+                        "mp": self.prefill_mp},
+            "decode": {"fabric": self.decode_fabric,
+                       "wafer_shape": list(self.decode_shape),
+                       "mp": self.decode_mp,
+                       "batch": self.decode_batch},
+            "ttft_p99_ms": float(f"{self.ttft_p99_ms:.6g}"),
+        }
+        if self.wafers_prefill > 0:
+            d["wafers_prefill"] = self.wafers_prefill
+        return d
+
+
+SERVING_CSV_HEADER = (
+    "arch,placement,wafers_per_cell,wafers_prefill,inter_topology,"
+    "prefill_fabric,prefill_shape_a,prefill_shape_b,prefill_mp,"
+    "decode_fabric,decode_shape_a,decode_shape_b,decode_mp,decode_batch,"
+    "n_cells,total_wafers,cell_capacity_rps,cell_slo_capacity_rps,"
+    "ttft_p50_ms,ttft_p99_ms,prefill_s,decode_step_s,handoff_s,"
+    "memory_bytes_per_npu,npu_hbm_bytes,slots,"
+    "n_candidates,n_infeasible,n_dominated,sweep_s"
+)
+
+
+def serving_csv_rows(decisions: Sequence[ServingDecision]) -> List[str]:
+    rows = [SERVING_CSV_HEADER]
+    for d in decisions:
+        rows.append(",".join(str(v) for v in (
+            d.arch, d.placement, d.wafers_per_cell, d.wafers_prefill,
+            d.inter_topology or "-",
+            d.prefill_fabric, d.prefill_shape[0], d.prefill_shape[1],
+            d.prefill_mp,
+            d.decode_fabric, d.decode_shape[0], d.decode_shape[1],
+            d.decode_mp, d.decode_batch,
+            d.n_cells, d.total_wafers,
+            f"{d.cell_capacity_rps:.6g}", f"{d.cell_slo_capacity_rps:.6g}",
+            f"{d.ttft_p50_ms:.6g}", f"{d.ttft_p99_ms:.6g}",
+            f"{d.prefill_s:.6g}", f"{d.decode_step_s:.6g}",
+            f"{d.handoff_s:.6g}",
+            int(d.memory_bytes_per_npu), int(d.npu_hbm_bytes), d.slots,
+            d.n_candidates, d.n_infeasible, d.n_dominated,
+            f"{d.sweep_seconds:.3f}")))
+    return rows
+
+
+def decide_serving(cfg: "ModelConfig", objective, *,
+                   n_npus: int = 64,
+                   fabrics: Sequence[str] = ("baseline", "FRED-C",
+                                             "FRED-D"),
+                   max_wafers: int = 2,
+                   inter_topologies: Sequence[str] = (
+                       "ring", "fully_connected", "switch"),
+                   npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES,
+                   compute_efficiency: float = DEFAULT_COMPUTE_EFFICIENCY,
+                   comm_overlap_fraction: float = 0.0) -> ServingDecision:
+    """Elect the serving-cell composition for a serving
+    :class:`repro.core.specs.Objective` (duck-typed: ``target_p99_ms``,
+    ``arrival_rate_rps`` / ``concurrent_users`` + ``think_time_s``,
+    ``prompt_tokens``, ``output_tokens``).
+
+    The winner minimizes total wafers for the offered load, then p99
+    TTFT at the per-cell operating rate, then HBM footprint, with a
+    total deterministic tiebreak (placement, wafers, topology, configs).
+    """
+    t0 = time.perf_counter()  # repro: ignore[DETERMINISM] duration metric only
+    profile = RequestProfile(prompt_tokens=objective.prompt_tokens,
+                             output_tokens=objective.output_tokens)
+    lam = float(objective.arrival_rate_rps)
+    if lam <= 0.0 and objective.concurrent_users > 0:
+        lam = objective.concurrent_users / objective.think_time_s
+    if lam <= 0.0:
+        raise ValueError(
+            "serving objective needs arrival_rate_rps > 0 or "
+            "concurrent_users > 0 (with think_time_s)")
+    target_s = objective.target_p99_ms / 1e3
+    cands = serving_candidates(
+        cfg, profile, n_npus=n_npus, fabrics=fabrics,
+        max_wafers=max_wafers, inter_topologies=inter_topologies,
+        npu_hbm_bytes=npu_hbm_bytes, compute_efficiency=compute_efficiency,
+        comm_overlap_fraction=comm_overlap_fraction)
+    feasible: List[Tuple[CellCandidate, float]] = []
+    for cand in cands:
+        cap = slo_capacity_rps(cand, target_s)
+        if cap > 0.0:
+            feasible.append((cand, cap))
+    if not feasible:
+        raise InfeasibleServingError(
+            f"{cfg.name}: no serving cell (≤{max_wafers} wafers of "
+            f"{n_npus} NPUs) meets p99 ≤ {objective.target_p99_ms} ms "
+            f"within {npu_hbm_bytes / 2**30:.0f} GiB HBM")
+    front = pareto_indices([
+        (-cap / cand.wafers,
+         float(f"{cand.base_ttft_s + cand.ttft_stats(cap).p99_wait_s:.12g}"),
+         cand.memory_bytes_per_npu)
+        for cand, cap in feasible])
+    best_key = None
+    best = None
+    for cand, cap in feasible:
+        n_cells = max(1, math.ceil(lam / cap))
+        lam_op = lam / n_cells
+        stats = cand.ttft_stats(lam_op)
+        p99_op = cand.base_ttft_s + stats.p99_wait_s
+        key = (n_cells * cand.wafers, p99_op, cand.memory_bytes_per_npu,
+               _PLACEMENT_CODES[cand.placement], cand.wafers,
+               TOPOLOGY_CODES.get(cand.inter_topology, -1),
+               (cand.prefill.fabric, cand.prefill.wafer_shape,
+                cand.prefill.mp),
+               (cand.decode.fabric, cand.decode.wafer_shape,
+                cand.decode.mp, cand.decode.batch))
+        if best_key is None or key < best_key:
+            best_key = key
+            best = (cand, cap, n_cells, lam_op, stats, p99_op)
+    cand, cap, n_cells, lam_op, stats, p99_op = best
+    return ServingDecision(
+        arch=cfg.name,
+        prompt_tokens=profile.prompt_tokens,
+        output_tokens=profile.output_tokens,
+        target_p99_ms=objective.target_p99_ms,
+        arrival_rate_rps=lam,
+        placement=cand.placement,
+        wafers_per_cell=cand.wafers,
+        wafers_prefill=cand.wafers_prefill,
+        inter_topology=cand.inter_topology,
+        prefill_fabric=cand.prefill.fabric,
+        prefill_shape=cand.prefill.wafer_shape,
+        prefill_mp=cand.prefill.mp,
+        decode_fabric=cand.decode.fabric,
+        decode_shape=cand.decode.wafer_shape,
+        decode_mp=cand.decode.mp,
+        decode_batch=cand.decode.batch,
+        n_cells=n_cells,
+        total_wafers=n_cells * cand.wafers,
+        cell_capacity_rps=cand.capacity_rps,
+        cell_slo_capacity_rps=cap,
+        ttft_p50_ms=(cand.base_ttft_s + stats.p50_wait_s) * 1e3,
+        ttft_p99_ms=p99_op * 1e3,
+        prefill_s=cand.prefill.step_s,
+        decode_step_s=cand.decode.step_s,
+        handoff_s=cand.handoff_s,
+        memory_bytes_per_npu=cand.memory_bytes_per_npu,
+        npu_hbm_bytes=npu_hbm_bytes,
+        slots=cand.slots,
+        n_candidates=len(cands),
+        n_infeasible=len(cands) - len(feasible),
+        n_dominated=len(feasible) - len(front),
+        sweep_seconds=time.perf_counter() - t0,  # repro: ignore[DETERMINISM] never feeds goldens
+        cell=cand,
+    )

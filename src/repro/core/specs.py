@@ -11,14 +11,30 @@ These two frozen dataclasses are the consolidated front door:
 ``ClusterSpec`` describes how wafers stack into racks/pods.  The legacy
 kwargs survive as thin deprecation shims that build a spec (see
 ``Simulator.__post_init__``) and produce bit-identical Breakdowns.
+
+The same consolidation fronts the *decision* layer (ISSUE 10):
+``autostrategy.choose_strategy`` had grown the identical kwarg sprawl
+(``objective=``, ``mtbf_npu_hours=``, ``ep_candidates=``, ...), and
+serving added a third objective family.  :class:`Objective` names *what
+to optimize* (time | goodput | serving, with the family's parameters)
+and :class:`DeploymentRequest` names *what to deploy* (model, hardware
+axes, strategy axes) — ``autostrategy.choose(request)`` is the one entry
+point for training and serving alike, and the legacy
+``choose_strategy(**kwargs)`` call form is a ``DeprecationWarning`` shim
+that builds the equivalent request (bit-identical decisions).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Optional, Tuple, TYPE_CHECKING
 
 from .defects import DefectMask, normalize
+from .workloads import DEFAULT_NPU_HBM_BYTES
+
+if TYPE_CHECKING:
+    from repro.models.config import ModelConfig, ShapeConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,3 +86,106 @@ class ClusterSpec:
 
 DEFAULT_FABRIC_SPEC = FabricSpec()
 DEFAULT_CLUSTER_SPEC = ClusterSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What a deployment optimizes — the typed successor to
+    ``choose_strategy``'s objective kwargs.
+
+    ``kind`` selects the family and which parameter block applies:
+
+    * ``"time"`` — healthy per-iteration time (no parameters).
+    * ``"goodput"`` — MTBF-driven lifetime goodput (PR 9): the mtbf /
+      mission / restart block.
+    * ``"serving"`` — SLO-constrained serving throughput (ISSUE 10): the
+      SLO / traffic / request-profile block.  Offered load is
+      ``arrival_rate_rps`` if positive, else
+      ``concurrent_users / think_time_s``.
+
+    Prefer the :meth:`time` / :meth:`goodput` / :meth:`serving`
+    constructors — they keep the irrelevant blocks at their inert
+    defaults, which is what the bit-identity shims rely on.
+    """
+    kind: str = "time"
+    # -- goodput block ----------------------------------------------------
+    mtbf_npu_hours: float = math.inf
+    mtbf_wafer_hours: float = math.inf
+    mission_hours: float = 720.0
+    restart_s: float = 60.0
+    goodput_top_k: int = 32
+    n_failure_states: int = 3
+    failure_seed: int = 0
+    # -- serving block ----------------------------------------------------
+    target_p99_ms: float = 200.0
+    arrival_rate_rps: float = 0.0
+    concurrent_users: int = 0
+    think_time_s: float = 60.0
+    prompt_tokens: int = 1024
+    output_tokens: int = 256
+
+    def __post_init__(self):
+        if self.kind not in ("time", "goodput", "serving"):
+            raise ValueError(
+                f"Objective.kind must be time|goodput|serving, "
+                f"got {self.kind!r}")
+
+    @classmethod
+    def time(cls) -> "Objective":
+        return cls(kind="time")
+
+    @classmethod
+    def goodput(cls, *, mtbf_npu_hours: float = math.inf,
+                mtbf_wafer_hours: float = math.inf,
+                mission_hours: float = 720.0, restart_s: float = 60.0,
+                goodput_top_k: int = 32, n_failure_states: int = 3,
+                failure_seed: int = 0) -> "Objective":
+        return cls(kind="goodput", mtbf_npu_hours=mtbf_npu_hours,
+                   mtbf_wafer_hours=mtbf_wafer_hours,
+                   mission_hours=mission_hours, restart_s=restart_s,
+                   goodput_top_k=goodput_top_k,
+                   n_failure_states=n_failure_states,
+                   failure_seed=failure_seed)
+
+    @classmethod
+    def serving(cls, *, target_p99_ms: float = 200.0,
+                arrival_rate_rps: float = 0.0, concurrent_users: int = 0,
+                think_time_s: float = 60.0, prompt_tokens: int = 1024,
+                output_tokens: int = 256) -> "Objective":
+        return cls(kind="serving", target_p99_ms=target_p99_ms,
+                   arrival_rate_rps=arrival_rate_rps,
+                   concurrent_users=concurrent_users,
+                   think_time_s=think_time_s, prompt_tokens=prompt_tokens,
+                   output_tokens=output_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentRequest:
+    """What to deploy and over which axes to search — the one argument of
+    ``autostrategy.choose``.
+
+    ``model`` is a registry :class:`~repro.models.config.ModelConfig`;
+    ``shape`` a :class:`~repro.models.config.ShapeConfig` (required for
+    training objectives, ignored by serving, whose request profile lives
+    on the :class:`Objective`).  The remaining fields mirror the legacy
+    ``choose_strategy`` kwargs one-for-one, same defaults — a shim-built
+    request decides bit-identically.
+    """
+    model: "ModelConfig"
+    shape: Optional["ShapeConfig"] = None
+    objective: Objective = Objective()
+    n_npus: int = 64
+    fabrics: Tuple[str, ...] = ("baseline", "FRED-C", "FRED-D")
+    max_wafers: int = 2
+    inter_topologies: Tuple[str, ...] = ("ring", "fully_connected",
+                                         "switch")
+    max_levels: int = 1
+    npu_hbm_bytes: float = DEFAULT_NPU_HBM_BYTES
+    master: bool = True
+    moments_dtype: str = "float32"
+    remat: str = "full"
+    min_utilization: float = 0.9
+    prune_symmetric: bool = True
+    ep_candidates: Tuple[int, ...] = (1,)
+    sp_candidates: Tuple[int, ...] = (1,)
+    comm_overlap_fraction: float = 0.0

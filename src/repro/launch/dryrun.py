@@ -72,12 +72,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     auto_rec = None
     decision = None
     if autostrategy:
-        from repro.core.autostrategy import choose_strategy
+        from repro.core.autostrategy import choose
+        from repro.core.specs import DeploymentRequest
         from repro.parallel.policy import paper_defaults
         pcfg0, ocfg0 = paper_defaults(cfg, shape)
-        decision = choose_strategy(cfg, shape, master=ocfg0.master,
-                                   moments_dtype=ocfg0.moments_dtype,
-                                   remat=pcfg0.remat)
+        decision = choose(DeploymentRequest(
+            model=cfg, shape=shape, master=ocfg0.master,
+            moments_dtype=ocfg0.moments_dtype, remat=pcfg0.remat))
         d = decision
         auto_rec = {
             "chosen": {"mp": d.mp, "dp": d.dp, "pp": d.pp,
@@ -248,6 +249,82 @@ def ep_compare(arch: str = "mixtral-8x7b", n_devices: int = 8,
     }
 
 
+def serving_compare(arch: str = "llama3.2-1b", *, prompt_tokens: int = 16,
+                    output_tokens: int = 24, batch: int = 4,
+                    d_model: int = 128, num_layers: int = 4,
+                    vocab_size: int = 512) -> dict:
+    """Measure real per-token decode latency against the analytical
+    serving model (the PR-3 "rank-only serving" fix, measurement side).
+
+    Runs the batched :class:`repro.serve.engine.Engine` on a reduced copy
+    of ``arch`` (host CPU — absolute times are not comparable to wafer
+    NPUs, so the record keeps both columns side by side rather than
+    asserting a ratio) and records the measured decode-step latency
+    distribution next to the analytical prefill/decode/p50/p99 the
+    serving objective would quote for the *full* arch on wafer hardware.
+    """
+    import jax
+    from repro.configs.registry import get_config
+    from repro.core.autostrategy import SERVE_OBJECTIVE, \
+        choose_serving_strategy
+    from repro.core.specs import Objective
+    from repro.models import transformer as tfm
+    from repro.models.modules import split
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    base = get_config(arch)
+    objective = Objective.serving(
+        target_p99_ms=SERVE_OBJECTIVE.target_p99_ms,
+        concurrent_users=SERVE_OBJECTIVE.concurrent_users,
+        think_time_s=SERVE_OBJECTIVE.think_time_s,
+        prompt_tokens=prompt_tokens, output_tokens=output_tokens)
+    decision = choose_serving_strategy(base, objective)
+
+    cfg = base.reduced(d_model=d_model, num_layers=num_layers,
+                       vocab_size=vocab_size)
+    params, _ = split(tfm.init(jax.random.PRNGKey(0), cfg))
+    ecfg = EngineConfig(max_batch=batch,
+                        cache_len=prompt_tokens + output_tokens,
+                        target_p99_ms=objective.target_p99_ms,
+                        arrival_rate_rps=(objective.concurrent_users /
+                                          objective.think_time_s))
+    engine = Engine(params, cfg, ecfg=ecfg)
+    reqs = [Request(uid=i, prompt=list(range(1, prompt_tokens + 1)),
+                    max_new_tokens=output_tokens) for i in range(batch)]
+    engine.run_batch(reqs)
+    steps = engine.decode_step_s[1:]       # drop the jit-compile step
+    steps_sorted = sorted(steps)
+
+    def _q(p):
+        return steps_sorted[min(len(steps_sorted) - 1,
+                                int(p * len(steps_sorted)))]
+
+    return {
+        "arch": arch, "status": "ok",
+        "reduced": {"d_model": d_model, "num_layers": num_layers,
+                    "vocab_size": vocab_size, "batch": batch,
+                    "prompt_tokens": prompt_tokens,
+                    "output_tokens": output_tokens},
+        "measured": {
+            "backend": jax.default_backend(),
+            "n_decode_steps": len(steps),
+            "decode_step_mean_s": sum(steps) / len(steps),
+            "decode_step_p50_s": _q(0.50),
+            "decode_step_p99_s": _q(0.99),
+        },
+        "analytical": {
+            "placement": decision.placement,
+            "wafers_per_cell": decision.wafers_per_cell,
+            "total_wafers": decision.total_wafers,
+            "prefill_s": decision.prefill_s,
+            "decode_step_s": decision.decode_step_s,
+            "ttft_p50_ms": decision.ttft_p50_ms,
+            "ttft_p99_ms": decision.ttft_p99_ms,
+            "target_p99_ms": decision.target_p99_ms,
+        },
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", type=str, default=None)
@@ -260,6 +337,12 @@ def main(argv=None):
                     help="let the FRED simulator sweep pick (mp, dp, pp, "
                          "wafers) per cell; records the decision + "
                          "dominated/infeasible counts in the artifact")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the batched serving engine on a reduced "
+                         "llama3.2-1b and record measured per-token decode "
+                         "latency next to the analytical serving-cell "
+                         "p50/p99; writes <out>/serving_compare.json and "
+                         "exits")
     ap.add_argument("--ep-compare", action="store_true",
                     help="compile the shard_map expert-parallel All-to-All "
                          "on a reduced MoE arch and diff the measured HLO "
@@ -267,6 +350,22 @@ def main(argv=None):
                          "<out>/ep_compare.json and exits")
     ap.add_argument("--out", type=str, default="artifacts/dryrun")
     args = ap.parse_args(argv)
+
+    if args.serving:
+        outdir = Path(args.out)
+        outdir.mkdir(parents=True, exist_ok=True)
+        rec = serving_compare(args.arch or "llama3.2-1b")
+        (outdir / "serving_compare.json").write_text(
+            json.dumps(rec, indent=2, default=str))
+        m, a = rec["measured"], rec["analytical"]
+        print(f"[dryrun] serving {rec['arch']}: measured decode "
+              f"p50={m['decode_step_p50_s'] * 1e3:.2f}ms "
+              f"p99={m['decode_step_p99_s'] * 1e3:.2f}ms "
+              f"({m['backend']}, reduced) | analytical cell "
+              f"step={a['decode_step_s'] * 1e3:.3f}ms "
+              f"ttft_p99={a['ttft_p99_ms']:.2f}ms "
+              f"({a['placement']}, {a['total_wafers']} wafers)", flush=True)
+        return 0
 
     if args.ep_compare:
         outdir = Path(args.out)

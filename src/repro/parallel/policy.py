@@ -11,7 +11,7 @@ Two modes:
   hand-set optimizer memory modes, remat, and attention chunking, exactly
   as recorded by the dry-runs (pinned in tests/test_autostrategy.py).
 * ``autostrategy=True`` — sweep-driven: the analytical FRED simulator
-  (``core.sweep`` via ``core.autostrategy.choose_strategy``) picks the
+  (``core.sweep`` via ``core.autostrategy.choose``) picks the
   memory-feasible Pareto-optimal (mp, dp, pp, wafers) — and, for
   cross-wafer DP, the inter-wafer topology (ring / fully_connected /
   switch, ``core.cluster``) — for the cell under the frozen defaults'
@@ -69,9 +69,10 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
                 decision=None) -> Tuple[ParallelConfig, OptimConfig]:
     """Policy for one (arch × shape × mesh) cell.
 
-    ``autostrategy=True`` runs the simulator sweep (``sweep_kw`` forwards
-    to :func:`repro.core.autostrategy.choose_strategy`: n_npus, fabrics,
-    max_wafers, npu_hbm_bytes, ...) and stamps the chosen strategy on the
+    ``autostrategy=True`` runs the simulator sweep (``sweep_kw`` holds
+    the :class:`~repro.core.specs.DeploymentRequest` axes: n_npus,
+    fabrics, max_wafers, npu_hbm_bytes, ...) and stamps the chosen
+    strategy on the
     returned ``ParallelConfig``; the frozen defaults are returned
     unchanged when ``False``.  A precomputed
     :class:`~repro.core.autostrategy.AutoStrategyDecision` can be passed
@@ -81,10 +82,10 @@ def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh,
         return pcfg, ocfg
 
     if decision is None:
-        from repro.core.autostrategy import choose_strategy
-        decision = choose_strategy(
+        from repro.core.autostrategy import _build_request, choose
+        decision = choose(_build_request(
             cfg, shape, master=ocfg.master, moments_dtype=ocfg.moments_dtype,
-            remat=pcfg.remat, **(sweep_kw or {}))
+            remat=pcfg.remat, **(sweep_kw or {})))
     st = decision.strategy
     pcfg = pcfg.replace(auto_strategy=StrategyDecision(
         mp=st.mp, dp=st.dp, pp=st.pp, wafers=st.wafers,

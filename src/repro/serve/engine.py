@@ -38,6 +38,12 @@ class Request:
 class EngineConfig:
     max_batch: int = 8
     cache_len: int = 512
+    # Serving SLO / traffic parameters (ISSUE 10): consumed by the
+    # analytical serving cost model (core/serving via a serving
+    # Objective) and recorded by `launch.dryrun --serving` next to the
+    # measured per-token decode latency.  None = no SLO attached.
+    target_p99_ms: Optional[float] = None
+    arrival_rate_rps: Optional[float] = None
 
 
 class Engine:
@@ -53,6 +59,9 @@ class Engine:
                                      self.ecfg.cache_len))
         self._decode = jax.jit(
             lambda p, t, s: tfm.decode_step(p, t, s, cfg, self.pcfg))
+        # per-decode-step wall times of the most recent run_batch (first
+        # entry includes the decode jit compile; dryrun --serving drops it)
+        self.decode_step_s: List[float] = []
 
     def _sample(self, logits: jnp.ndarray, reqs: List[Request],
                 key) -> np.ndarray:
@@ -79,6 +88,7 @@ class Engine:
         if len(requests) > self.ecfg.max_batch:
             raise ValueError("admit at most max_batch requests")
         t0 = time.perf_counter()
+        self.decode_step_s = []
         key = jax.random.PRNGKey(seed)
         B = len(requests)
         plen = max(len(r.prompt) for r in requests)
@@ -101,8 +111,11 @@ class Engine:
                         done[i] = True
             if done.all():
                 break
+            ts = time.perf_counter()
             logits, state = self._decode(
                 self.params, jnp.asarray(next_tok)[:, None], state)
+            logits.block_until_ready()
+            self.decode_step_s.append(time.perf_counter() - ts)
             key = jax.random.fold_in(key, step)
             next_tok = self._sample(logits, requests, key)
 

@@ -1,0 +1,83 @@
+"""Regenerate tests/goldens/servesweep.json — the pinned serving-cell
+decisions (``repro.core.autostrategy.SERVESWEEP_ARCHS`` under the
+production ``SERVE_OBJECTIVE``: 1M concurrent users / 60 s think time /
+200 ms p99 TTFT).  Run after an *intentional* cost-model change:
+
+    PYTHONPATH=src python -m tests.gen_servesweep_golden
+
+``--check`` regenerates in memory only and exits non-zero if the fresh
+decisions differ from the committed file — the nightly golden-drift gate
+(catches env-dependent float drift before it surfaces as a confusing PR
+failure), mirroring tests/gen_lifetime_golden.py.
+
+The generator refuses to write a vacuous golden: qwen3-32b (the
+ROADMAP's north-star "how many wafers serve 1M concurrent users at a
+200 ms p99" question) must be present with a multi-wafer answer, and
+the serving model must be exercising real queueing (every pinned p99
+must be positive and within the SLO).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GOLDEN = Path(__file__).parent / "goldens" / "servesweep.json"
+
+
+def fresh_goldens() -> dict:
+    from repro.core.autostrategy import (SERVE_OBJECTIVE,
+                                         serving_decision_table)
+    decisions = serving_decision_table()
+    out = {d.arch: d.golden() for d in decisions}
+    star = out.get("qwen3-32b")
+    if star is None or star["total_wafers"] < 2:
+        sys.exit(f"refusing to write {GOLDEN}: qwen3-32b is missing or "
+                 f"answers the 1M-user question with <2 wafers — the "
+                 f"servesweep gate would not pin the north-star answer "
+                 f"(fix core/serving.py first)")
+    slo = SERVE_OBJECTIVE.target_p99_ms
+    bad = [a for a, v in out.items()
+           if not 0.0 < v["ttft_p99_ms"] <= slo]
+    if bad:
+        sys.exit(f"refusing to write {GOLDEN}: {', '.join(bad)} pin a "
+                 f"p99 outside (0, {slo}] ms — the decided operating "
+                 f"points no longer meet the SLO they were elected "
+                 f"under (fix core/serving.py first)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff the regenerated decisions against the "
+                         "committed golden instead of overwriting it; "
+                         "exit 1 on drift")
+    args = ap.parse_args()
+    got = fresh_goldens()
+    if args.check:
+        want = json.loads(GOLDEN.read_text())
+        if got != want:
+            diffs = [k for k in sorted(set(got) | set(want))
+                     if got.get(k) != want.get(k)]
+            print(f"golden drift: regenerated serving decisions differ "
+                  f"from {GOLDEN} ({', '.join(diffs)}).\n"
+                  f"If a cost-model change is intended, regenerate with "
+                  f"`python -m tests.gen_servesweep_golden`; otherwise "
+                  f"the environment introduced float drift.",
+                  file=sys.stderr)
+            print(json.dumps(got, indent=1, sort_keys=True),
+                  file=sys.stderr)
+            return 1
+        print(f"golden check OK: {len(got)} serving decisions identical "
+              f"to {GOLDEN}")
+        return 0
+    GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+    star = got["qwen3-32b"]
+    print(f"wrote {GOLDEN} ({len(got)} decisions; qwen3-32b 1M-user "
+          f"answer: {star['total_wafers']} wafers, {star['placement']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

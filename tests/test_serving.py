@@ -1,0 +1,314 @@
+"""Serving cost model tests (ISSUE 10 tentpole): phase rooflines, the
+M/D/c queueing closed form vs the seeded traffic simulator, serving-cell
+candidate enumeration, the unified choose(DeploymentRequest) API, and
+the legacy choose_strategy shim's bit-identity.
+
+JAX-free — runs in the core CI lane.  The structural pins:
+
+  * the closed-form queueing stats agree with the discrete-event
+    simulator to <1 % on mean TTFT (the lifetime.py
+    estimate-vs-simulate contract), and exactly recover the
+    Pollaczek–Khinchine M/D/1 mean wait at c=1;
+  * disaggregated serving never loses raw capacity to co-located at
+    equal hardware (per-phase optima over a superset, by construction);
+  * the batched decode-step engine is bit-identical to the scalar
+    oracle;
+  * the legacy ``choose_strategy(**kwargs)`` shim warns and resolves to
+    a decision bit-identical to ``choose(DeploymentRequest(...))``.
+"""
+
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.autostrategy import (SERVESWEEP_ARCHS, SERVE_OBJECTIVE,
+                                     SERVE_SWEEP_KW, check_serving_goldens,
+                                     choose, choose_serving_strategy,
+                                     choose_strategy,
+                                     serving_decision_table)
+from repro.core.serving import (BATCH_CANDIDATES, CellCandidate,
+                                InfeasibleServingError, ModelTerms,
+                                NPU_HBM_BW, RequestProfile, SLOT_POOL_CAP,
+                                decide_serving, decode_step_terms,
+                                decode_step_terms_batch, erlang_c,
+                                model_terms, pareto_indices,
+                                prefill_time_s, queue_stats,
+                                serving_candidates,
+                                serving_memory_bytes_per_npu,
+                                simulate_traffic, slo_capacity_rps)
+from repro.core.specs import DeploymentRequest, Objective
+from repro.core.workloads import DEFAULT_NPU_HBM_BYTES
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+GOLDEN_PATH = "tests/goldens/servesweep.json"
+
+
+def _cfg(arch="qwen3-32b"):
+    from repro.configs.registry import get_config
+    return get_config(arch)
+
+
+# --------------------------------------------------------------------------
+# phase rooflines
+# --------------------------------------------------------------------------
+
+def test_model_terms_qwen():
+    terms = model_terms(_cfg(), RequestProfile(1024, 256))
+    # 32B-class param count at 2 bytes each
+    assert 25e9 < terms.param_bytes_total / 2 < 40e9
+    # GQA KV: 2 · d_kv · 2 bytes · 64 layers = 2·1024·2·64
+    assert terms.kv_bytes_per_token == 2 * 1024 * 2 * 64
+    assert terms.n_layers == 64 and terms.mp_allreduce_per_layer == 2
+
+
+def test_decode_step_hbm_bound():
+    # tiny compute, huge weights: the step must sit on the HBM roofline
+    step = decode_step_terms(1e3, 1e9, 1e5, 0.0, 8, 1e15)
+    assert step == pytest.approx((1e9 + 8 * 1e5) / NPU_HBM_BW)
+
+
+def test_prefill_compute_bound():
+    terms = model_terms(_cfg(), RequestProfile(1024, 256))
+    eff = 1000e12 * 0.45
+    t = prefill_time_s(terms, RequestProfile(1024, 256), 16, 0.0, eff)
+    compute = 1024 * terms.prefill_flops_per_token / 16 / eff
+    assert t == pytest.approx(compute)   # prompt FLOPs dominate one read
+
+
+def test_decode_batch_matches_scalar_bitwise():
+    terms = model_terms(_cfg(), RequestProfile(1024, 256))
+    eff = 1000e12 * 0.45
+    batches = np.array(BATCH_CANDIDATES, dtype=np.float64)
+    coll = np.linspace(1e-5, 3e-4, len(batches))
+    got = decode_step_terms_batch(
+        terms.decode_flops_per_token / 16, terms.param_bytes_total / 16,
+        1280 * terms.kv_bytes_per_token / 16, coll, batches, eff, 0.3)
+    for i, b in enumerate(BATCH_CANDIDATES):
+        want = decode_step_terms(
+            terms.decode_flops_per_token / 16,
+            terms.param_bytes_total / 16,
+            1280 * terms.kv_bytes_per_token / 16, float(coll[i]), b,
+            eff, 0.3)
+        assert got[i] == want            # bitwise, not approx
+
+
+def test_serving_memory_monotone_in_batch():
+    mems = [serving_memory_bytes_per_npu(_cfg(), RequestProfile(1024, 256),
+                                         16, b, DEFAULT_NPU_HBM_BYTES)
+            for b in (1, 8, 64)]
+    assert mems[0] < mems[1] < mems[2]
+
+
+# --------------------------------------------------------------------------
+# queueing: closed form vs discrete-event simulation
+# --------------------------------------------------------------------------
+
+def test_erlang_c_bounds():
+    assert erlang_c(4, 0.0) == 0.0
+    assert erlang_c(4, 4.0) == 1.0
+    assert 0.0 < erlang_c(4, 2.0) < 1.0
+
+
+def test_queue_stats_md1_pollaczek_khinchine():
+    # at c=1 the approximation is exact M/D/1: W = rho·D / (2(1−rho))
+    lam, D = 0.6, 1.0
+    stats = queue_stats(lam, D, 1)
+    rho = lam * D
+    assert stats.mean_wait_s == pytest.approx(rho * D / (2 * (1 - rho)))
+
+
+def test_queue_stats_unstable():
+    stats = queue_stats(2.0, 1.0, 1)
+    assert math.isinf(stats.mean_wait_s)
+    assert math.isinf(stats.p99_wait_s)
+
+
+@pytest.mark.parametrize("slots,util", [(1, 0.6), (1, 0.75), (64, 0.8),
+                                        (SLOT_POOL_CAP, 0.9)])
+def test_estimate_vs_simulate_under_1pct(slots, util):
+    """The <1 % contract at the regimes decisions operate in: c=1 (the
+    closed form is exact Pollaczek–Khinchine) and pooled-slot cells
+    (where the Erlang-C wait is a small correction on the base TTFT —
+    exactly how every servesweep decision lands)."""
+    service_s = 0.5
+    lam = util * slots / service_s
+    base = 0.05
+    est = base + queue_stats(lam, service_s, slots).mean_wait_s
+    sim = simulate_traffic(lam, service_s, slots, base_latency_s=base,
+                           seed=0)
+    assert abs(est - sim["mean_ttft_s"]) / sim["mean_ttft_s"] < 0.01
+
+
+def test_simulate_traffic_seeded_deterministic():
+    a = simulate_traffic(10.0, 0.5, 8, seed=7, n_requests=20_000)
+    b = simulate_traffic(10.0, 0.5, 8, seed=7, n_requests=20_000)
+    assert a == b
+    c = simulate_traffic(10.0, 0.5, 8, seed=8, n_requests=20_000)
+    assert a != c
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(util=st.floats(0.05, 0.95), slots=st.integers(1, 256),
+           service_ms=st.floats(1.0, 5000.0))
+    @settings(deadline=None)
+    def test_wait_monotone_in_arrival_rate(util, slots, service_ms):
+        """p99 TTFT is monotone non-decreasing in the arrival rate —
+        the property the SLO-capacity bisection relies on."""
+        service_s = service_ms / 1e3
+        hi = util * slots / service_s
+        lo = 0.5 * hi
+        s_lo, s_hi = (queue_stats(r, service_s, slots) for r in (lo, hi))
+        assert s_lo.mean_wait_s <= s_hi.mean_wait_s + 1e-12
+        assert s_lo.p99_wait_s <= s_hi.p99_wait_s + 1e-12
+
+    @given(lam=st.floats(0.1, 50.0), slots=st.integers(1, 64),
+           service_s=st.floats(0.01, 2.0))
+    @settings(deadline=None)
+    def test_queue_stats_quantiles_ordered(lam, slots, service_s):
+        stats = queue_stats(lam, service_s, slots)
+        if math.isfinite(stats.mean_wait_s):
+            assert 0.0 <= stats.p50_wait_s <= stats.p99_wait_s
+
+
+# --------------------------------------------------------------------------
+# cell candidates + decisions
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen_candidates():
+    profile = RequestProfile(prompt_tokens=SERVE_OBJECTIVE.prompt_tokens,
+                             output_tokens=SERVE_OBJECTIVE.output_tokens)
+    return serving_candidates(_cfg(), profile, **SERVE_SWEEP_KW)
+
+
+def test_candidates_memory_feasible(qwen_candidates):
+    assert qwen_candidates
+    for c in qwen_candidates:
+        assert c.memory_bytes_per_npu <= DEFAULT_NPU_HBM_BYTES
+        assert c.capacity_rps > 0.0 and c.slots > 0
+
+
+def test_disaggregated_never_below_colocated(qwen_candidates):
+    """The satellite property: disaggregated ≥ co-located raw capacity
+    at equal hardware, for every wafer count — never violated."""
+    for w in range(1, SERVE_SWEEP_KW["max_wafers"] + 1):
+        coloc = max(c.capacity_rps for c in qwen_candidates
+                    if c.placement == "colocated" and c.wafers == w)
+        disagg = max(c.capacity_rps for c in qwen_candidates
+                     if c.placement == "disaggregated" and c.wafers == w)
+        assert disagg >= coloc
+
+
+def test_slo_capacity_within_slo(qwen_candidates):
+    target_s = 0.2
+    checked = 0
+    for c in qwen_candidates[:40]:
+        cap = slo_capacity_rps(c, target_s)
+        if cap > 0.0:
+            assert c.ttft_p99_s(cap) <= target_s * (1 + 1e-9)
+            checked += 1
+    assert checked
+
+
+def test_pareto_indices_basic():
+    pts = [(1.0, 1.0), (2.0, 2.0), (0.5, 3.0), (1.0, 1.0)]
+    front = pareto_indices(pts)
+    assert 1 not in front                 # dominated by (1,1)
+    assert 0 in front and 2 in front and 3 in front  # ties both kept
+
+
+def test_decide_serving_qwen_north_star():
+    """The ROADMAP question: wafers for 1M concurrent qwen3-32b users at
+    a 200 ms p99 — pinned against the servesweep golden."""
+    d = decide_serving(_cfg(), SERVE_OBJECTIVE, **SERVE_SWEEP_KW)
+    golden = json.load(open(GOLDEN_PATH))["qwen3-32b"]
+    assert d.golden() == golden
+    assert d.total_wafers == golden["total_wafers"]
+    assert d.ttft_p99_ms <= SERVE_OBJECTIVE.target_p99_ms
+    assert d.arrival_rate_rps == pytest.approx(1_000_000 / 60.0)
+
+
+def test_decide_serving_infeasible_slo():
+    with pytest.raises(InfeasibleServingError):
+        decide_serving(_cfg(), Objective.serving(
+            target_p99_ms=1e-3, arrival_rate_rps=10.0), **SERVE_SWEEP_KW)
+
+
+def test_decide_serving_needs_traffic():
+    with pytest.raises(ValueError):
+        decide_serving(_cfg(), Objective.serving(target_p99_ms=200.0),
+                       **SERVE_SWEEP_KW)
+
+
+def test_serving_table_matches_golden():
+    decisions = serving_decision_table()
+    assert [d.arch for d in decisions] == list(SERVESWEEP_ARCHS)
+    assert check_serving_goldens(decisions, GOLDEN_PATH) == []
+
+
+# --------------------------------------------------------------------------
+# unified API + legacy shim bit-identity
+# --------------------------------------------------------------------------
+
+def test_objective_kind_validated():
+    with pytest.raises(ValueError):
+        Objective(kind="latency")
+
+
+def test_choose_requires_shape_for_training():
+    with pytest.raises(ValueError):
+        choose(DeploymentRequest(model=_cfg("llama3.2-1b")))
+
+
+def test_choose_serving_dispatch():
+    d = choose(DeploymentRequest(model=_cfg(), objective=SERVE_OBJECTIVE,
+                                 **SERVE_SWEEP_KW))
+    assert d.golden() == json.load(open(GOLDEN_PATH))["qwen3-32b"]
+    assert choose_serving_strategy(_cfg()).golden() == d.golden()
+
+
+def test_choose_serving_strategy_rejects_training_objective():
+    with pytest.raises(ValueError):
+        choose_serving_strategy(_cfg(), Objective.time())
+
+
+def test_legacy_shim_warns_and_is_bit_identical():
+    from repro.models.config import SHAPES_BY_NAME
+    cfg = _cfg("llama3.2-1b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = choose_strategy(cfg, shape, n_npus=20, max_wafers=1)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    new = choose(DeploymentRequest(model=cfg, shape=shape, n_npus=20,
+                                   max_wafers=1))
+    # bit-identical decision, not just the same golden signature
+    assert old.strategy == new.strategy
+    assert old.time_per_sample_s == new.time_per_sample_s
+    assert old.memory_bytes_per_npu == new.memory_bytes_per_npu
+    assert old.golden() == new.golden()
+
+
+def test_legacy_shim_goodput_objective_kwargs():
+    from repro.models.config import SHAPES_BY_NAME
+    cfg = _cfg("llama3.2-1b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = choose_strategy(cfg, shape, n_npus=20, max_wafers=1,
+                              objective="goodput", mtbf_npu_hours=2000.0)
+    new = choose(DeploymentRequest(
+        model=cfg, shape=shape, n_npus=20, max_wafers=1,
+        objective=Objective.goodput(mtbf_npu_hours=2000.0)))
+    assert old.strategy == new.strategy
+    assert old.goodput_samples_per_s == new.goodput_samples_per_s
+    assert old.golden() == new.golden()
